@@ -1,0 +1,71 @@
+"""Late-binding cost (paper Fig. 4): cold bind vs warm rebind vs
+full re-provision.
+
+The paper's core claim is that swapping the payload image on an
+already-held resource is cheap and unprivileged.  We quantify the three
+options a scheduler has when the next task needs a different image:
+
+  cold_bind      — pod patch + image pull (XLA compile) on a held slice
+  warm_rebind    — pod patch with the image already in the node cache
+  re-provision   — release the slice, acquire a new one, start a pilot,
+                   then cold-bind (what option (b) in paper §2 forces)
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.arena import SharedArena
+from repro.core.cluster import ClusterSim
+from repro.core.images import ExecutableRegistry, PayloadImage
+from repro.core.latebind import PayloadExecutor, PodPatchCapability
+from repro.core.pilot import PilotConfig
+from repro.core.proctable import ProcessTable
+
+IMAGES = [PayloadImage("smollm-360m", "smoke", "decode"),
+          PayloadImage("gemma-2b", "smoke", "decode"),
+          PayloadImage("mamba2-370m", "smoke", "decode")]
+
+
+def run() -> list[tuple[str, float, str]]:
+    out = []
+    reg = ExecutableRegistry()
+    arena = SharedArena()
+    ex = PayloadExecutor("pod-bench", arena, ProcessTable(), reg)
+    cap = PodPatchCapability("pod-bench")
+
+    import jax
+
+    def bind_to_first_step(img):
+        """patch + one executed step: jax jit is lazy, so the XLA compile
+        (the 'image pull') lands on the first invocation."""
+        t0 = time.monotonic()
+        exe = ex.patch_image(cap, img)
+        params, state = exe.make_inputs(jax.random.key(0))
+        logits, _ = exe.fn(params, state)
+        jax.block_until_ready(logits)
+        return time.monotonic() - t0
+
+    colds = [bind_to_first_step(img) for img in IMAGES]
+    warms = [bind_to_first_step(img) for img in IMAGES]
+    arena.destroy()
+
+    # full re-provision path: new pilot on a new slice running one payload
+    sim = ClusterSim(registry=ExecutableRegistry())      # cold registry
+    tid = sim.repo.submit(IMAGES[0], n_steps=1)
+    t0 = time.monotonic()
+    (s,) = sim.provision(1)
+    sim.spawn_pilot(s, PilotConfig(max_payloads=1, idle_grace=0.5))
+    sim.run_until_drained(timeout=300.0)
+    reprov = time.monotonic() - t0
+    sim.join_all(10.0)
+
+    cold = sum(colds) / len(colds)
+    warm = sum(warms) / len(warms)
+    out.append(("bind_cold_s", cold, "image pull = XLA compile"))
+    out.append(("bind_warm_s", warm, "cache hit (image already pulled)"))
+    out.append(("bind_warm_speedup", cold / warm, "x vs cold"))
+    out.append(("reprovision_s", reprov,
+                "release+acquire+pilot-start+cold-bind+run"))
+    out.append(("latebind_vs_reprovision", reprov / warm, "x"))
+    return out

@@ -1,0 +1,65 @@
+"""Pilot lifecycle step costs (paper Fig. 2, steps a-h).
+
+Times each conceptual step of one pilot serving one training payload:
+(a) start/validate, (b) match, (c) bind+stage+publish, (d+) payload run,
+(e) collect, (f) cleanup, (h) terminate.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.arena import SharedArena
+from repro.core.images import ExecutableRegistry, PayloadImage
+from repro.core.latebind import PayloadExecutor, PodPatchCapability
+from repro.core.proctable import PAYLOAD_UID, ProcessTable
+from repro.core.taskrepo import TaskRepo
+
+
+def run() -> list[tuple[str, float, str]]:
+    out = []
+    repo = TaskRepo()
+    reg = ExecutableRegistry()
+    img = PayloadImage("smollm-360m", "smoke", "train")
+    repo.submit(img, n_steps=3)
+
+    t = time.monotonic()
+    arena = SharedArena()
+    pt = ProcessTable()
+    ex = PayloadExecutor("pod-l", arena, pt, reg)
+    out.append(("a_start_s", time.monotonic() - t, "arena+placeholder"))
+
+    t = time.monotonic()
+    task = repo.match({"pilot_id": "bench", "labels": {}})
+    out.append(("b_match_s", time.monotonic() - t, "matchmaking"))
+
+    t = time.monotonic()
+    ex.patch_image(PodPatchCapability("pod-l"), task.image)
+    arena.write_env({"seed": 0})
+    ex.start(spec_timeout=10.0)
+    arena.publish_startup_spec({"n_steps": task.n_steps})
+    out.append(("c_bind_stage_s", time.monotonic() - t,
+                "pod patch + stage + publish spec"))
+
+    t = time.monotonic()
+    while ex.running:
+        time.sleep(0.01)
+    out.append(("d_payload_run_s", time.monotonic() - t,
+                f"{task.n_steps} train steps incl. jit"))
+
+    t = time.monotonic()
+    exit_info = arena.read_exit()
+    out.append(("e_collect_s", time.monotonic() - t,
+                f"exit={exit_info['exitcode']}"))
+
+    t = time.monotonic()
+    ex.reset()
+    arena.wipe_shared()
+    out.append(("f_cleanup_s", time.monotonic() - t,
+                "executor reset + volume wipe"))
+
+    t = time.monotonic()
+    pt.kill_uid(PAYLOAD_UID)
+    arena.destroy()
+    out.append(("h_terminate_s", time.monotonic() - t, "arena destroy"))
+    return out

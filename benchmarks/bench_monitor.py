@@ -1,0 +1,40 @@
+"""Monitor scan overhead (paper §3.4) vs process-table size, plus
+straggler-detection latency in scans."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.monitor import Monitor, MonitorLimits
+from repro.core.proctable import PAYLOAD_UID, ProcessTable
+
+
+def run() -> list[tuple[str, float, str]]:
+    out = []
+    for n in (10, 100, 1000):
+        pt = ProcessTable()
+        for i in range(n):
+            e = pt.register(PAYLOAD_UID, f"w{i}")
+            pt.heartbeat(e.pid, 0.1)
+        mon = Monitor(pt, MonitorLimits(max_wall=1e9),
+                      fleet_median_fn=lambda: 0.1)
+        t0 = time.monotonic()
+        for _ in range(100):
+            mon.scan()
+        dt = (time.monotonic() - t0) / 100
+        out.append((f"monitor_scan_us_n{n}", dt * 1e6, "per scan"))
+
+    # straggler detection latency: scans until EWMA crosses 3x median
+    pt = ProcessTable()
+    e = pt.register(PAYLOAD_UID, "slow")
+    mon = Monitor(pt, MonitorLimits(max_wall=1e9, straggler_factor=3.0),
+                  fleet_median_fn=lambda: 0.1)
+    scans = 0
+    for step in range(100):
+        pt.heartbeat(e.pid, 1.0)                 # 10x slower than fleet
+        scans += 1
+        if mon.scan():
+            break
+    out.append(("straggler_detect_scans", float(scans),
+                "heartbeats until kill at 10x median"))
+    return out

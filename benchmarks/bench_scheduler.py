@@ -1,0 +1,35 @@
+"""Overlay-scheduler throughput: N pilots draining M noop payloads.
+
+Measures matchmaking + lease + completion overhead of the TaskRepo with
+concurrent pilots — the control-plane cost per payload, which bounds how
+small a task can be before scheduling dominates (dHTC sizing rule)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.cluster import ClusterSim
+from repro.core.images import PayloadImage
+from repro.core.pilot import PilotConfig
+
+
+def run(n_pilots: int = 4, n_tasks: int = 40) -> list[tuple[str, float, str]]:
+    sim = ClusterSim()
+    noop = PayloadImage(arch="placeholder", shape="none", mode="noop")
+    for _ in range(n_tasks):
+        sim.repo.submit(noop, n_steps=1)
+    t0 = time.monotonic()
+    for s in sim.provision(n_pilots):
+        sim.spawn_pilot(s, PilotConfig(max_payloads=n_tasks, idle_grace=0.3,
+                                       monitor_interval=0.002))
+    ok = sim.run_until_drained(timeout=120.0, poll=0.01)
+    wall = time.monotonic() - t0
+    sim.join_all(10.0)
+    done = sim.repo.stats()["done"]
+    return [
+        ("sched_tasks_done", float(done), f"of {n_tasks}, drained={ok}"),
+        ("sched_wall_s", wall, f"{n_pilots} pilots"),
+        ("sched_tasks_per_s", done / wall, "throughput"),
+        ("sched_overhead_ms_per_task", 1e3 * wall * n_pilots / max(done, 1),
+         "pilot-seconds per payload"),
+    ]

@@ -1,0 +1,38 @@
+"""Train-step wall time for smoke configs (CPU numbers; the TPU-target
+numbers are the §Roofline table from the dry-run)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_smoke_config
+from repro.data.synthetic import SyntheticConfig, SyntheticLM
+from repro.launch.steps import init_train_state, make_train_step
+from repro.optim.adamw import OptimConfig
+
+
+def run(archs=("smollm-360m", "mamba2-370m", "mixtral-8x7b"),
+        steps: int = 5) -> list[tuple[str, float, str]]:
+    out = []
+    for arch in archs:
+        cfg = get_smoke_config(arch)
+        step = jax.jit(make_train_step(cfg, OptimConfig()), donate_argnums=0)
+        state = init_train_state(cfg, jax.random.key(0))
+        data = SyntheticLM(SyntheticConfig(cfg.vocab_size, 128, 4))
+        b = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+        state, m = step(state, b)                       # compile + warm
+        jax.block_until_ready(m["loss"])
+        t0 = time.monotonic()
+        for i in range(1, steps + 1):
+            b = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+            state, m = step(state, b)
+        jax.block_until_ready(m["loss"])
+        dt = (time.monotonic() - t0) / steps
+        toks = 4 * 128
+        out.append((f"train_ms_per_step_{arch}", dt * 1e3,
+                    f"smoke cfg, {toks} tok/step, loss={float(m['loss']):.3f}"))
+        out.append((f"train_tok_per_s_{arch}", toks / dt, "CPU"))
+    return out

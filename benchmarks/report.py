@@ -1,0 +1,89 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from
+results/dryrun/ records.
+
+  PYTHONPATH=src python -m benchmarks.report [--section dryrun|roofline]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+NOTES = {
+    "compute": "shard/skip FLOPs: causal-blocked attention, better TP fit",
+    "memory": "fuse score/loss temporaries (Pallas flash), bf16, remat policy",
+    "collective": "layout change (fsdp/EP), overlap, grad compression",
+}
+
+
+def load(tag):
+    out = []
+    for p in sorted((RESULTS / tag).glob("*.json")):
+        if p.stem.count("__") > 1:
+            continue
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def dryrun_table(tag: str) -> str:
+    rows = [
+        "| cell | mode | compile s | flops/dev | fused GB/dev | coll GB/dev "
+        "| AG/AR/RS/CP counts | args+out GB/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(tag):
+        hc = r["hlo_cost"]
+        cc = hc["collective_counts"]
+        counts = "/".join(str(int(cc.get(k, 0))) for k in
+                          ("all-gather", "all-reduce", "reduce-scatter",
+                           "collective-permute"))
+        mem = (r["memory"].get("argument_size_in_bytes", 0)
+               + r["memory"].get("output_size_in_bytes", 0)) / 2**30
+        rows.append(
+            f'| {r["arch"]} x {r["shape"]} | {r["mode"]} '
+            f'| {r["compile_seconds"]:.0f} '
+            f'| {hc["flops"]:.3g} | {hc["bytes_fused"]/2**30:.1f} '
+            f'| {hc["total_collective_bytes"]/2**30:.2f} | {counts} '
+            f'| {mem:.2f} |')
+    return "\n".join(rows)
+
+
+def roofline_table(tag: str) -> str:
+    rows = [
+        "| cell | mode | compute s | memory s | collective s | dominant "
+        "| useful | roofline frac | next lever |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(tag):
+        t = r["roofline"]
+        dom = t["dominant"].replace("_s", "")
+        rows.append(
+            f'| {r["arch"]} x {r["shape"]} | {r["mode"]} '
+            f'| {t["compute_s"]:.3g} | {t["memory_s"]:.3g} '
+            f'| {t["collective_s"]:.3g} | {dom} '
+            f'| {t["useful_flops_ratio"]:.2f} '
+            f'| {t["roofline_fraction"]:.4f} | {NOTES[dom]} |')
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all")
+    args = ap.parse_args()
+    if args.section in ("dryrun", "all"):
+        for tag, label in (("pod16x16", "single pod (16x16 = 256 chips)"),
+                           ("pod2x16x16", "two pods (2x16x16 = 512 chips)")):
+            print(f"\n### Dry-run — {label}\n")
+            print(dryrun_table(tag))
+    if args.section in ("roofline", "all"):
+        print("\n### Roofline — single pod\n")
+        print(roofline_table("pod16x16"))
+        print("\n### Roofline — two pods\n")
+        print(roofline_table("pod2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Assemble the §Roofline table from the dry-run JSON records.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--multi-pod] [--md]
+
+Reads results/dryrun/<mesh>/*.json (produced by repro.launch.dryrun) and
+emits the per-cell three-term roofline with the dominant bottleneck,
+MODEL_FLOPS ratio and a one-line "what would move the dominant term" note.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+_NOTES = {
+    ("compute_s",): "more TP/FSDP sharding or causal-block FLOP skipping",
+    ("memory_s",): "fuse attention/loss temporaries (Pallas), bf16 remat, "
+                   "smaller chunks",
+    ("collective_s",): "overlap FSDP all-gathers with layer compute; "
+                       "int8-compress DP grads; EP instead of TP for MoE",
+}
+
+
+def load(mesh_tag: str) -> list[dict]:
+    recs = []
+    d = RESULTS / mesh_tag
+    for p in sorted(d.glob("*.json")):
+        if "__" in p.stem and p.stem.count("__") > 1:
+            continue                      # flag-variant records (see §Perf)
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def note_for(rec: dict) -> str:
+    return _NOTES.get((rec["roofline"]["dominant"],), "")
+
+
+def rows(mesh_tag: str) -> list[dict]:
+    out = []
+    for r in load(mesh_tag):
+        t = r["roofline"]
+        coll = r.get("hlo_cost", {}).get("collective_counts", {})
+        out.append({
+            "cell": f'{r["arch"]} x {r["shape"]}',
+            "mode": r["mode"],
+            "compute_s": t["compute_s"],
+            "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"],
+            "dominant": t["dominant"].replace("_s", ""),
+            "useful_ratio": t["useful_flops_ratio"],
+            "roofline_frac": t["roofline_fraction"],
+            "mem_GB": (r["memory"].get("argument_size_in_bytes", 0)
+                       + r["memory"].get("output_size_in_bytes", 0)) / 2**30,
+            "coll_counts": {k: int(v) for k, v in coll.items()},
+            "note": note_for(r),
+        })
+    return out
+
+
+def run() -> list[tuple[str, float, str]]:
+    """benchmarks.run entry: aggregate stats over the single-pod table."""
+    rs = rows("pod16x16")
+    if not rs:
+        return [("roofline_cells", 0.0, "run repro.launch.dryrun --all first")]
+    dom = {}
+    for r in rs:
+        dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+    out = [("roofline_cells", float(len(rs)), "single-pod")]
+    for k, v in sorted(dom.items()):
+        out.append((f"roofline_dominant_{k}", float(v), "cells"))
+    best = max(rs, key=lambda r: r["roofline_frac"] or 0)
+    worst = min(rs, key=lambda r: r["roofline_frac"] or 1)
+    out.append(("roofline_frac_best", best["roofline_frac"], best["cell"]))
+    out.append(("roofline_frac_worst", worst["roofline_frac"], worst["cell"]))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--md", action="store_true", help="markdown table")
+    args = ap.parse_args()
+    tag = "pod2x16x16" if args.multi_pod else "pod16x16"
+    rs = rows(tag)
+    if args.md:
+        print("| cell | mode | compute s | memory s | collective s | "
+              "dominant | useful | frac |")
+        print("|---|---|---|---|---|---|---|---|")
+        for r in rs:
+            print(f'| {r["cell"]} | {r["mode"]} | {r["compute_s"]:.3g} | '
+                  f'{r["memory_s"]:.3g} | {r["collective_s"]:.3g} | '
+                  f'{r["dominant"]} | {r["useful_ratio"]:.2f} | '
+                  f'{(r["roofline_frac"] or 0):.4f} |')
+    else:
+        for r in rs:
+            print(json.dumps(r))
+
+
+if __name__ == "__main__":
+    main()

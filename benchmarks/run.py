@@ -1,0 +1,53 @@
+"""Benchmark harness: one module per paper claim/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only bind,sched,...]
+
+Prints ``name,value,detail`` CSV.  The dry-run roofline table (the TPU-
+target performance report) is separate: ``python -m benchmarks.roofline``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (bench_bind, bench_lifecycle, bench_monitor,
+                        bench_scheduler, bench_serving, bench_train,
+                        roofline)
+
+SUITES = {
+    "bind": bench_bind.run,            # paper Fig. 4: late-binding cost
+    "lifecycle": bench_lifecycle.run,  # paper Fig. 2: step costs a-h
+    "sched": bench_scheduler.run,      # overlay scheduler throughput
+    "monitor": bench_monitor.run,      # paper §3.4 monitor overhead
+    "serving": bench_serving.run,      # payload-side serving numbers
+    "train": bench_train.run,          # payload-side training numbers
+    "roofline": roofline.run,          # dry-run roofline aggregates
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list of suites " + ",".join(SUITES))
+    args = ap.parse_args()
+    names = (args.only.split(",") if args.only else list(SUITES))
+    print("name,value,detail")
+    failures = 0
+    for n in names:
+        t0 = time.monotonic()
+        try:
+            rows = SUITES[n]()
+        except Exception as e:                   # noqa: BLE001
+            print(f"{n}_FAILED,nan,{type(e).__name__}: {e}")
+            failures += 1
+            continue
+        for name, value, detail in rows:
+            print(f'{name},{value:.6g},"{detail}"')
+        print(f'{n}_suite_wall_s,{time.monotonic() - t0:.3f},""')
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

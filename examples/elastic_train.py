@@ -1,0 +1,48 @@
+"""Elastic scaling demo: the data-parallel mesh follows the live-pilot set.
+
+Two pilots drain a queue of training payloads; one is then drained
+(graceful scale-down) and the launcher recomputes the mesh via
+`plan_remesh` — the model axis is untouched, the data axis shrinks, and
+training resumes from the checkpoint.
+
+  PYTHONPATH=src python examples/elastic_train.py
+"""
+
+from repro.core.cluster import ClusterSim
+from repro.core.images import PayloadImage
+from repro.core.pilot import PilotConfig
+from repro.runtime.mesh import MeshSpec
+
+print("== elastic scale-down ==")
+sim = ClusterSim()
+for i in range(4):
+    sim.repo.submit(PayloadImage("smollm-360m", "smoke", "train"), n_steps=2)
+
+slices = sim.provision(2)
+pilots = [sim.spawn_pilot(s, PilotConfig(max_payloads=6, idle_grace=2.0))
+          for s in slices]
+plan0 = sim.remesh_plan(model_parallel=16, global_batch=256)
+print(f"  2 live pilots -> mesh {plan0.new_mesh.shape} "
+      f"(per-slice batch {plan0.new_per_data})")
+
+sim.drain(slices[0].slice_id)
+pilots[0].join(60.0)
+plan1 = sim.remesh_plan(model_parallel=16, global_batch=256,
+                        old=plan0.new_mesh)
+print(f"  after drain -> mesh {plan1.new_mesh.shape} "
+      f"(per-slice batch {plan1.new_per_data}); actions: {plan1.actions}")
+
+assert sim.run_until_drained(timeout=300.0)
+print(f"  queue drained by the remaining pilot: {sim.repo.stats()}")
+sim.join_all(30.0)
+
+# grow back: three fresh slices join the fleet
+print("== elastic scale-up ==")
+for s in sim.provision(3):
+    sim.spawn_pilot(s, PilotConfig(max_payloads=1, idle_grace=1.0))
+plan2 = sim.remesh_plan(model_parallel=16, global_batch=256,
+                        old=plan1.new_mesh)
+print(f"  3 live pilots -> mesh {plan2.new_mesh.shape} "
+      f"(per-slice batch {plan2.new_per_data}); actions: {plan2.actions}")
+sim.join_all(30.0)
+print("elastic demo OK")

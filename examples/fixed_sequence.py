@@ -1,0 +1,60 @@
+"""Paper PoC #1 — the *fixed sequence* pod (paper §4).
+
+The paper's first proof-of-concept YAML runs a pre-scripted sequence:
+a pilot container and a payload container sharing a volume; the payload
+waits for a startup script; the pilot writes it; the payload runs and
+reports its exit code through the shared volume.  No scheduler, no
+matchmaking — just the enabling mechanisms, in order.
+
+  PYTHONPATH=src python examples/fixed_sequence.py
+"""
+
+import jax
+
+from repro.core.arena import SharedArena
+from repro.core.images import ExecutableRegistry, PayloadImage
+from repro.core.latebind import PayloadExecutor, PodPatchCapability
+from repro.core.proctable import PAYLOAD_UID, PILOT_UID, ProcessTable
+
+print("== fixed-sequence PoC (paper §4, first YAML) ==")
+
+# Pod creation: shared volume + both containers; payload holds the
+# placeholder image and blocks on the startup-script path.
+arena = SharedArena()
+proctable = ProcessTable()
+registry = ExecutableRegistry()
+executor = PayloadExecutor("pod-poc", arena, proctable, registry)
+print(f"1. pod created; payload container image = {executor.image.arch!r} "
+      f"(placeholder), state = {executor.state}")
+
+# The fixed sequence: the pilot already knows which image it will run.
+cap = PodPatchCapability("pod-poc")
+image = PayloadImage("smollm-360m", "smoke", "decode")
+executor.patch_image(cap, image)
+print(f"2. pod patch: payload image -> {image.arch}/{image.mode} "
+      f"(bind {executor.last_bind_seconds*1e3:.1f} ms, unprivileged)")
+
+executor.start(spec_timeout=10.0)
+print("3. payload container started; waiting on startup script ...")
+
+arena.write_env({"seed": 0, "greeting": "from-the-pilot"})
+arena.publish_startup_spec({"n_steps": 3})
+print("4. pilot wrote env + startup script into the shared volume")
+
+executor.join(timeout=120.0)
+exit_info = arena.read_exit()
+print(f"5. payload finished: exit={exit_info['exitcode']} "
+      f"steps={exit_info['telemetry']['steps']} "
+      f"(relayed via exitcode.json, §3.5)")
+
+# §3.4: the pilot saw the payload's 'process' the whole time
+entries = proctable.entries(uid=PAYLOAD_UID, viewer_uid=PILOT_UID)
+print(f"6. process table (pilot view): "
+      f"{[(e.name, e.state, e.exitcode) for e in entries]}")
+
+executor.reset()
+arena.wipe_shared()
+print(f"7. cleanup by container restart; shared volume now: "
+      f"{arena.shared_files()}")
+arena.destroy()
+print("fixed-sequence PoC OK")

@@ -1,0 +1,50 @@
+"""Serving through late binding: one pilot-held slice serves BATCHED
+requests for two different models back-to-back — the image swap replaces a
+full re-provision between models.
+
+  PYTHONPATH=src python examples/late_binding_serve.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_smoke_config
+from repro.core.arena import SharedArena
+from repro.core.images import ExecutableRegistry, PayloadImage
+from repro.core.latebind import PayloadExecutor, PodPatchCapability
+from repro.core.proctable import ProcessTable
+from repro.models.api import build_model
+from repro.serving.engine import Request, ServeEngine
+
+print("== batched serving via late binding ==")
+
+arena = SharedArena()
+registry = ExecutableRegistry()
+executor = PayloadExecutor("pod-serve", arena, ProcessTable(), registry)
+cap = PodPatchCapability("pod-serve")
+
+rng = np.random.default_rng(0)
+for arch in ("smollm-360m", "gemma-2b"):
+    t0 = time.monotonic()
+    image = PayloadImage(arch, "smoke", "decode")
+    executor.patch_image(cap, image)         # the unprivileged image swap
+    bind_ms = (time.monotonic() - t0) * 1e3
+
+    cfg = get_smoke_config(arch)
+    params = build_model(cfg).init(jax.random.key(0))
+    engine = ServeEngine(cfg, params, slots=2, max_len=64)
+    for i in range(4):
+        engine.submit(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab_size, size=8),
+            max_new_tokens=6))
+    stats = engine.run()
+    print(f"  {arch}: bind {bind_ms:.1f} ms -> {stats['completed']} requests, "
+          f"{stats['tok_per_s']:.1f} tok/s, "
+          f"util {stats['slot_utilization']:.2f}")
+    executor.reset()                         # cleanup between models (§3.6)
+    arena.wipe_shared()
+
+arena.destroy()
+print("late-binding serve OK")

@@ -1,0 +1,24 @@
+"""Architecture configs — one module per assigned architecture.
+
+``get_config(name)`` returns the full published config (dry-run only);
+``get_smoke_config(name)`` returns a reduced same-family config that runs a
+real forward/train step on CPU in the test suite.
+"""
+
+from repro.configs.base import (
+    ArchConfig,
+    MLASpec,
+    MoESpec,
+    SHAPES,
+    SSMSpec,
+    ShapeSpec,
+    applicable_shapes,
+    get_config,
+    get_smoke_config,
+    list_archs,
+)
+
+__all__ = [
+    "ArchConfig", "MLASpec", "MoESpec", "SSMSpec", "ShapeSpec", "SHAPES",
+    "applicable_shapes", "get_config", "get_smoke_config", "list_archs",
+]

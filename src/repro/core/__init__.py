@@ -1,0 +1,33 @@
+"""The paper's contribution: unprivileged container late-binding for dHTC
+pilots, adapted to a JAX/TPU fleet.
+
+Map (paper -> here): pod -> PilotSlice; pilot container -> Pilot; payload
+container -> PayloadExecutor; container image -> PayloadImage (compiled XLA
+executable); pod patch -> PayloadExecutor.patch_image (pod-scoped
+capability); shared volume -> SharedArena; process namespace + uid ->
+ProcessTable; startup wrapper -> run_wrapper; task repository -> TaskRepo;
+Kubernetes -> ClusterSim.
+"""
+
+from repro.core.arena import SharedArena
+from repro.core.cluster import ClusterSim, PilotSlice
+from repro.core.images import (
+    Executable, ExecutableRegistry, PLACEHOLDER, PayloadImage,
+)
+from repro.core.latebind import (
+    PayloadExecutor, PermissionError_, PodPatchCapability,
+)
+from repro.core.monitor import Monitor, MonitorAction, MonitorLimits
+from repro.core.pilot import Pilot, PilotConfig
+from repro.core.proctable import PAYLOAD_UID, PILOT_UID, ProcessTable
+from repro.core.taskrepo import PayloadTask, TaskRepo, TaskResult
+from repro.core.wrapper import PayloadCapability, run_wrapper
+
+__all__ = [
+    "SharedArena", "ClusterSim", "PilotSlice", "Executable",
+    "ExecutableRegistry", "PLACEHOLDER", "PayloadImage", "PayloadExecutor",
+    "PermissionError_", "PodPatchCapability", "Monitor", "MonitorAction",
+    "MonitorLimits", "Pilot", "PilotConfig", "PAYLOAD_UID", "PILOT_UID",
+    "ProcessTable", "PayloadTask", "TaskRepo", "TaskResult",
+    "PayloadCapability", "run_wrapper",
+]

@@ -1,0 +1,107 @@
+"""SharedArena — the multi-container pod's volumes (paper §3.2, §3.5, §3.6).
+
+Two storage areas per pilot:
+
+* ``shared/``  — mounted into both the pilot and the payload "containers".
+  The pilot stages input files here; the payload wrapper finds its *startup
+  spec* here (the paper's wait-for-script loop), and writes ``exitcode.json``
+  + telemetry back (the paper's exit-code relay, §3.5).
+* ``private/`` — pilot-only: lease tokens, heartbeat files, credentials.
+  The payload capability object simply never receives this path — the
+  analogue of the volume not being mounted in the payload container.
+
+``wipe_shared()`` is the §3.6 cleanup: between payloads the pilot clears the
+shared volume; payload process cleanup itself is delegated to the executor
+reset (the "container restart").
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+
+STARTUP_SPEC = "startup_spec.json"     # the paper's startup script path
+EXITCODE_FILE = "exitcode.json"
+ENV_FILE = "payload_env.json"
+
+
+class SharedArena:
+    def __init__(self, root: str | None = None):
+        self.root = root or tempfile.mkdtemp(prefix="pilot_arena_")
+        self.shared = os.path.join(self.root, "shared")
+        self.private = os.path.join(self.root, "private")
+        os.makedirs(self.shared, exist_ok=True)
+        os.makedirs(self.private, exist_ok=True)
+
+    # ---- pilot-side staging (step (b)/(c) of the lifecycle) ---------------
+
+    def stage_file(self, name: str, data: bytes) -> str:
+        path = os.path.join(self.shared, name)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, path)
+        return path
+
+    def write_env(self, env: dict) -> str:
+        return self.stage_file(ENV_FILE, json.dumps(env).encode())
+
+    def publish_startup_spec(self, spec: dict) -> str:
+        """Publishing the spec is what releases the payload container's
+        wait-loop — write must be atomic (tmp+rename)."""
+        return self.stage_file(STARTUP_SPEC, json.dumps(spec).encode())
+
+    # ---- payload-side (wrapper) -------------------------------------------
+
+    def wait_for_startup_spec(self, timeout: float = 30.0,
+                              poll: float = 0.01) -> dict | None:
+        """The payload container's shell wait-loop (paper §3.3)."""
+        path = os.path.join(self.shared, STARTUP_SPEC)
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if os.path.exists(path):
+                with open(path) as f:
+                    return json.load(f)
+            time.sleep(poll)
+        return None
+
+    def read_env(self) -> dict:
+        path = os.path.join(self.shared, ENV_FILE)
+        if os.path.exists(path):
+            with open(path) as f:
+                return json.load(f)
+        return {}
+
+    def report_exit(self, exitcode: int, telemetry: dict | None = None):
+        self.stage_file(EXITCODE_FILE, json.dumps(
+            {"exitcode": exitcode, "telemetry": telemetry or {},
+             "time": time.time()}).encode())
+
+    # ---- pilot-side collection (step (e)) ----------------------------------
+
+    def read_exit(self) -> dict | None:
+        path = os.path.join(self.shared, EXITCODE_FILE)
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            return json.load(f)
+
+    def shared_files(self) -> list[str]:
+        out = []
+        for base, _, files in os.walk(self.shared):
+            for f in files:
+                out.append(os.path.relpath(os.path.join(base, f), self.shared))
+        return sorted(out)
+
+    # ---- cleanup (step (f)/(h)) --------------------------------------------
+
+    def wipe_shared(self):
+        shutil.rmtree(self.shared, ignore_errors=True)
+        os.makedirs(self.shared, exist_ok=True)
+
+    def destroy(self):
+        shutil.rmtree(self.root, ignore_errors=True)

@@ -1,0 +1,116 @@
+"""ClusterSim — the resource provider (Kubernetes / kubelet analogue).
+
+Grants *slices* (pods' worth of devices) to pilot jobs, injects node
+failures, and supports elastic grow/shrink.  The simulation is deliberately
+thin: its job is to exercise the pilot system's provisioning-facing
+contracts (grant -> run -> release; hard failure -> lease expiry -> re-queue;
+membership change -> remesh plan) so they are testable without a cluster.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+from typing import Optional
+
+import jax
+
+from repro.core.images import ExecutableRegistry
+from repro.core.pilot import Pilot, PilotConfig
+from repro.core.taskrepo import TaskRepo
+from repro.runtime.elastic import plan_remesh
+from repro.runtime.mesh import MeshSpec
+
+
+@dataclasses.dataclass
+class PilotSlice:
+    slice_id: int
+    devices: list
+    labels: dict = dataclasses.field(default_factory=dict)
+    mesh: Optional[object] = None
+    released: bool = False
+
+    def release(self):
+        self.released = True
+
+
+class ClusterSim:
+    def __init__(self, repo: TaskRepo | None = None,
+                 registry: ExecutableRegistry | None = None):
+        self.repo = repo or TaskRepo()
+        self.registry = registry or ExecutableRegistry()
+        self._ids = itertools.count(1)
+        self._lock = threading.Lock()
+        self.slices: dict[int, PilotSlice] = {}
+        self.pilots: dict[int, Pilot] = {}
+
+    # ---- provisioning -------------------------------------------------------
+
+    def provision(self, n_slices: int = 1, *, labels: dict | None = None,
+                  mesh=None) -> list[PilotSlice]:
+        devs = jax.devices()
+        out = []
+        with self._lock:
+            for _ in range(n_slices):
+                sid = next(self._ids)
+                s = PilotSlice(slice_id=sid, devices=list(devs),
+                               labels=dict(labels or {}), mesh=mesh)
+                self.slices[sid] = s
+                out.append(s)
+        return out
+
+    def spawn_pilot(self, slice_: PilotSlice,
+                    config: PilotConfig | None = None) -> Pilot:
+        p = Pilot(slice_, self.repo, self.registry, config)
+        with self._lock:
+            self.pilots[slice_.slice_id] = p
+        p.start_async()
+        return p
+
+    # ---- failure injection / drain -------------------------------------------
+
+    def fail_node(self, slice_id: int):
+        """Hard node loss: the pilot thread aborts without cleanup AND the
+        payload processes die with the node; the lease expires and the repo
+        re-queues the task."""
+        from repro.core.proctable import PAYLOAD_UID
+        with self._lock:
+            p = self.pilots.get(slice_id)
+        if p:
+            p.fail_flag.set()
+            p.proctable.kill_uid(PAYLOAD_UID)
+
+    def drain(self, slice_id: int):
+        with self._lock:
+            p = self.pilots.get(slice_id)
+        if p:
+            p.drain_flag.set()
+
+    # ---- elasticity ------------------------------------------------------------
+
+    def live_pilots(self) -> list[Pilot]:
+        with self._lock:
+            return [p for p in self.pilots.values()
+                    if p.state not in ("terminated", "failed")]
+
+    def remesh_plan(self, model_parallel: int, global_batch: int,
+                    old: MeshSpec | None = None):
+        return plan_remesh(old, len(self.live_pilots()), model_parallel,
+                           global_batch)
+
+    # ---- convenience -------------------------------------------------------------
+
+    def run_until_drained(self, timeout: float = 60.0, poll: float = 0.05) -> bool:
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            self.repo.reap_leases()
+            if self.repo.drain_done():
+                return True
+            time.sleep(poll)
+        return False
+
+    def join_all(self, timeout: float = 10.0):
+        for p in list(self.pilots.values()):
+            p.join(timeout)

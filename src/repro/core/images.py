@@ -1,0 +1,171 @@
+"""PayloadImage + ExecutableRegistry — container images and the image cache.
+
+A *PayloadImage* names everything needed to build the payload's executable:
+(architecture x input shape x step kind x flags).  "Pulling" an image is XLA
+compilation against the slice's mesh; the registry's cache plays the node's
+local image cache — a warm ``bind()`` skips compilation exactly as a cached
+image skips the pull (measured in benchmarks/bind_latency.py).
+
+The PLACEHOLDER image is the paper's arbitrary default container image: a
+trivial executable every slice can always run, installed at pod creation so
+the Kubernetes-side object is valid before any payload exists (§3.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeSpec, get_config, get_smoke_config
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.models.api import build_model
+from repro.optim.adamw import OptimConfig
+from repro.runtime import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class PayloadImage:
+    """Immutable image reference (the `image:` field of the pod spec)."""
+    arch: str                        # registry name, or "<name>-smoke"
+    shape: str                       # key into SHAPES, or "smoke"
+    mode: str                        # "train" | "prefill" | "decode" | "noop"
+    smoke: bool = True               # reduced config (tests/examples) vs full
+    flags: tuple = ()                # e.g. (("remat","dots"), ("attn_impl","causal_blocked"))
+
+    def key(self) -> tuple:
+        return (self.arch, self.shape, self.mode, self.smoke, self.flags)
+
+    def config(self) -> ArchConfig:
+        cfg = get_smoke_config(self.arch) if self.smoke else get_config(self.arch)
+        if self.flags:
+            cfg = dataclasses.replace(cfg, **dict(self.flags))
+        return cfg
+
+    def shape_spec(self) -> ShapeSpec:
+        if self.shape in SHAPES:
+            return SHAPES[self.shape]
+        if self.shape.startswith("custom:"):        # "custom:<seq>x<batch>"
+            seq, batch = self.shape.split(":", 1)[1].split("x")
+            return ShapeSpec(self.shape, int(seq), int(batch), self.mode)
+        # smoke shapes: tiny, CPU-runnable
+        mode = "train" if self.mode == "train" else self.mode
+        return ShapeSpec("smoke", 64, 2, mode)
+
+
+PLACEHOLDER = PayloadImage(arch="placeholder", shape="none", mode="noop")
+
+
+@dataclasses.dataclass
+class Executable:
+    """A pulled image: compiled function + input builders."""
+    image: PayloadImage
+    fn: Any                           # jitted/compiled callable
+    make_inputs: Any                  # (key) -> concrete input pytree
+    compile_seconds: float
+    cached: bool = False
+
+
+class ExecutableRegistry:
+    """Compile cache keyed by (image, mesh shape).  Thread-safe; one compile
+    per key even under concurrent binds (single-flight)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cache: dict[tuple, Executable] = {}
+        self._inflight: dict[tuple, threading.Event] = {}
+        self.stats = {"hits": 0, "misses": 0}
+
+    def pull(self, image: PayloadImage, mesh=None) -> Executable:
+        key = (image.key(), None if mesh is None else
+               (tuple(mesh.devices.shape), tuple(mesh.axis_names)))
+        while True:
+            with self._lock:
+                if key in self._cache:
+                    self.stats["hits"] += 1
+                    e = self._cache[key]
+                    return Executable(e.image, e.fn, e.make_inputs,
+                                      e.compile_seconds, cached=True)
+                ev = self._inflight.get(key)
+                if ev is None:
+                    self._inflight[key] = threading.Event()
+                    break
+            ev.wait()                    # another bind is compiling this image
+        try:
+            exe = self._build(image, mesh)
+            with self._lock:
+                self._cache[key] = exe
+                self.stats["misses"] += 1
+            return exe
+        finally:
+            with self._lock:
+                ev = self._inflight.pop(key)
+            ev.set()
+
+    # ------------------------------------------------------------------
+
+    def _build(self, image: PayloadImage, mesh) -> Executable:
+        t0 = time.monotonic()
+        if image.mode == "noop":
+            fn = jax.jit(lambda x: x + 1.0)
+            fn(jnp.zeros(()))            # warm
+            return Executable(image, fn, lambda key: jnp.zeros(()),
+                              time.monotonic() - t0)
+
+        cfg = image.config()
+        shape = image.shape_spec()
+        bundle = build_model(cfg)
+
+        if image.mode == "train":
+            step = make_train_step(cfg, OptimConfig(total_steps=1000))
+            fn = jax.jit(step, donate_argnums=0)
+
+            def make_inputs(key):
+                from repro.launch.steps import init_train_state
+                from repro.data.synthetic import SyntheticConfig, SyntheticLM
+                state = init_train_state(cfg, key)
+                data = SyntheticLM(SyntheticConfig(
+                    cfg.vocab_size, _text_len(cfg, shape.seq_len),
+                    shape.global_batch))
+                return state, data
+        elif image.mode == "prefill":
+            step = make_prefill_step(cfg)
+            fn = jax.jit(step)
+
+            def make_inputs(key):
+                params = bundle.init(key)
+                batch = _concrete_batch(cfg, shape, key, with_targets=False)
+                return params, batch
+        else:                            # decode
+            step = make_serve_step(cfg)
+            fn = jax.jit(step, donate_argnums=1)
+
+            def make_inputs(key):
+                from repro.models.api import init_decode_state
+                params = bundle.init(key)
+                state = init_decode_state(cfg, shape.global_batch,
+                                          shape.seq_len)
+                return params, state
+
+        return Executable(image, fn, make_inputs, time.monotonic() - t0)
+
+
+def _text_len(cfg, seq_len):
+    return seq_len - cfg.frontend_tokens if cfg.family == "vlm" else seq_len
+
+
+def _concrete_batch(cfg, shape, key, *, with_targets=True):
+    B = shape.global_batch
+    S = _text_len(cfg, shape.seq_len)
+    ks = jax.random.split(key, 3)
+    batch = {"tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size)}
+    if with_targets:
+        batch["targets"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size)
+    if cfg.family in ("vlm", "audio"):
+        batch["frontend"] = jax.random.normal(
+            ks[2], (B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16) * 0.02
+    return batch

@@ -1,0 +1,143 @@
+"""PayloadExecutor — the payload container + the late-binding image patch.
+
+The executor is the pod's second container (paper §3.3):
+
+* At pod creation it holds the PLACEHOLDER image and its run thread blocks in
+  the arena's wait-for-startup-spec loop — Kubernetes is satisfied (every
+  container has an image) while no payload exists yet.
+* ``patch_image()`` is the unprivileged ``kubectl set image`` / pod-patch:
+  it requires a capability token scoped to *this pod only* (the "pod patch
+  role inside its own namespace"), swaps the executable in place, and never
+  touches the resource grant — the slice stays claimed throughout.
+* ``reset()`` is the §3.6 cleanup-by-container-restart: the payload's
+  process entries are killed and its device state dropped; the pilot's state
+  survives untouched.
+
+Compilation happens at patch time via the ExecutableRegistry (the image
+pull); a warm cache makes rebinding nearly free — the measurable win of
+late-binding over re-provisioning.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any
+
+from repro.core.arena import SharedArena
+from repro.core.images import Executable, ExecutableRegistry, PLACEHOLDER, PayloadImage
+from repro.core.proctable import PAYLOAD_UID, ProcessTable
+from repro.core.wrapper import run_wrapper
+
+UNBOUND = "unbound"
+BOUND = "bound"
+RUNNING = "running"
+EXITED = "exited"
+
+
+class PermissionError_(Exception):
+    """Capability check failed (wrong pod / not the pilot)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PodPatchCapability:
+    """The pilot's credential (§3.3): may patch images of its own pod only."""
+    pod_id: str
+
+
+class PayloadExecutor:
+    def __init__(self, pod_id: str, arena: SharedArena,
+                 proctable: ProcessTable, registry: ExecutableRegistry,
+                 mesh=None):
+        self.pod_id = pod_id
+        self.arena = arena
+        self.proctable = proctable
+        self.registry = registry
+        self.mesh = mesh
+        self.image: PayloadImage = PLACEHOLDER
+        self.exe: Executable | None = registry.pull(PLACEHOLDER, mesh)
+        self.state = UNBOUND
+        self.generation = 0               # bumped by every restart/patch
+        self._thread: threading.Thread | None = None
+        self._lock = threading.Lock()
+        self.last_bind_seconds: float | None = None
+        self.last_bind_cached: bool | None = None
+
+    # ------------------------------------------------------------------
+    # the unprivileged pod patch
+    # ------------------------------------------------------------------
+
+    def patch_image(self, cap: PodPatchCapability, image: PayloadImage):
+        if cap.pod_id != self.pod_id:
+            raise PermissionError_(
+                f"capability for pod {cap.pod_id!r} cannot patch {self.pod_id!r}")
+        t0 = time.monotonic()
+        exe = self.registry.pull(image, self.mesh)      # the image pull
+        with self._lock:
+            self.image = image
+            self.exe = exe
+            self.state = BOUND
+            self.generation += 1
+        self.last_bind_seconds = time.monotonic() - t0
+        self.last_bind_cached = exe.cached
+        return exe
+
+    # ------------------------------------------------------------------
+    # container start: wait-for-spec loop, then run the wrapper
+    # ------------------------------------------------------------------
+
+    def start(self, *, spec_timeout: float = 30.0):
+        """Start the payload container's entrypoint (async)."""
+        if self._thread is not None and self._thread.is_alive():
+            raise RuntimeError("payload container already running")
+        gen = self.generation
+
+        def entry():
+            spec = self.arena.wait_for_startup_spec(timeout=spec_timeout)
+            with self._lock:
+                if self.generation != gen:        # restarted while waiting
+                    return
+                exe = self.exe
+            if spec is None:
+                self.arena.report_exit(124, {"error": "startup spec timeout"})
+                self.state = EXITED
+                return
+            self.state = RUNNING
+            run_wrapper(self.arena, self.proctable, exe, spec)
+            self.state = EXITED
+
+        self._thread = threading.Thread(
+            target=entry, name=f"payload-container-{self.pod_id}", daemon=True)
+        self._thread.start()
+
+    def join(self, timeout: float | None = None) -> bool:
+        t = self._thread
+        if t is None:
+            return True
+        t.join(timeout)
+        return not t.is_alive()
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    # ------------------------------------------------------------------
+    # cleanup by restart (§3.6)
+    # ------------------------------------------------------------------
+
+    def reset(self, *, back_to_placeholder: bool = False):
+        """Kubernetes-runtime cleanup: kill the payload process tree, drop
+        payload device state, bump the generation."""
+        self.proctable.kill_uid(PAYLOAD_UID)
+        self.join(timeout=5.0)
+        with self._lock:
+            self.generation += 1
+            self._thread = None
+            if back_to_placeholder:
+                self.image = PLACEHOLDER
+                self.exe = self.registry.pull(PLACEHOLDER, self.mesh)
+                self.state = UNBOUND
+            else:
+                self.state = BOUND if self.exe is not None else UNBOUND
+        self.proctable.reap()

@@ -1,0 +1,230 @@
+"""Pilot — the pilot container's control process (paper Fig. 2, steps a-h).
+
+One Pilot owns one provisioned slice (pod).  Its lifecycle:
+
+  (a) start(): validate the slice, write pilot config into the private
+      arena area, install the placeholder payload container;
+  (b) match a task from the TaskRepo (lease);
+  (c) late-bind: patch the payload container's image (unprivileged, pod-
+      scoped capability), stage input files + env into the shared arena,
+      publish the startup spec — the payload container wakes and runs;
+  (d) monitor the payload via the shared process table; renew the lease;
+      heartbeat step times to the repo (straggler telemetry);
+  (e) collect exitcode.json + output files from the shared arena, report
+      the result (first-completion-wins);
+  (f) cleanup: executor reset (container restart) + shared-volume wipe +
+      orphan sweep;
+  (g) loop to (b) until drain/max_payloads/no work;
+  (h) terminate: destroy the arena, release the slice.
+
+A hard-fail flag (ClusterSim failure injection) aborts the thread without
+any cleanup — the lease-expiry path then re-queues the task elsewhere,
+which is the system's node-failure story.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+import uuid
+
+from repro.core.arena import SharedArena
+from repro.core.images import ExecutableRegistry
+from repro.core.latebind import PayloadExecutor, PodPatchCapability
+from repro.core.monitor import Monitor, MonitorLimits
+from repro.core.proctable import PAYLOAD_UID, PILOT_UID, ProcessTable
+from repro.core.taskrepo import TaskRepo, TaskResult
+
+
+@dataclasses.dataclass
+class PilotConfig:
+    max_payloads: int = 4
+    idle_grace: float = 2.0            # seconds with no matching work
+    monitor_interval: float = 0.05
+    lease_renew_interval: float = 1.0
+    spec_timeout: float = 30.0
+
+
+class HardFail(Exception):
+    """Injected node failure — the pilot vanishes without cleanup."""
+
+
+class Pilot:
+    def __init__(self, slice_, repo: TaskRepo, registry: ExecutableRegistry,
+                 config: PilotConfig | None = None, arena_root: str | None = None):
+        self.slice = slice_
+        self.repo = repo
+        self.registry = registry
+        self.config = config or PilotConfig()
+        self.pilot_id = f"pilot-{uuid.uuid4().hex[:8]}"
+        self.pod_id = f"pod-{self.pilot_id}"
+        self.arena = SharedArena(arena_root)
+        self.proctable = ProcessTable()
+        self.executor: PayloadExecutor | None = None
+        self._cap = PodPatchCapability(pod_id=self.pod_id)
+        self.fail_flag = threading.Event()          # cluster failure injection
+        self.drain_flag = threading.Event()         # graceful drain
+        self.state = "created"
+        self.payloads_run = 0
+        self.history: list[dict] = []
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------
+
+    def start_async(self) -> threading.Thread:
+        self._thread = threading.Thread(target=self.run, daemon=True,
+                                        name=self.pilot_id)
+        self._thread.start()
+        return self._thread
+
+    def join(self, timeout=None):
+        if self._thread:
+            self._thread.join(timeout)
+
+    def _check_fail(self):
+        if self.fail_flag.is_set():
+            raise HardFail(self.pilot_id)
+
+    # ------------------------------------------------------------------
+
+    def run(self):
+        try:
+            self._step_a_start()
+            idle_since = None
+            while self.payloads_run < self.config.max_payloads:
+                self._check_fail()
+                if self.drain_flag.is_set():
+                    break
+                task = self._step_b_fetch()
+                if task is None:
+                    idle_since = idle_since or time.monotonic()
+                    if time.monotonic() - idle_since > self.config.idle_grace:
+                        break
+                    time.sleep(0.02)
+                    continue
+                idle_since = None
+                self._run_payload(task)                 # steps (c)-(f)
+            self.state = "terminated"
+        except HardFail:
+            self.state = "failed"                        # no cleanup at all
+            return
+        finally:
+            if self.state != "failed":
+                self._step_h_terminate()
+
+    # ---- (a) ----------------------------------------------------------
+
+    def _step_a_start(self):
+        self.state = "starting"
+        pe = self.proctable.register(PILOT_UID, f"pilot:{self.pilot_id}")
+        self._pilot_entry = pe
+        # env validation: the slice must expose at least one device
+        if not getattr(self.slice, "devices", None):
+            raise RuntimeError("invalid slice: no devices")
+        with open(f"{self.arena.private}/pilot_config.json", "w") as f:
+            f.write('{"pilot_id": "%s", "pod": "%s"}' % (self.pilot_id, self.pod_id))
+        self.executor = PayloadExecutor(self.pod_id, self.arena,
+                                        self.proctable, self.registry,
+                                        mesh=getattr(self.slice, "mesh", None))
+        self.repo.heartbeat_pilot(self.pilot_id)
+        self.state = "idle"
+
+    # ---- (b) ----------------------------------------------------------
+
+    def _pilot_ad(self) -> dict:
+        return {
+            "pilot_id": self.pilot_id,
+            "n_devices": len(self.slice.devices),
+            "labels": dict(getattr(self.slice, "labels", {})),
+            "payloads_run": self.payloads_run,
+        }
+
+    def _step_b_fetch(self):
+        self.repo.heartbeat_pilot(self.pilot_id)
+        return self.repo.match(self._pilot_ad())
+
+    # ---- (c)-(f) --------------------------------------------------------
+
+    def _run_payload(self, task):
+        self.state = f"payload:{task.task_id}"
+        record = {"task_id": task.task_id, "image": task.image}
+        t_bind0 = time.monotonic()
+        try:
+            # (c) late bind: image patch + staging + startup spec
+            exe = self.executor.patch_image(self._cap, task.image)
+            for name, data in task.input_files.items():
+                self.arena.stage_file(name, data)
+            self.arena.write_env({**task.env, "pilot": self.pilot_id})
+            self.executor.start(spec_timeout=self.config.spec_timeout)
+            self.arena.publish_startup_spec({
+                "n_steps": task.n_steps,
+                "task_id": task.task_id,
+                **task.resume,
+            })
+            record["bind_seconds"] = self.executor.last_bind_seconds
+            record["bind_cached"] = self.executor.last_bind_cached
+
+            # (d) monitor until exit
+            monitor = Monitor(
+                self.proctable,
+                MonitorLimits(max_wall=task.max_wall),
+                fleet_median_fn=self.repo.fleet_median_step_time)
+            last_renew = 0.0
+            while self.executor.running:
+                self._check_fail()
+                monitor.scan()
+                now = time.monotonic()
+                if now - last_renew > self.config.lease_renew_interval:
+                    self.repo.renew(task.task_id, self.pilot_id)
+                    last_renew = now
+                # publish step telemetry for fleet-median straggler detection
+                for e in self.proctable.entries(uid=PAYLOAD_UID):
+                    if e.last_step_time is not None:
+                        self.repo.heartbeat_pilot(self.pilot_id, e.last_step_time)
+                time.sleep(self.config.monitor_interval)
+            self.executor.join(timeout=5.0)
+
+            # (e) collect exit + outputs
+            exit_info = self.arena.read_exit() or {"exitcode": 125,
+                                                   "telemetry": {}}
+            outputs = {}
+            for rel in self.arena.shared_files():
+                if rel.startswith("out/"):
+                    with open(f"{self.arena.shared}/{rel}", "rb") as f:
+                        outputs[rel] = f.read()
+            result = TaskResult(
+                task_id=task.task_id, pilot_id=self.pilot_id,
+                exitcode=exit_info["exitcode"],
+                telemetry=exit_info.get("telemetry", {}), outputs=outputs)
+            accepted = self.repo.complete(result)
+            if result.exitcode != 0:
+                self.repo.release(task, failed=True)
+            record["exitcode"] = result.exitcode
+            record["accepted"] = accepted
+            record["monitor_actions"] = [a.kind for a in monitor.actions]
+        except HardFail:
+            raise
+        except Exception as e:                           # noqa: BLE001
+            record["error"] = f"{type(e).__name__}: {e}"
+            self.repo.release(task, failed=True)
+        finally:
+            # (f) cleanup: container restart + volume wipe + orphan sweep
+            if self.executor is not None:
+                self.executor.reset(back_to_placeholder=False)
+            self.arena.wipe_shared()
+            self.payloads_run += 1
+            self.history.append(record)
+            self.state = "idle"
+
+    # ---- (h) ----------------------------------------------------------
+
+    def _step_h_terminate(self):
+        self.proctable.kill_uid(PAYLOAD_UID)
+        pe = getattr(self, "_pilot_entry", None)
+        if pe is not None:
+            self.proctable.mark_exited(pe.pid, 0)
+        self.arena.destroy()
+        release = getattr(self.slice, "release", None)
+        if release:
+            release()

@@ -1,0 +1,170 @@
+"""TaskRepo — the overlay task repository (HTCondor schedd analogue).
+
+Pilots fetch payloads by *matchmaking*: a pilot advertises its slice
+(devices, mesh shape, memory, labels) and the repo returns the
+highest-priority queued task whose requirements match (ClassAd-style
+predicates over the pilot ad).  Tasks are *leased*, not popped: a pilot must
+heartbeat the lease or it expires and the task is re-queued — the
+at-least-once delivery that makes dead pilots harmless (fault tolerance at
+1000-node scale).  First completion wins: duplicate results from speculative
+re-execution are dropped.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+from typing import Any, Callable
+
+Predicate = Callable[[dict], bool]
+
+
+@dataclasses.dataclass
+class PayloadTask:
+    task_id: int
+    image: Any                          # PayloadImage (core.images)
+    requirements: Predicate | None = None
+    priority: int = 0
+    n_steps: int = 20
+    max_wall: float = 120.0             # seconds
+    input_files: dict[str, bytes] = dataclasses.field(default_factory=dict)
+    env: dict = dataclasses.field(default_factory=dict)
+    resume: dict = dataclasses.field(default_factory=dict)  # ckpt info
+    attempts: int = 0
+    max_attempts: int = 3
+
+
+@dataclasses.dataclass
+class Lease:
+    task: PayloadTask
+    pilot_id: str
+    expires: float
+
+
+@dataclasses.dataclass
+class TaskResult:
+    task_id: int
+    pilot_id: str
+    exitcode: int
+    telemetry: dict
+    outputs: dict[str, bytes] = dataclasses.field(default_factory=dict)
+
+
+class TaskRepo:
+    def __init__(self, *, lease_ttl: float = 10.0):
+        self._lock = threading.Lock()
+        self._ids = itertools.count(1)
+        self._queue: list[PayloadTask] = []
+        self._leases: dict[int, Lease] = {}
+        self._results: dict[int, TaskResult] = {}
+        self._failed: dict[int, PayloadTask] = {}
+        self._pilot_heartbeats: dict[str, float] = {}
+        self._step_times: dict[str, float] = {}     # pilot_id -> EWMA
+        self.lease_ttl = lease_ttl
+
+    # ---- submission ---------------------------------------------------------
+
+    def submit(self, image, **kw) -> int:
+        with self._lock:
+            tid = next(self._ids)
+            self._queue.append(PayloadTask(task_id=tid, image=image, **kw))
+            self._queue.sort(key=lambda t: -t.priority)
+            return tid
+
+    # ---- matchmaking (step (b)) ---------------------------------------------
+
+    def match(self, pilot_ad: dict) -> PayloadTask | None:
+        """Lease the best matching task for this pilot ad, or None."""
+        self.reap_leases()
+        with self._lock:
+            for i, task in enumerate(self._queue):
+                if task.requirements is None or task.requirements(pilot_ad):
+                    self._queue.pop(i)
+                    task.attempts += 1
+                    self._leases[task.task_id] = Lease(
+                        task=task, pilot_id=pilot_ad["pilot_id"],
+                        expires=time.monotonic() + self.lease_ttl)
+                    return task
+            return None
+
+    def renew(self, task_id: int, pilot_id: str) -> bool:
+        with self._lock:
+            lease = self._leases.get(task_id)
+            if lease is None or lease.pilot_id != pilot_id:
+                return False
+            lease.expires = time.monotonic() + self.lease_ttl
+            return True
+
+    def heartbeat_pilot(self, pilot_id: str, step_time: float | None = None):
+        with self._lock:
+            self._pilot_heartbeats[pilot_id] = time.monotonic()
+            if step_time is not None:
+                prev = self._step_times.get(pilot_id, step_time)
+                self._step_times[pilot_id] = 0.7 * prev + 0.3 * step_time
+
+    def fleet_median_step_time(self) -> float | None:
+        with self._lock:
+            vals = sorted(self._step_times.values())
+        if not vals:
+            return None
+        return vals[len(vals) // 2]
+
+    # ---- completion (step (e)): first-wins ----------------------------------
+
+    def complete(self, result: TaskResult) -> bool:
+        """Returns True if this result was accepted (first completion wins;
+        speculative duplicates are dropped).  Non-zero exits are NOT stored —
+        the pilot follows up with release(task, failed=True) to retry/fail."""
+        with self._lock:
+            self._leases.pop(result.task_id, None)
+            if result.task_id in self._results:
+                return False                       # speculative duplicate
+            if result.exitcode == 0:
+                self._results[result.task_id] = result
+                return True
+            return False
+
+    def release(self, task: PayloadTask, *, failed: bool = False):
+        """Give a leased task back (pilot draining, or payload failure)."""
+        with self._lock:
+            self._leases.pop(task.task_id, None)
+            if task.task_id in self._results:
+                return
+            if failed and task.attempts >= task.max_attempts:
+                self._failed[task.task_id] = task
+                return
+            self._queue.append(task)
+            self._queue.sort(key=lambda t: -t.priority)
+
+    # ---- lease reaping (dead pilots) -----------------------------------------
+
+    def reap_leases(self) -> int:
+        now = time.monotonic()
+        with self._lock:
+            expired = [l for l in self._leases.values() if l.expires < now]
+            for l in expired:
+                del self._leases[l.task.task_id]
+        for l in expired:
+            self.release(l.task, failed=False)
+        return len(expired)
+
+    # ---- introspection --------------------------------------------------------
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "queued": len(self._queue),
+                "leased": len(self._leases),
+                "done": len(self._results),
+                "failed": len(self._failed),
+            }
+
+    def result(self, task_id: int) -> TaskResult | None:
+        with self._lock:
+            return self._results.get(task_id)
+
+    def drain_done(self) -> bool:
+        s = self.stats()
+        return s["queued"] == 0 and s["leased"] == 0

@@ -1,0 +1,127 @@
+"""PayloadWrapper — the startup wrapper inside the payload container (§3.5).
+
+Responsibilities, mirroring the paper:
+
+1. runs as fake-root inside the payload container: it may set up the
+   environment and register processes, but it *drops privileges* before
+   invoking user code — the user step loop only ever sees a
+   :class:`PayloadCapability` with the payload uid and the shared arena
+   path (never the pilot's private area or the pod-patch capability);
+2. sources the payload environment from the shared volume;
+3. runs the payload and relays its exit code + telemetry back through
+   ``exitcode.json`` on the shared volume (there is no parent-child process
+   relationship to propagate it through);
+4. heartbeats per step so the pilot's monitor can meter progress and
+   enforce limits at step boundaries.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.core.arena import SharedArena
+from repro.core.proctable import PAYLOAD_UID, ProcessTable
+
+
+@dataclasses.dataclass(frozen=True)
+class PayloadCapability:
+    """What user code gets after the privilege drop: its uid and the shared
+    volume path.  No pilot token, no private volume, no pod patch rights."""
+    uid: int
+    shared_dir: str
+
+
+def run_wrapper(arena: SharedArena, proctable: ProcessTable, exe, spec: dict):
+    """Execute one payload under the payload uid.  Never raises: every
+    outcome becomes an exit code in the arena (the paper's relay)."""
+    env = arena.read_env()
+    entry = proctable.register(PAYLOAD_UID, f"payload:{exe.image.arch}:{exe.image.mode}")
+    cap = PayloadCapability(uid=PAYLOAD_UID, shared_dir=arena.shared)
+    t_start = time.monotonic()
+    telemetry: dict = {"steps": 0, "mode": exe.image.mode,
+                       "arch": exe.image.arch, "step_times": []}
+    exitcode = 0
+    try:
+        key = jax.random.key(int(env.get("seed", 0)))
+        n_steps = int(spec.get("n_steps", 1))
+        if exe.image.mode == "noop":
+            exe.fn(exe.make_inputs(key))
+            telemetry["steps"] = 1
+        elif exe.image.mode == "train":
+            exitcode = _train_loop(exe, key, n_steps, entry, proctable,
+                                   telemetry, spec, arena, cap)
+        elif exe.image.mode == "prefill":
+            params, batch = exe.make_inputs(key)
+            t0 = time.monotonic()
+            logits, cache = exe.fn(params, batch)
+            jax.block_until_ready(logits)
+            dt = time.monotonic() - t0
+            proctable.heartbeat(entry.pid, dt)
+            telemetry["steps"] = 1
+            telemetry["step_times"].append(dt)
+            if not np.isfinite(np.asarray(logits, np.float32)).all():
+                exitcode = 3
+        else:                                           # decode
+            params, state = exe.make_inputs(key)
+            for i in range(n_steps):
+                if entry.stop.is_set():
+                    exitcode = 143                      # SIGTERM-by-pilot
+                    break
+                t0 = time.monotonic()
+                logits, state = exe.fn(params, state)
+                jax.block_until_ready(logits)
+                dt = time.monotonic() - t0
+                proctable.heartbeat(entry.pid, dt)
+                telemetry["steps"] = i + 1
+                telemetry["step_times"].append(dt)
+    except Exception as e:                               # noqa: BLE001
+        exitcode = 1
+        telemetry["error"] = f"{type(e).__name__}: {e}"
+    telemetry["wall"] = time.monotonic() - t_start
+    telemetry["step_times"] = telemetry["step_times"][-16:]
+    proctable.mark_exited(entry.pid, exitcode)
+    arena.report_exit(exitcode, telemetry)
+    return exitcode
+
+
+def _train_loop(exe, key, n_steps, entry, proctable, telemetry, spec, arena,
+                cap) -> int:
+    """Train payload: supports checkpoint-based resume (fault tolerance)."""
+    from repro.ckpt import checkpoint as ck
+
+    state, data = exe.make_inputs(key)
+    start_step = 0
+    ckpt_dir = spec.get("ckpt_dir")
+    ckpt_every = int(spec.get("ckpt_every", 0))
+    if ckpt_dir:
+        latest = ck.latest_step(ckpt_dir)
+        if latest is not None:
+            state = ck.restore(ckpt_dir, latest, state)
+            start_step = latest
+            telemetry["resumed_from"] = latest
+    losses = []
+    for i in range(start_step, n_steps):
+        if entry.stop.is_set():
+            return 143
+        t0 = time.monotonic()
+        batch = {k: jax.numpy.asarray(v) for k, v in data.batch_at(i).items()}
+        state, metrics = exe.fn(state, batch)
+        loss = float(metrics["loss"])
+        dt = time.monotonic() - t0
+        proctable.heartbeat(entry.pid, dt)
+        telemetry["steps"] = i + 1 - start_step
+        telemetry["step_times"].append(dt)
+        losses.append(loss)
+        if not np.isfinite(loss):
+            return 3
+        if ckpt_dir and ckpt_every and (i + 1) % ckpt_every == 0:
+            ck.save(ckpt_dir, i + 1, state)
+    telemetry["first_loss"] = losses[0] if losses else None
+    telemetry["last_loss"] = losses[-1] if losses else None
+    if ckpt_dir and losses:
+        ck.save(ckpt_dir, n_steps, state)
+    return 0

@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticConfig, SyntheticLM, device_put_batch
+
+__all__ = ["SyntheticConfig", "SyntheticLM", "device_put_batch"]

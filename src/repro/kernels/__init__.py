@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the compute hot-spots (validated in interpret mode
+# on CPU; selected via ArchConfig attn_impl / ssm_impl / moe_impl / norm_impl):
+#   flash_attention  — blocked causal/GQA/SWA attention (train/prefill)
+#   decode_attention — flash-decode split-K over the KV cache (serve)
+#   ssd_scan         — Mamba-2 chunked state-space scan
+#   grouped_matmul   — MoE ragged expert matmul (dense-padded tiling)
+#   rmsnorm          — fused residual+RMSNorm (memory-bound fusion)

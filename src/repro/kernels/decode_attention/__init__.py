@@ -1,0 +1,1 @@
+from repro.kernels.decode_attention.ops import decode_attention  # noqa: F401

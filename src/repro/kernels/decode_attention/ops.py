@@ -1,0 +1,33 @@
+"""jit'd public wrapper for the flash-decode Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def decode_attention(q, k_cache, v_cache, cache_len, *, block_t=128,
+                     interpret=None):
+    """q: (B,H,Dh) one new token per sequence; caches: (B,T,K,Dh);
+    cache_len: scalar or (B,) valid-entry count.  Returns (B,H,Dh)."""
+    B, H, Dh = q.shape
+    T, K = k_cache.shape[1], k_cache.shape[2]
+    assert H % K == 0, (H, K)
+    G = H // K
+    if interpret is None:
+        interpret = not _on_tpu()
+    qg = q.reshape(B, K, G, Dh)
+    kg = k_cache.transpose(0, 2, 1, 3)                        # (B,K,T,Dh)
+    vg = v_cache.transpose(0, 2, 1, 3)
+    o = decode_attention_kernel(qg, kg, vg, cache_len, block_t=block_t,
+                                interpret=interpret)
+    return o.reshape(B, H, Dh)

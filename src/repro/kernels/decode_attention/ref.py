@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len):
+    """q: (B,H,Dh); caches: (B,T,K,Dh); cache_len: scalar or (B,) valid count.
+    Returns (B,H,Dh) f32-accurate attention output in q.dtype."""
+    B, H, Dh = q.shape
+    T, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    qf = q.astype(jnp.float32).reshape(B, K, G, Dh)
+    s = jnp.einsum("bkgd,btkd->bkgt", qf, k_cache.astype(jnp.float32))
+    s = s / np.sqrt(Dh)
+    cl = jnp.broadcast_to(jnp.asarray(cache_len), (B,))
+    valid = jnp.arange(T)[None] < cl[:, None]                  # (B,T)
+    s = jnp.where(valid[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, Dh).astype(q.dtype)

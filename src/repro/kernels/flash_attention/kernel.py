@@ -1,0 +1,126 @@
+"""Blocked flash attention for TPU (pl.pallas_call + BlockSpec VMEM tiling).
+
+Layout: q is pre-reshaped to (B, K, G, S, Dh) and k/v to (B, K, T, Dh) so GQA
+head grouping is a plain block dimension.  Grid = (B, K, nQ, nK); the last
+grid axis iterates sequentially on TPU, so the online-softmax state
+(m, l, acc) lives in VMEM scratch and is carried across kv blocks of one
+(b, kv-head, q-block) cell, exactly like the reference TPU flash kernel.
+
+Causal / sliding-window masking is applied per (q,k) block; blocks that are
+entirely masked skip their matmuls via @pl.when (the kv grid is still full
+size — the structural FLOP skip happens in ops.py by clamping nK per q-block
+when the mask is causal, see `_kv_blocks_for`).
+
+MXU alignment: block_q and block_k default to 128 (the MXU systolic dim);
+Dh (64..256 for all assigned archs) rides along whole.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+                 scale, causal, window, block_q, block_k, n_kv, t_total,
+                 q_offset):
+    """One (b, kv-head, qi, ki) grid cell."""
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    t_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    valid = t_pos < t_total
+    if causal:
+        valid &= t_pos <= q_pos
+    if window is not None:
+        valid &= t_pos > q_pos - window
+
+    # any-valid test is cheap and static-shaped; fully-masked blocks skip
+    # the matmuls entirely.
+    @pl.when(jnp.any(valid))
+    def _compute():
+        q = q_ref[0, 0]                       # (G, block_q, Dh)
+        k = k_ref[0, 0]                       # (block_k, Dh)
+        v = v_ref[0, 0]                       # (block_k, Dh)
+        s = jax.lax.dot_general(
+            q.astype(jnp.bfloat16), k.astype(jnp.bfloat16),
+            (((2,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (G, bq, bk)
+        s = jnp.where(valid[None], s, NEG_INF)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * alpha + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p.astype(jnp.bfloat16), v.astype(jnp.bfloat16),
+            (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (G, bq, Dh)
+        acc_sc[...] = acc_sc[...] * alpha[..., None] + pv
+        m_sc[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0, 0] = (acc_sc[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal=True, window=None, q_offset=0,
+                           block_q=128, block_k=128, interpret=False,
+                           t_total=None):
+    """q: (B,K,G,S,Dh); k,v: (B,K,T,Dh) -> (B,K,G,S,Dh).
+
+    t_total: count of REAL kv rows (<= T) when k/v carry block padding —
+    padded rows must not receive softmax mass in non-causal attention.
+    """
+    B, K, G, S, Dh = q.shape
+    T = k.shape[2]
+    t_total = T if t_total is None else t_total
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    nq = pl.cdiv(S, block_q)
+    nk = pl.cdiv(T, block_k)
+    scale = 1.0 / (Dh ** 0.5)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_kv=nk, t_total=t_total,
+        q_offset=q_offset)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, K, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, block_q, Dh),
+                         lambda b, h, qi, ki: (b, h, 0, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, Dh),
+                         lambda b, h, qi, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, Dh),
+                         lambda b, h, qi, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, block_q, Dh),
+                               lambda b, h, qi, ki: (b, h, 0, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            # (G, block_q) running max / denom + (G, block_q, Dh) accumulator
+            pltpu.VMEM((G, block_q), jnp.float32),
+            pltpu.VMEM((G, block_q), jnp.float32),
+            pltpu.VMEM((G, block_q, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for blocked causal/GQA/SWA flash attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, q_offset=0):
+    """Dense reference attention.
+
+    q: (B,S,H,Dh); k,v: (B,T,K,Dh) with H = G*K (GQA).  All math f32.
+    Returns (B,S,H,Dh) in q.dtype.
+    """
+    B, S, H, Dh = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qf = q.astype(jnp.float32).reshape(B, S, K, G, Dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bkgst", qf, kf) / np.sqrt(Dh)
+    q_pos = q_offset + jnp.arange(S)
+    t_pos = jnp.arange(T)
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= t_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= t_pos[None, :] > (q_pos[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, vf)
+    return o.reshape(B, S, H, Dh).astype(q.dtype)

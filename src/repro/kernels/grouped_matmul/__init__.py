@@ -1,0 +1,1 @@
+from repro.kernels.grouped_matmul.ops import grouped_matmul  # noqa: F401

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the MoE grouped (ragged expert) matmul."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def row_expert_ids(group_sizes, n_rows: int):
+    """group_sizes: (E,) -> (n_rows,) expert id per row (sorted layout)."""
+    ends = jnp.cumsum(group_sizes)
+    return jnp.searchsorted(ends, jnp.arange(n_rows), side="right")
+
+
+def grouped_matmul_ref(x, w, group_sizes):
+    """x: (T,D) rows sorted by expert; w: (E,D,F); group_sizes: (E,) summing
+    to <= T (tail rows belong to no expert -> zero output).
+    Returns (T,F) f32."""
+    T = x.shape[0]
+    E = w.shape[0]
+    gid = row_expert_ids(group_sizes, T)
+    valid = gid < E
+    gid_c = jnp.where(valid, gid, 0)
+    wg = jnp.take(w, gid_c, axis=0)                            # (T,D,F)
+    y = jnp.einsum("td,tdf->tf", x.astype(jnp.float32),
+                   wg.astype(jnp.float32))
+    return y * valid[:, None]

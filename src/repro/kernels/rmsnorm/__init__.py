@@ -1,0 +1,1 @@
+from repro.kernels.rmsnorm.ops import rmsnorm_fused  # noqa: F401

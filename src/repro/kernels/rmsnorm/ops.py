@@ -1,0 +1,37 @@
+"""jit'd public wrapper for the fused RMSNorm Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_r", "interpret"))
+def rmsnorm_fused(x, scale, residual=None, *, eps=1e-5, block_r=256,
+                  interpret=None):
+    """x: (..., D); scale: (D,); optional residual of x's shape.
+    Returns (normed, residual_out), both shaped like x."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    shape = x.shape
+    D = shape[-1]
+    R = 1
+    for s in shape[:-1]:
+        R *= s
+    x2 = x.reshape(R, D)
+    r2 = residual.reshape(R, D) if residual is not None else None
+    block = block_r
+    while R % block:
+        block //= 2
+    block = max(block, 1)
+    o, res = rmsnorm_kernel(x2, scale, r2, eps=eps, block_r=block,
+                            interpret=interpret)
+    return o.reshape(shape), res.reshape(shape)

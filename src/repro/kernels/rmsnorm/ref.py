@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for fused residual-add + RMSNorm."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, scale, *, residual=None, eps=1e-5):
+    """x: (..., D); scale: (D,) storing (gamma - 1) like models/layers.py.
+    Returns (normed, residual_out) where residual_out = x + residual (the
+    pre-norm skip) — both in x.dtype."""
+    if residual is not None:
+        x = x + residual
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype), x

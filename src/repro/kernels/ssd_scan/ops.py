@@ -1,0 +1,44 @@
+"""jit'd public wrapper for the SSD-scan Pallas kernel.
+
+Model layout (models/ssm.py) is x: (b,S,H,P), dt: (b,S,H), B/C: (b,S,G,N);
+the kernel wants the head axis outermost and the sequence padded to the
+chunk size.  Padding uses dt=0 (decay exp(0)=1, zero state contribution) so
+the carried state is exact regardless of padding.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B, C, *, chunk=128, interpret=None):
+    """x: (b,S,H,P); dt: (b,S,H); A: (H,); B,C: (b,S,G,N).
+    Returns (y (b,S,H,P), final_state (b,H,N,P) f32)."""
+    b, S, H, P = x.shape
+    if interpret is None:
+        interpret = not _on_tpu()
+    chunk = min(chunk, S) if S % chunk else chunk
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    xk = x.transpose(0, 2, 1, 3)                   # (b,H,S,P)
+    dtk = dt.transpose(0, 2, 1)                    # (b,H,S)
+    Bk = B.transpose(0, 2, 1, 3)                   # (b,G,S,N)
+    Ck = C.transpose(0, 2, 1, 3)
+    y, s_final = ssd_scan_kernel(xk, dtk, A, Bk, Ck, chunk=chunk,
+                                 interpret=interpret)
+    y = y.transpose(0, 2, 1, 3)
+    return (y[:, :S] if pad else y), s_final

@@ -1,0 +1,41 @@
+"""Sequential-recurrence oracle for the Mamba-2 SSD scan.
+
+Deliberately the *naive* per-token recurrence (lax.scan over S) — an
+independent formulation from both the chunked jnp path (models/ssm.py) and
+the Pallas kernel, so agreement between all three is meaningful.
+
+    state_t = exp(dt_t * A_h) * state_{t-1} + dt_t * B_t (outer) x_t
+    y_t     = C_t . state_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, A, B, C):
+    """x: (b,S,H,P); dt: (b,S,H) post-softplus; A: (H,) negative;
+    B, C: (b,S,G,N) with H % G == 0.
+    Returns (y (b,S,H,P) f32, final_state (b,H,N,P) f32)."""
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)        # (b,S,H,N)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp                                  # (b,H,*) each
+        decay = jnp.exp(dtt * A.astype(jnp.float32))           # (b,H)
+        upd = jnp.einsum("bh,bhn,bhp->bhnp", dtt, Bt, xt)
+        state = decay[..., None, None] * state + upd
+        y = jnp.einsum("bhn,bhnp->bhp", Ct, state)
+        return state, y
+
+    init = jnp.zeros((b, H, N, P), jnp.float32)
+    xs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+          Bh.transpose(1, 0, 2, 3), Ch.transpose(1, 0, 2, 3))
+    state, ys = jax.lax.scan(step, init, xs)
+    return ys.transpose(1, 0, 2, 3), state

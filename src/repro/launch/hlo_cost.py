@@ -1,0 +1,312 @@
+"""Trip-count-aware cost model over compiled HLO text.
+
+XLA:CPU's ``compiled.cost_analysis()`` counts a while-loop (lax.scan) body
+ONCE, not x trip-count — so every scanned-layer model under-reports FLOPs,
+bytes, and (in a naive parse) collectives by the number of layer groups /
+sequence chunks.  This module re-derives the three roofline inputs from the
+post-SPMD HLO text with loop multipliers:
+
+* Execution walk starts at ENTRY; a ``while`` multiplies its body's costs by
+  the trip count (parsed from the loop-condition's comparison constant — jax
+  scans always lower to a 0..N counter loop).
+* ``fusion``/``call`` descend into the called computation (costs counted per
+  call site, matching execution semantics).
+* FLOPs: ``dot`` = 2 x numel(result) x prod(contracting dims); elementwise /
+  reduce = numel(result); transcendentals count 1/element.
+* Bytes, two conventions reported side by side:
+    - ``bytes`` (unfused): operands + result per instruction — what XLA:CPU's
+      own cost analysis would report, an upper bound;
+    - ``bytes_fused`` (TPU fusion model): elementwise / broadcast / reshape /
+      convert chains are assumed fused into their producers (ride in
+      registers/VMEM); matmul IO, reductions' outputs, layout-changing ops
+      (transpose/gather/scatter/concat), cache updates, and collectives
+      count.  This is the §Roofline memory term.
+  Special cases in both: dynamic-slice reads only the slice (result bytes),
+  not the full xs; dynamic-update-slice touches 2 x update bytes, not the
+  full buffer.  Bookkeeping ops (parameter/constant/tuple/get-tuple-element/
+  bitcast) are free.
+* Collectives: the byte conventions of ``hlo_stats`` (all-reduce 2x result,
+  reduce-scatter operand, others result) x loop multiplier.
+
+Everything is per-device (the HLO is one SPMD program), so term_seconds =
+cost / per-chip peak directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+from repro.launch.hlo_stats import COLLECTIVES, _DTYPE_BYTES
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*(.+?)\s*{\s*$")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s+=\s+(.*)$")
+_SHAPE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_CALL_ATTR = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_ATTR = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "partition-id", "replica-id", "opt-barrier",
+             "iota", "custom-call"}
+_TRANSCENDENTAL = {"exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                   "cosine", "sine", "logistic", "exponential-minus-one"}
+
+
+def _type_info(type_str: str):
+    """-> (bytes, numel) over all shapes in a (possibly tuple) type."""
+    total_b, total_n = 0, 0
+    for m in _SHAPE.finditer(type_str):
+        dt, dims = m.groups()
+        sz = _DTYPE_BYTES.get(dt)
+        if sz is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total_b += n * sz
+        total_n += n
+    return total_b, total_n
+
+
+def _split_type_op(rhs: str):
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                rest = rhs[i + 1:].strip()
+                return rhs[: i + 1], rest
+        return None
+    parts = rhs.split(None, 1)
+    if len(parts) != 2:
+        return None
+    return parts[0], parts[1]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rhs: str
+    rest: str           # rhs after the type (opcode + operands + attrs)
+
+
+def parse_module(hlo_text: str) -> dict[str, list[Instr]]:
+    comps: dict[str, list[Instr]] = {}
+    entry: str | None = None
+    cur: list[Instr] | None = None
+    for line in hlo_text.splitlines():
+        h = _COMP_HDR.match(line.strip())
+        if h:
+            name = h.group(2)
+            comps[name] = []
+            cur = comps[name]
+            if h.group(1):
+                entry = name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        st = _split_type_op(rhs)
+        if st is None:
+            continue
+        type_str, rest = st
+        opcode = rest.split("(", 1)[0].strip()
+        cur.append(Instr(name, type_str, opcode, rhs, rest))
+    comps["__entry__"] = comps.get(entry, [])
+    return comps
+
+
+def _trip_count(comps, cond_name: str) -> int:
+    """jax scans lower to `compare(i, constant(N)), direction=LT` loops."""
+    best = 1
+    for ins in comps.get(cond_name, []):
+        for m in _CONST_INT.finditer(ins.rhs):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(ins: Instr, types: dict[str, str]) -> float:
+    _, out_n = _type_info(ins.type_str)
+    ops = _OPERAND.findall(ins.rest.split(")", 1)[0])
+    lhs_t = types.get(ops[0], "") if ops else ""
+    cm = _CONTRACT.search(ins.rest)
+    contract = 1
+    if cm and lhs_t:
+        dims_str = _SHAPE.search(lhs_t)
+        if dims_str:
+            shape = [int(d) for d in dims_str.group(2).split(",") if d]
+            for ci in (int(x) for x in cm.group(1).split(",") if x):
+                if ci < len(shape):
+                    contract *= shape[ci]
+    return 2.0 * out_n * contract
+
+
+def _operand_bytes(ins: Instr, types: dict[str, str]) -> int:
+    args = ins.rest.split("(", 1)[1] if "(" in ins.rest else ""
+    total = 0
+    for m in _OPERAND.finditer(args.split(")")[0]):
+        t = types.get(m.group(1))
+        if t is not None:
+            total += _type_info(t)[0]
+    return total
+
+
+@dataclasses.dataclass
+class ModuleCost:
+    flops: float = 0.0
+    bytes: float = 0.0            # unfused: every op's operands+results
+    bytes_fused: float = 0.0      # TPU-fusion model: see module docstring
+    transcendentals: float = 0.0
+    collective_bytes: dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    collective_counts: dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    # (opcode, type_str, trips) -> total weighted bytes; top contributors
+    collective_detail: dict[tuple, float] = dataclasses.field(
+        default_factory=dict)
+    # (opcode, type_str) -> total fused bytes (diagnostic breakdown)
+    bytes_detail: dict[tuple, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def top_collectives(self, k: int = 12) -> list[tuple]:
+        return sorted(self.collective_detail.items(),
+                      key=lambda kv: -kv[1])[:k]
+
+    def top_bytes(self, k: int = 12) -> list[tuple]:
+        return sorted(self.bytes_detail.items(), key=lambda kv: -kv[1])[:k]
+
+
+def module_cost(hlo_text: str, max_depth: int = 64) -> ModuleCost:
+    comps = parse_module(hlo_text)
+    cost = ModuleCost()
+
+    def fused(ins, base, nbytes):
+        cost.bytes_fused += nbytes
+        key = (base, ins.type_str.split("{")[0])
+        cost.bytes_detail[key] = cost.bytes_detail.get(key, 0.0) + nbytes
+
+    def walk(comp_name: str, mult: float, depth: int):
+        if depth > max_depth:
+            return
+        instrs = comps.get(comp_name, [])
+        types = {i.name: i.type_str for i in instrs}
+        for ins in instrs:
+            op = ins.opcode
+            base = op.split(".")[0]
+            # ---- control flow ------------------------------------------
+            if base == "while":
+                cond = _COND_ATTR.search(ins.rest)
+                body = re.search(r"body=%?([\w.\-]+)", ins.rest)
+                trips = _trip_count(comps, cond.group(1)) if cond else 1
+                if body:
+                    walk(body.group(1), mult * trips, depth + 1)
+                continue
+            if base == "conditional":
+                bm = _BRANCHES.search(ins.rest)
+                if bm:
+                    for b in _OPERAND.findall(bm.group(1)):
+                        walk(b, mult, depth + 1)
+                continue
+            if base in ("fusion", "call", "async-start"):
+                cm = _CALL_ATTR.search(ins.rest)
+                if cm:
+                    walk(cm.group(1), mult, depth + 1)
+                continue
+            # ---- collectives --------------------------------------------
+            hit = None
+            for c in COLLECTIVES:
+                if base == c or base == c + "-start":
+                    hit = c
+                    break
+            if hit is not None:
+                rb = _type_info(ins.type_str)[0]
+                if base.endswith("-start"):
+                    rb = rb / 2
+                if hit == "all-reduce":
+                    nb = 2.0 * rb
+                elif hit == "reduce-scatter":
+                    ob = _operand_bytes(ins, types)
+                    nb = float(ob or rb)
+                else:
+                    nb = float(rb)
+                cost.collective_bytes[hit] = (
+                    cost.collective_bytes.get(hit, 0.0) + mult * nb)
+                cost.collective_counts[hit] = (
+                    cost.collective_counts.get(hit, 0.0) + mult)
+                key = (hit, ins.type_str.split("{")[0], int(mult))
+                cost.collective_detail[key] = (
+                    cost.collective_detail.get(key, 0.0) + mult * nb)
+                cost.bytes += mult * 2 * rb       # they also touch HBM
+                fused(ins, hit, mult * 2 * rb)
+                continue
+            # ---- compute / data movement ---------------------------------
+            if base in _FREE_OPS:
+                continue
+            rb, rn = _type_info(ins.type_str)
+            if base == "dot":
+                cost.flops += mult * _dot_flops(ins, types)
+                io = _operand_bytes(ins, types) + rb
+                cost.bytes += mult * io
+                fused(ins, base, mult * io)       # matmul IO always real
+            elif base == "convolution":
+                # not used by these models; treat as elementwise fallback
+                cost.flops += mult * rn
+                io = _operand_bytes(ins, types) + rb
+                cost.bytes += mult * io
+                fused(ins, base, mult * io)
+            elif base == "dynamic-slice":
+                cost.bytes += mult * rb
+                fused(ins, base, mult * rb)
+            elif base == "dynamic-update-slice":
+                args = ins.rest.split("(", 1)[1].split(")")[0]
+                ops = _OPERAND.findall(args)
+                upd = _type_info(types.get(ops[1], ""))[0] if len(ops) > 1 else rb
+                cost.bytes += mult * 2 * upd
+                fused(ins, base, mult * 2 * upd)
+            elif base in ("broadcast", "reshape", "slice", "convert",
+                          "reverse", "transpose", "copy"):
+                # fuse away on TPU: elementwise-adjacent data movement and
+                # layout transposes/copies are layout-assignment artifacts of
+                # the CPU lowering (e.g. bf16 weights get convert+transpose+
+                # copy'd to f32 before every CPU dot — TPU MXUs consume bf16
+                # in place).  Counted in the unfused convention only.
+                cost.bytes += mult * rb * (2 if base in ("transpose", "copy")
+                                           else 1)
+            elif base in ("concatenate", "pad", "gather", "scatter",
+                          "select-and-scatter", "sort"):
+                f = 2 if base in ("gather", "scatter", "sort") else 1
+                cost.bytes += mult * rb * f
+                fused(ins, base, mult * rb * f)    # these do materialize
+            elif base == "reduce" or base == "reduce-window":
+                cost.flops += mult * rn
+                cost.bytes += mult * (_operand_bytes(ins, types) + rb)
+                fused(ins, base, mult * rb)       # input fused into producer
+            else:
+                # elementwise / compare / select / rng / ...
+                if base in _TRANSCENDENTAL:
+                    cost.transcendentals += mult * rn
+                cost.flops += mult * rn
+                cost.bytes += mult * (_operand_bytes(ins, types) + rb)
+                # fused model: elementwise chains ride in registers/VMEM
+        return
+
+    walk("__entry__", 1.0, 0)
+    return cost

@@ -1,0 +1,6 @@
+"""Target-hardware constants (TPU v5e) used by the roofline analysis."""
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per ICI link (~50 GB/s/link)
+HBM_BYTES = 16 * 2**30     # 16 GiB HBM per chip

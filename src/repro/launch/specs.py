@@ -1,0 +1,61 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every step-function input.
+
+The dry-run lowers ``step(*input_specs(...))`` — weak-type-correct, shardable,
+zero device allocation.  Train steps take (state, batch); prefill takes
+(params, batch); decode takes (params, decode_state).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models.api import build_model, init_decode_state
+from repro.optim.adamw import init_opt_state
+
+
+def param_specs(cfg: ArchConfig, *, dtype=None):
+    bundle = build_model(cfg)
+    specs = jax.eval_shape(lambda: bundle.init(jax.random.key(0)))
+    if dtype is not None:
+        specs = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, dtype if jnp.issubdtype(s.dtype, jnp.floating) else s.dtype),
+            specs)
+    return specs
+
+
+def train_state_specs(cfg: ArchConfig):
+    """{"params", "opt": {"m","v","step"}} as ShapeDtypeStructs (f32 master)."""
+    ps = param_specs(cfg)
+    opt = jax.eval_shape(functools.partial(init_opt_state), ps)
+    return {"params": ps, "opt": opt}
+
+
+def decode_state_specs(cfg: ArchConfig, shape: ShapeSpec, *, dtype=jnp.bfloat16):
+    return jax.eval_shape(functools.partial(
+        init_decode_state, cfg, shape.global_batch, shape.seq_len, dtype=dtype))
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec, *, with_targets=True,
+                compute=jnp.bfloat16):
+    bundle = build_model(cfg)
+    if with_targets:
+        return bundle.train_batch_specs(shape, compute)
+    return bundle.prefill_batch_specs(shape, compute)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, mode: str):
+    """The lower() argument tuple for the given step kind."""
+    if mode == "train":
+        return (train_state_specs(cfg), batch_specs(cfg, shape))
+    if mode == "prefill":
+        return (param_specs(cfg, dtype=jnp.bfloat16),
+                batch_specs(cfg, shape, with_targets=False))
+    if mode == "decode":
+        return (param_specs(cfg, dtype=jnp.bfloat16),
+                decode_state_specs(cfg, shape))
+    raise ValueError(f"unknown mode {mode!r}")

@@ -1,0 +1,58 @@
+"""Step functions the pilot system compiles: train_step / prefill / serve.
+
+These are the "container images" of the late-binding analogy: a
+(cfg x shape x mesh x step-kind) tuple keys the ExecutableRegistry compile
+cache, and `PayloadExecutor.bind()` installs the compiled artifact on an
+already-held slice.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import build_model
+from repro.optim.adamw import OptimConfig, adamw_update, init_opt_state
+
+
+def make_train_step(cfg, oc: OptimConfig | None = None,
+                    grad_transform=None):
+    """(state, batch) -> (state, metrics); state = {"params", "opt"}."""
+    oc = oc or OptimConfig()
+    bundle = build_model(cfg)
+
+    def train_step(state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            bundle.loss, has_aux=True)(state["params"], batch)
+        new_p, new_opt, om = adamw_update(state["params"], grads,
+                                          state["opt"], oc,
+                                          grad_transform=grad_transform)
+        return ({"params": new_p, "opt": new_opt},
+                {"loss": loss, **metrics, **om})
+
+    return train_step
+
+
+def make_prefill_step(cfg):
+    bundle = build_model(cfg)
+
+    def prefill_step(params, batch):
+        return bundle.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(cfg):
+    """One decode step: (params, state) -> (logits, state)."""
+    bundle = build_model(cfg)
+
+    def serve_step(params, state):
+        return bundle.decode(params, state)
+
+    return serve_step
+
+
+def init_train_state(cfg, key):
+    bundle = build_model(cfg)
+    params = bundle.init(key)
+    return {"params": params, "opt": init_opt_state(params)}

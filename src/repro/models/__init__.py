@@ -1,0 +1,3 @@
+from repro.models.api import ModelBundle, build_model, init_decode_state
+
+__all__ = ["ModelBundle", "build_model", "init_decode_state"]

@@ -1,0 +1,152 @@
+"""Public model API: one entry point per (arch family x mode).
+
+``build_model(cfg)`` returns a :class:`ModelBundle` whose members are pure
+functions suitable for jit / pjit / AOT lowering:
+
+* ``init(key)``                      -> params
+* ``loss(params, batch)``            -> (scalar, metrics)        [train]
+* ``prefill(params, batch)``         -> (last logits, cache)     [prefill]
+* ``decode(params, state)``          -> (logits, new state)      [decode]
+* ``train_batch_specs(shape)``       -> ShapeDtypeStruct pytree
+* ``decode_state_specs(shape)``      -> ShapeDtypeStruct pytree
+
+The bundle is exactly what the pilot system's :class:`PayloadImage` compiles
+when a payload is late-bound onto a slice.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as tf
+
+
+def _text_len(cfg: ArchConfig, seq_len: int) -> int:
+    """VLM stubs spend part of the assigned seq budget on patch embeds."""
+    if cfg.family == "vlm":
+        return seq_len - cfg.frontend_tokens
+    return seq_len
+
+
+def _has_frontend(cfg: ArchConfig) -> bool:
+    return cfg.family in ("vlm", "audio")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ArchConfig
+    init: Callable[[Any], Any]
+    loss: Callable[[Any, Any], Any]
+    prefill: Callable[[Any, Any], Any]
+    decode: Callable[[Any, Any], Any]
+
+    # ---- shape specs (ShapeDtypeStruct stand-ins; no allocation) ----------
+
+    def train_batch_specs(self, shape: ShapeSpec, compute=jnp.bfloat16):
+        cfg = self.cfg
+        B = shape.global_batch
+        S = _text_len(cfg, shape.seq_len)
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "targets": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        if _has_frontend(cfg):
+            specs["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_tokens, cfg.d_model), compute)
+        return specs
+
+    def prefill_batch_specs(self, shape: ShapeSpec, compute=jnp.bfloat16):
+        return {k: v for k, v in self.train_batch_specs(shape, compute).items()
+                if k != "targets"}
+
+    def decode_state_specs(self, shape: ShapeSpec, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        state = jax.eval_shape(
+            functools.partial(init_decode_state, cfg, B, S, dtype=dtype))
+        return state
+
+    def param_specs(self):
+        return jax.eval_shape(lambda: self.init(jax.random.key(0)))
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int, *,
+                      dtype=jnp.bfloat16):
+    """Concrete zero decode state (also used via eval_shape for specs)."""
+    if cfg.is_encdec:
+        cache = encdec_mod.init_encdec_cache(cfg, batch, max_len, dtype)
+    else:
+        cache = tf.init_cache(cfg, batch, max_len, dtype)
+    return {
+        "cache": cache,
+        "token": jnp.zeros((batch, 1), jnp.int32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def build_model(cfg: ArchConfig, compute=jnp.bfloat16) -> ModelBundle:
+    if cfg.is_encdec:
+        return _build_encdec(cfg, compute)
+    return _build_lm(cfg, compute)
+
+
+def _build_lm(cfg, compute):
+    def init(key):
+        return tf.init_lm_params(cfg, key)
+
+    def loss(params, batch):
+        return tf.lm_loss(params, cfg, batch["tokens"], batch["targets"],
+                          extra_embeds=batch.get("frontend"), compute=compute)
+
+    def prefill(params, batch):
+        B = batch["tokens"].shape[0]
+        S = batch["tokens"].shape[1] + (
+            cfg.frontend_tokens if _has_frontend(cfg) else 0)
+        cache = tf.init_cache(cfg, B, S, dtype=compute)
+        return tf.lm_prefill(params, cfg, batch["tokens"], cache,
+                             extra_embeds=batch.get("frontend"),
+                             compute=compute)
+
+    def decode(params, state):
+        logits, cache = tf.lm_decode(params, cfg, state["token"],
+                                     state["cache"], state["pos"],
+                                     compute=compute)
+        token = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return logits, {"cache": cache, "token": token,
+                        "pos": state["pos"] + 1}
+
+    return ModelBundle(cfg, init, loss, prefill, decode)
+
+
+def _build_encdec(cfg, compute):
+    def init(key):
+        return encdec_mod.init_encdec_params(cfg, key)
+
+    def loss(params, batch):
+        return encdec_mod.encdec_loss(params, cfg, batch["frontend"],
+                                      batch["tokens"], batch["targets"],
+                                      compute=compute)
+
+    def prefill(params, batch):
+        B, S = batch["tokens"].shape
+        cache = encdec_mod.init_encdec_cache(cfg, B, S, dtype=compute)
+        return encdec_mod.encdec_prefill(params, cfg, batch["frontend"],
+                                         batch["tokens"], cache,
+                                         compute=compute)
+
+    def decode(params, state):
+        logits, cache = encdec_mod.encdec_decode(params, cfg, state["token"],
+                                                 state["cache"], state["pos"],
+                                                 compute=compute)
+        token = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return logits, {"cache": cache, "token": token,
+                        "pos": state["pos"] + 1}
+
+    return ModelBundle(cfg, init, loss, prefill, decode)

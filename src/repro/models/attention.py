@@ -1,0 +1,480 @@
+"""Attention: GQA/MQA, sliding-window, MLA; train/prefill and decode paths.
+
+Three implementations of the core attend step (selected by cfg.attn_impl):
+
+* ``chunked``  — pure-JAX flash-style online softmax, lax.scan over KV chunks.
+  Memory O(S·d + chunk) instead of O(S²); FLOPs equal to full attention
+  (every (q,kv) chunk pair is computed, masked ones included).  This is the
+  paper-faithful baseline path used by the dry-run.
+* ``causal_blocked`` — beyond-paper compute optimization: static triangular
+  iteration over (q-block, kv-block) pairs skips fully-masked kv blocks,
+  halving causal-attention FLOPs (and bounding SWA to O(S·window)).
+* ``pallas`` — TPU Pallas kernel (repro.kernels.flash_attention); validated
+  in interpret mode on CPU, used on real TPU hardware.
+
+Decode attends a single new token against a KV cache.  For ``long_500k``
+(batch=1) the cache sequence dim is sharded over the "model" axis and the
+softmax reductions become XLA-SPMD all-reduces — exactly flash-decode
+split-K, derived by the partitioner instead of hand-written NCCL.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import apply_rope, dense_init, rmsnorm, rope_table
+from repro.runtime.sharding import constrain
+
+NEG_INF = -1e30
+
+
+# ==========================================================================
+# Parameter init
+# ==========================================================================
+
+def init_attention(key, cfg):
+    if cfg.mla is not None:
+        return _init_mla(key, cfg)
+    D, H, K, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (D, H, Dh)),
+        "wk": dense_init(ks[1], (D, K, Dh)),
+        "wv": dense_init(ks[2], (D, K, Dh)),
+        "wo": dense_init(ks[3], (H, Dh, D), in_axis=0),
+    }
+
+
+def _init_mla(key, cfg):
+    s = cfg.mla
+    D, H = cfg.d_model, cfg.num_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], (D, s.q_lora_rank)),
+        "q_norm": jnp.zeros((s.q_lora_rank,), jnp.float32),
+        "wq_b": dense_init(ks[1], (s.q_lora_rank, H, s.qk_head_dim)),
+        "wkv_a": dense_init(ks[2], (D, s.kv_lora_rank + s.qk_rope_head_dim)),
+        "kv_norm": jnp.zeros((s.kv_lora_rank,), jnp.float32),
+        "wkv_b": dense_init(ks[3], (s.kv_lora_rank, H, s.qk_nope_head_dim + s.v_head_dim)),
+        "wo": dense_init(ks[4], (H, s.v_head_dim, D), in_axis=0),
+    }
+
+
+# ==========================================================================
+# Core attend: (q, k, v) -> out, several implementations
+# ==========================================================================
+
+def _gqa_shapes(q, k):
+    B, S, H, Dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    return B, S, H, K, G, Dh
+
+
+def _mask_chunk(q_pos, t_pos, causal, window):
+    """(S, Ck) boolean validity mask."""
+    m = jnp.ones((q_pos.shape[0], t_pos.shape[0]), bool)
+    if causal:
+        m &= t_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= t_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                      chunk=1024):
+    """Flash-style online-softmax attention, scanning KV chunks.
+
+    q: (B,S,H,Dh); k,v: (B,T,K,Dh).  q_offset: absolute position of q[0]
+    (prefill continuation / blocked iteration).  Returns (B,S,H,Dh).
+    """
+    B, S, H, K, G, Dh = _gqa_shapes(q, k)
+    T = k.shape[1]
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = k.shape[1] // chunk
+    scale = 1.0 / np.sqrt(Dh)
+
+    qg = q.reshape(B, S, K, G, Dh).astype(jnp.bfloat16)
+    kc = k.reshape(B, n_chunks, chunk, K, Dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, K, Dh).transpose(1, 0, 2, 3, 4)
+    q_pos = q_offset + jnp.arange(S)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        idx, kb, vb = inp
+        t_pos = idx * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, kb.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32) * scale
+        valid = _mask_chunk(q_pos, t_pos, causal, window)
+        valid &= t_pos[None, :] < T            # padding
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgst,btkd->bkgsd", p.astype(jnp.bfloat16),
+                        vb.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l, acc), None
+
+    init = (
+        jnp.full((B, K, G, S), NEG_INF, jnp.float32),
+        jnp.zeros((B, K, G, S), jnp.float32),
+        jnp.zeros((B, K, G, S, Dh), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(
+        body, init, (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, Dh).astype(q.dtype)
+
+
+def causal_blocked_attention(q, k, v, *, window=None, chunk=1024,
+                             block_q=2048):
+    """Triangular block iteration: q blocks are a static python loop, each
+    attending only to its causal (and windowed) KV prefix.  Skips ~half the
+    FLOPs of `chunked_attention` for causal masks; O(S·window) for SWA."""
+    B, S, H, K, G, Dh = _gqa_shapes(q, k)
+    T = k.shape[1]
+    assert S == T, "blocked path is for self-attention (train/prefill)"
+    block_q = min(block_q, S)
+    if S % block_q:
+        return chunked_attention(q, k, v, causal=True, window=window, chunk=chunk)
+    outs = []
+    for i in range(S // block_q):
+        q_lo, q_hi = i * block_q, (i + 1) * block_q
+        kv_lo = 0
+        if window is not None:
+            kv_lo = max(0, (q_lo - window + 1) // chunk * chunk)
+        kv_hi = q_hi
+        qb = q[:, q_lo:q_hi]
+        kb = k[:, kv_lo:kv_hi]
+        vb = v[:, kv_lo:kv_hi]
+        # positions inside the block are q_lo..q_hi-1; kv starts at kv_lo.
+        # chunked_attention masks with absolute positions via q_offset.
+        outs.append(
+            _chunked_attention_abs(qb, kb, vb, q_offset=q_lo, kv_offset=kv_lo,
+                                   window=window, chunk=chunk))
+    return jnp.concatenate(outs, axis=1)
+
+
+def _chunked_attention_abs(q, k, v, *, q_offset, kv_offset, window, chunk):
+    """chunked_attention with an absolute kv offset (for blocked iteration)."""
+    B, S, H, K, G, Dh = _gqa_shapes(q, k)
+    T = k.shape[1]
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = k.shape[1] // chunk
+    scale = 1.0 / np.sqrt(Dh)
+    qg = q.reshape(B, S, K, G, Dh).astype(jnp.bfloat16)
+    kc = k.reshape(B, n_chunks, chunk, K, Dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, K, Dh).transpose(1, 0, 2, 3, 4)
+    q_pos = q_offset + jnp.arange(S)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        idx, kb, vb = inp
+        t_pos = kv_offset + idx * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, kb.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32) * scale
+        valid = _mask_chunk(q_pos, t_pos, True, window)
+        valid &= t_pos[None, :] < kv_offset + T
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgst,btkd->bkgsd", p.astype(jnp.bfloat16),
+                        vb.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l, acc), None
+
+    init = (
+        jnp.full((B, K, G, S), NEG_INF, jnp.float32),
+        jnp.zeros((B, K, G, S), jnp.float32),
+        jnp.zeros((B, K, G, S, Dh), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(body, init, (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, Dh).astype(q.dtype)
+
+
+def attend(q, k, v, cfg, *, causal=True, window=None, q_offset=0):
+    """Dispatch on cfg.attn_impl (self-attention, train/prefill)."""
+    if cfg.attn_impl == "causal_blocked" and causal:
+        return causal_blocked_attention(q, k, v, window=window,
+                                        chunk=cfg.attn_chunk)
+    if cfg.attn_impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(q, k, v, causal=causal, window=window)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset, chunk=cfg.attn_chunk)
+
+
+def decode_attend(q, k_cache, v_cache, cache_len, *, window=None):
+    """Single-token attention against a KV cache.
+
+    q: (B,1,H,Dh); caches: (B,T,K,Dh); cache_len: scalar count of valid
+    entries.  With T sharded over "model", the max/sum reductions lower to
+    all-reduces = flash-decode split-K via SPMD.
+    """
+    B, _, H, Dh = q.shape
+    T, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    scale = 1.0 / np.sqrt(Dh)
+    qg = q.reshape(B, K, G, Dh).astype(jnp.bfloat16)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache.astype(jnp.bfloat16),
+                   preferred_element_type=jnp.float32) * scale
+    t_pos = jnp.arange(T)
+    valid = t_pos < cache_len
+    # Rolling SWA caches keep only the last `window` tokens, so every valid
+    # slot is inside the window by construction; no extra masking needed.
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p.astype(jnp.bfloat16),
+                     v_cache.astype(jnp.bfloat16),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, Dh).astype(q.dtype)
+
+
+# ==========================================================================
+# Full layer forward (projection + rope + attend + out-proj)
+# ==========================================================================
+
+def attention_forward(x, p, cfg, *, rope_cos, rope_sin, causal=True,
+                      window=None, kv=None, compute=jnp.bfloat16):
+    """Self- (kv=None) or cross- (kv=(k_in,)) attention over a full sequence.
+
+    x: (B,S,D).  rope tables match S (None for cross-attention).
+    """
+    if cfg.mla is not None:
+        return _mla_forward(x, p, cfg, rope_cos=rope_cos, rope_sin=rope_sin,
+                            compute=compute)
+    q = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(compute)),
+                  "b.m.")
+    src = x if kv is None else kv
+    k = constrain(jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(compute)),
+                  "b.m.")
+    v = constrain(jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(compute)),
+                  "b.m.")
+    if rope_cos is not None:
+        q = apply_rope(q, rope_cos, rope_sin)
+        k = apply_rope(k, rope_cos, rope_sin)
+    out = constrain(attend(q, k, v, cfg, causal=causal, window=window),
+                    "b.m.")
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(compute))
+
+
+def _ring_write_full(k, v, cache, window=None):
+    """Write a full prefill's k/v (B,S,K,Dh) into a (possibly rolling) cache
+    (B,T,K,Dh), aligned so that slot = pos mod T."""
+    S = k.shape[1]
+    T = cache["k"].shape[1]
+    if S <= T:
+        kk = jnp.pad(k, ((0, 0), (0, T - S), (0, 0), (0, 0)))
+        vv = jnp.pad(v, ((0, 0), (0, T - S), (0, 0), (0, 0)))
+        return {"k": kk.astype(cache["k"].dtype), "v": vv.astype(cache["v"].dtype)}
+    # keep the latest occupant of each ring slot: pos = S-1 - ((S-1-slot) mod T)
+    slot_ids = jnp.arange(T)
+    pos = (S - 1) - jnp.mod((S - 1) - slot_ids, T)
+    kk = jnp.take(k, pos, axis=1).astype(cache["k"].dtype)
+    vv = jnp.take(v, pos, axis=1).astype(cache["v"].dtype)
+    return {"k": kk, "v": vv}
+
+
+def attention_prefill(x, p, cfg, rope, cache, *, window=None,
+                      compute=jnp.bfloat16):
+    """Full-sequence self-attention that also fills the decode cache.
+
+    Returns (out (B,S,D), new_cache)."""
+    if cfg.mla is not None:
+        return _mla_prefill(x, p, cfg, rope, cache, compute=compute)
+    q = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(compute)),
+                  "b.m.")
+    k = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(compute)),
+                  "b.m.")
+    v = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(compute)),
+                  "b.m.")
+    if rope[0] is not None:
+        q = apply_rope(q, rope[0], rope[1])
+        k = apply_rope(k, rope[0], rope[1])
+    out = constrain(attend(q, k, v, cfg, causal=True, window=window), "b.m.")
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(compute))
+    return out, _ring_write_full(k, v, cache, window)
+
+
+def _mla_prefill(x, p, cfg, rope, cache, *, compute):
+    """MLA prefill: full-expansion attention + compressed-latent cache fill."""
+    s = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q_nope, q_rope = _mla_project_q(x, p, cfg, compute)
+    q_rope = apply_rope(q_rope, rope[0], rope[1])
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(compute))
+    ckv = rmsnorm(kv_a[..., : s.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(kv_a[:, :, None, s.kv_lora_rank:], rope[0], rope[1])
+    kv = jnp.einsum("bsr,rhk->bshk", ckv, p["wkv_b"].astype(compute))
+    k_nope = kv[..., : s.qk_nope_head_dim]
+    v = kv[..., s.qk_nope_head_dim:]
+    q = constrain(jnp.concatenate([q_nope, q_rope], axis=-1), "b.m.")
+    k = constrain(jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, s.qk_rope_head_dim))],
+        axis=-1), "b.m.")
+    v_pad = constrain(jnp.pad(
+        v, ((0, 0), (0, 0), (0, 0), (0, s.qk_head_dim - s.v_head_dim))),
+        "b.m.")
+    out = constrain(attend(q, k, v_pad, cfg, causal=True), "b.m.")
+    out = out[..., : s.v_head_dim]
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(compute))
+    T = cache["ckv"].shape[1]
+    ckv_w = jnp.pad(ckv, ((0, 0), (0, T - S), (0, 0))) if S <= T else ckv[:, -T:]
+    kr = k_rope[:, :, 0]
+    kr_w = jnp.pad(kr, ((0, 0), (0, T - S), (0, 0))) if S <= T else kr[:, -T:]
+    return out, {"ckv": ckv_w.astype(cache["ckv"].dtype),
+                 "krope": kr_w.astype(cache["krope"].dtype)}
+
+
+def attention_decode(x, p, cfg, cache, pos, *, rope_theta=None,
+                     window=None, compute=jnp.bfloat16):
+    """One decode step.  x: (B,1,D); cache {"k","v"}: (B,T,K,Dh); pos: scalar
+    absolute position.  Returns (out, new_cache)."""
+    if cfg.mla is not None:
+        return _mla_decode(x, p, cfg, cache, pos, compute=compute)
+    theta = rope_theta if rope_theta is not None else cfg.rope_theta
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(compute))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(compute))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(compute))
+    cos, sin = rope_table(jnp.array([pos]), cfg.head_dim, theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    T = cache["k"].shape[1]
+    # ring-buffer write (rolling for SWA; plain append when T >= max len)
+    slot = jnp.mod(pos, T)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    cache_len = jnp.minimum(pos + 1, T)
+    if cfg.attn_impl == "pallas":
+        from repro.kernels.decode_attention.ops import decode_attention
+        out = decode_attention(q[:, 0], k_cache, v_cache,
+                               cache_len)[:, None]
+    else:
+        out = decode_attend(q, k_cache, v_cache, cache_len, window=window)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(compute))
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Per-attention-layer cache pytree (SWA: rolling buffer of window)."""
+    if cfg.mla is not None:
+        s = cfg.mla
+        return {
+            "ckv": jnp.zeros((batch, max_len, s.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, max_len, s.qk_rope_head_dim), dtype),
+        }
+    T = max_len if cfg.sliding_window is None else min(max_len, cfg.sliding_window)
+    K, Dh = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, T, K, Dh), dtype),
+        "v": jnp.zeros((batch, T, K, Dh), dtype),
+    }
+
+
+# ==========================================================================
+# MLA (multi-head latent attention)
+# ==========================================================================
+
+def _mla_project_q(x, p, cfg, compute):
+    s = cfg.mla
+    ql = jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(compute))
+    ql = rmsnorm(ql, p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", ql, p["wq_b"].astype(compute))
+    return q[..., : s.qk_nope_head_dim], q[..., s.qk_nope_head_dim:]
+
+
+def _mla_forward(x, p, cfg, *, rope_cos, rope_sin, compute):
+    """Training / prefill MLA with full expansion."""
+    s = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q_nope, q_rope = _mla_project_q(x, p, cfg, compute)
+    q_rope = apply_rope(q_rope, rope_cos, rope_sin)
+
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(compute))
+    ckv, k_rope = kv_a[..., : s.kv_lora_rank], kv_a[..., s.kv_lora_rank:]
+    ckv = rmsnorm(ckv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], rope_cos, rope_sin)  # (B,S,1,r)
+    kv = jnp.einsum("bsr,rhk->bshk", ckv, p["wkv_b"].astype(compute))
+    k_nope = kv[..., : s.qk_nope_head_dim]
+    v = kv[..., s.qk_nope_head_dim:]
+
+    q = constrain(jnp.concatenate([q_nope, q_rope], axis=-1), "b.m.")
+    k = constrain(jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, s.qk_rope_head_dim))],
+        axis=-1), "b.m.")
+    # pad v head_dim up to qk_head_dim so the attend kernel sees square heads
+    v_pad = constrain(jnp.pad(
+        v, ((0, 0), (0, 0), (0, 0), (0, s.qk_head_dim - s.v_head_dim))),
+        "b.m.")
+    # the output constraint stops XLA sharding the score einsum's contraction
+    # dim when H doesn't divide the model axis (minicpm3: 40 heads -> 10.6
+    # TB/device of score all-reduces without this)
+    out = constrain(attend(q, k, v_pad, cfg, causal=True), "b.m.")
+    out = out[..., : s.v_head_dim]
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(compute))
+
+
+def _mla_decode(x, p, cfg, cache, pos, *, compute):
+    """Absorbed-weight MLA decode over the compressed latent cache.
+
+    Caches only (kv_lora + rope_dim) per token — the MLA memory win.  The
+    score is computed directly in latent space:
+        score = q_nope·W_kv_b^K·ckv + q_rope·k_rope
+    """
+    s = cfg.mla
+    B = x.shape[0]
+    H = cfg.num_heads
+    q_nope, q_rope = _mla_project_q(x, p, cfg, compute)          # (B,1,H,*)
+    cos, sin = rope_table(jnp.array([pos]), s.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(compute))
+    ckv_new = rmsnorm(kv_a[..., : s.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    kr_new = apply_rope(kv_a[:, :, None, s.kv_lora_rank:], cos, sin)[:, :, 0]
+
+    T = cache["ckv"].shape[1]
+    slot = jnp.mod(pos, T)
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), slot, axis=1)
+    krope = jax.lax.dynamic_update_slice_in_dim(
+        cache["krope"], kr_new.astype(cache["krope"].dtype), slot, axis=1)
+
+    wkv_b = p["wkv_b"].astype(compute)                           # (r,H,n+v)
+    wk = wkv_b[..., : s.qk_nope_head_dim]                        # (r,H,n)
+    wv = wkv_b[..., s.qk_nope_head_dim:]                         # (r,H,v)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0], wk)         # absorb
+    scale = 1.0 / np.sqrt(s.qk_head_dim)
+    scores = (
+        jnp.einsum("bhr,btr->bht", q_lat, ckv.astype(compute),
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bhk,btk->bht", q_rope[:, 0], krope.astype(compute),
+                     preferred_element_type=jnp.float32)
+    ) * scale
+    valid = jnp.arange(T) < jnp.minimum(pos + 1, T)
+    scores = jnp.where(valid[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bht,btr->bhr", probs.astype(compute),
+                         ckv.astype(compute),
+                         preferred_element_type=jnp.float32)     # (B,H,r)
+    out = jnp.einsum("bhr,rhv->bhv", out_lat.astype(compute), wv)
+    out = jnp.einsum("bhv,hvd->bd", out, p["wo"].astype(compute))[:, None]
+    return out, {"ckv": ckv, "krope": krope}

@@ -1,0 +1,206 @@
+"""Whisper-style encoder-decoder.
+
+The conv/mel audio frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, frames, D) — equivalent to the
+output of whisper's two conv layers.  The encoder runs bidirectional
+self-attention over the frames; the decoder is a causal LM with an extra
+cross-attention sub-layer per layer.
+
+Decode shapes lower the DECODER step: one new token against a self-attn KV
+cache of seq_len plus fixed cross-attn K/V precomputed from the encoder
+output at prefill time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.layers import (
+    apply_mlp, apply_norm, embed_init, embed_lookup, init_mlp, init_norm,
+    lm_logits, rope_table, softmax_cross_entropy_fused,
+)
+from repro.models.transformer import _remat, head_matrix
+from repro.runtime.sharding import constrain
+
+
+def _sinusoidal(S: int, D: int):
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(D // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * dim / D)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def init_encdec_params(cfg, key):
+    ks = jax.random.split(key, 8)
+    enc_keys = jax.random.split(ks[0], (cfg.encoder_layers, 2))
+    dec_keys = jax.random.split(ks[1], (cfg.num_layers, 3))
+
+    def init_enc_layer(k):
+        k1, k2 = k
+        return {
+            "attn_norm": init_norm(k1, cfg),
+            "attn": attn.init_attention(k1, cfg),
+            "ffn_norm": init_norm(k2, cfg),
+            "ffn": init_mlp(k2, cfg),
+        }
+
+    def init_dec_layer(k):
+        k1, k2, k3 = k
+        return {
+            "self_norm": init_norm(k1, cfg),
+            "self_attn": attn.init_attention(k1, cfg),
+            "cross_norm": init_norm(k2, cfg),
+            "cross_attn": attn.init_attention(k2, cfg),
+            "ffn_norm": init_norm(k3, cfg),
+            "ffn": init_mlp(k3, cfg),
+        }
+
+    return {
+        "embed": embed_init(ks[2], (cfg.vocab_size, cfg.d_model)),
+        "enc_layers": jax.vmap(init_enc_layer)(enc_keys),
+        "enc_norm": init_norm(ks[3], cfg),
+        "dec_layers": jax.vmap(init_dec_layer)(dec_keys),
+        "final_norm": init_norm(ks[4], cfg),
+    }
+
+
+def encode(params, cfg, frames, *, compute=jnp.bfloat16):
+    """frames: (B, F, D) stub embeddings -> (B, F, D) encoder output."""
+    x = frames.astype(compute) + _sinusoidal(
+        frames.shape[1], cfg.d_model).astype(compute)
+
+    def body(x, p):
+        x = constrain(x, "b..")
+        h = apply_norm(x, p["attn_norm"], cfg)
+        h = attn.attention_forward(h, p["attn"], cfg, rope_cos=None,
+                                   rope_sin=None, causal=False,
+                                   compute=compute)
+        x = x + h
+        h = apply_norm(x, p["ffn_norm"], cfg)
+        x = x + apply_mlp(h, p["ffn"], cfg, compute)
+        return x, None
+
+    x, _ = jax.lax.scan(_remat(body, cfg), x, params["enc_layers"])
+    return apply_norm(x, params["enc_norm"], cfg)
+
+
+def _decoder_stack(params, cfg, x, enc_out, compute):
+    S = x.shape[1]
+    rope = rope_table(jnp.arange(S), cfg.head_dim, cfg.rope_theta)
+
+    def body(x, p):
+        x = constrain(x, "b..")
+        h = apply_norm(x, p["self_norm"], cfg)
+        h = attn.attention_forward(h, p["self_attn"], cfg, rope_cos=rope[0],
+                                   rope_sin=rope[1], causal=True,
+                                   compute=compute)
+        x = x + h
+        h = apply_norm(x, p["cross_norm"], cfg)
+        h = attn.attention_forward(h, p["cross_attn"], cfg, rope_cos=None,
+                                   rope_sin=None, causal=False, kv=enc_out,
+                                   compute=compute)
+        x = x + h
+        h = apply_norm(x, p["ffn_norm"], cfg)
+        x = x + apply_mlp(h, p["ffn"], cfg, compute)
+        return x, None
+
+    x, _ = jax.lax.scan(_remat(body, cfg), x, params["dec_layers"])
+    return apply_norm(x, params["final_norm"], cfg)
+
+
+def encdec_loss(params, cfg, frames, tokens, targets, *, compute=jnp.bfloat16):
+    enc_out = encode(params, cfg, frames, compute=compute)
+    x = embed_lookup(tokens, params["embed"], compute)
+    h = _decoder_stack(params, cfg, x, enc_out, compute)
+    ce = softmax_cross_entropy_fused(h, head_matrix(params, cfg), targets,
+                                     softcap=cfg.logit_softcap,
+                                     chunk=cfg.loss_chunk)
+    return ce, {"ce": ce, "aux": jnp.float32(0.0)}
+
+
+# --------------------------------------------------------------------------
+# Prefill / decode
+# --------------------------------------------------------------------------
+
+def init_encdec_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Per-decoder-layer self-attn KV cache + fixed cross-attn K/V."""
+    L = cfg.num_layers
+    K, Dh, F = cfg.num_kv_heads, cfg.head_dim, cfg.frontend_tokens
+    tile = lambda a: jnp.broadcast_to(a[None], (L,) + a.shape)
+    return {
+        "self": {
+            "k": tile(jnp.zeros((batch, max_len, K, Dh), dtype)),
+            "v": tile(jnp.zeros((batch, max_len, K, Dh), dtype)),
+        },
+        "cross": {
+            "k": tile(jnp.zeros((batch, F, K, Dh), dtype)),
+            "v": tile(jnp.zeros((batch, F, K, Dh), dtype)),
+        },
+    }
+
+
+def encdec_prefill(params, cfg, frames, tokens, cache, *, compute=jnp.bfloat16):
+    """Encoder pass + decoder prefill; fills self + cross caches."""
+    enc_out = encode(params, cfg, frames, compute=compute)
+    x = embed_lookup(tokens, params["embed"], compute)
+    S = x.shape[1]
+    rope = rope_table(jnp.arange(S), cfg.head_dim, cfg.rope_theta)
+
+    def body(x, inp):
+        p, gcache = inp
+        x = constrain(x, "b..")
+        h = apply_norm(x, p["self_norm"], cfg)
+        out, self_c = attn.attention_prefill(h, p["self_attn"], cfg, rope,
+                                             gcache["self"], compute=compute)
+        x = x + out
+        h = apply_norm(x, p["cross_norm"], cfg)
+        ck = jnp.einsum("bfd,dhk->bfhk", enc_out,
+                        p["cross_attn"]["wk"].astype(compute))
+        cv = jnp.einsum("bfd,dhk->bfhk", enc_out,
+                        p["cross_attn"]["wv"].astype(compute))
+        h = attn.attention_forward(h, p["cross_attn"], cfg, rope_cos=None,
+                                   rope_sin=None, causal=False, kv=enc_out,
+                                   compute=compute)
+        x = x + h
+        h = apply_norm(x, p["ffn_norm"], cfg)
+        x = x + apply_mlp(h, p["ffn"], cfg, compute)
+        cross_c = {"k": ck.astype(gcache["cross"]["k"].dtype),
+                   "v": cv.astype(gcache["cross"]["v"].dtype)}
+        return x, {"self": self_c, "cross": cross_c}
+
+    x, new_cache = jax.lax.scan(_remat(body, cfg), x,
+                                (params["dec_layers"], cache))
+    x = apply_norm(x, params["final_norm"], cfg)
+    logits = lm_logits(x[:, -1:], head_matrix(params, cfg), cfg.logit_softcap)
+    return logits, new_cache
+
+
+def encdec_decode(params, cfg, token, cache, pos, *, compute=jnp.bfloat16):
+    """One decoder step against self + cross caches."""
+    x = embed_lookup(token, params["embed"], compute)
+
+    def body(x, inp):
+        p, gcache = inp
+        x = constrain(x, "b..")
+        h = apply_norm(x, p["self_norm"], cfg)
+        h, self_c = attn.attention_decode(h, p["self_attn"], cfg,
+                                          gcache["self"], pos, compute=compute)
+        x = x + h
+        h = apply_norm(x, p["cross_norm"], cfg)
+        q = jnp.einsum("bsd,dhk->bshk", h, p["cross_attn"]["wq"].astype(compute))
+        F = gcache["cross"]["k"].shape[1]
+        out = attn.decode_attend(q, gcache["cross"]["k"], gcache["cross"]["v"],
+                                 jnp.int32(F))
+        h = jnp.einsum("bshk,hkd->bsd", out,
+                       p["cross_attn"]["wo"].astype(compute))
+        x = x + h
+        h = apply_norm(x, p["ffn_norm"], cfg)
+        x = x + apply_mlp(h, p["ffn"], cfg, compute)
+        return x, {"self": self_c, "cross": gcache["cross"]}
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_layers"], cache))
+    x = apply_norm(x, params["final_norm"], cfg)
+    logits = lm_logits(x, head_matrix(params, cfg), cfg.logit_softcap)
+    return logits, new_cache

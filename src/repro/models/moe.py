@@ -1,0 +1,181 @@
+"""Mixture-of-experts FFN: top-k router + capacity-bucketed dispatch.
+
+Two execution paths:
+
+* ``apply_moe`` (train / prefill): per-example capacity dispatch.  Token
+  assignments are bucketed into an (E, C) buffer via a cumsum position
+  computation (no sort, no cross-device data movement), experts run as one
+  batched einsum, results are combined with router weights.  Overflowing
+  tokens are dropped (GShard capacity semantics; capacity_factor=1.25).
+
+* ``apply_moe_dense`` (decode): computes every expert for the single new
+  token, weighted by the (zeroed non-top-k) router gates.  Decode is
+  memory-bound — all expert weights stream from HBM once either way — so the
+  extra FLOPs are roofline-free, and the path has no gather/scatter at all.
+
+Sharding ("tp" partition, the baseline): expert weights are sharded on the
+hidden (F) dim over the "model" axis; tokens stay batch-sharded; the down
+projection ends in an all-reduce — exactly a dense-TP FFN per expert.
+The "ep" partition (experts over "model", token all-to-all) is implemented in
+`repro.runtime.ep_moe` via shard_map and used in the §Perf hillclimb.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import act_fn, dense_init
+from repro.runtime.sharding import constrain
+
+
+def init_moe(key, cfg):
+    m = cfg.moe
+    D, E, F = cfg.d_model, m.num_experts, m.d_ff_expert
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (D, E)),
+        "up": dense_init(ks[1], (E, D, F), in_axis=1),
+        "down": dense_init(ks[2], (E, F, D), in_axis=1),
+    }
+    if cfg.mlp_gated:
+        p["gate"] = dense_init(ks[3], (E, D, F), in_axis=1)
+    return p
+
+
+def _capacity(cfg, seq_len: int) -> int:
+    m = cfg.moe
+    c = int(seq_len * m.top_k * m.capacity_factor / m.num_experts) + 1
+    return min(seq_len, max(8, -(-c // 8) * 8))   # round up to 8, cap at S
+
+
+def router_probs(x, router_w):
+    """f32 router logits -> probs.  x: (..., D)."""
+    logits = jnp.einsum("...d,de->...e", x.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def _dispatch_one(xe, idx, wts, E: int, C: int):
+    """Single example dispatch.  xe: (S,D); idx/wts: (S,k).
+    Returns buckets (E,C,D), and (e_flat, pos_flat, keep, wts_flat) for the
+    combine step."""
+    S, k = idx.shape
+    e_flat = idx.reshape(-1)                                   # (S*k,)
+    one_hot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)       # (S*k, E)
+    pos_flat = (jnp.cumsum(one_hot, axis=0) - one_hot)[jnp.arange(S * k), e_flat]
+    keep = pos_flat < C
+    pos_c = jnp.where(keep, pos_flat, C - 1)
+    tok = jnp.repeat(jnp.arange(S), k)
+    contrib = xe[tok] * keep[:, None].astype(xe.dtype)
+    buckets = jnp.zeros((E, C, xe.shape[-1]), xe.dtype)
+    buckets = buckets.at[e_flat, pos_c].add(contrib, mode="drop")
+    return buckets, (e_flat, pos_c, keep, wts.reshape(-1))
+
+
+def _combine_one(y_buckets, meta, S: int, dtype):
+    e_flat, pos_c, keep, wts_flat = meta
+    k = e_flat.shape[0] // S
+    gathered = y_buckets[e_flat, pos_c]                        # (S*k, D)
+    gathered = gathered * (wts_flat * keep).astype(gathered.dtype)[:, None]
+    return jnp.sum(gathered.reshape(S, k, -1), axis=1).astype(dtype)
+
+
+def _bucket_gmm(buckets, w):
+    """(B,E,C,D) x (E,D,F) -> (B,E,C,F) via the Pallas grouped matmul.
+
+    Row tiles are laid out (B*E*C, D) with per-tile expert ids, so the kernel
+    streams x tiles while hopping expert weight slabs (dense-padded tiling)."""
+    from repro.kernels.grouped_matmul.kernel import grouped_matmul_kernel
+
+    B, E, C, D = buckets.shape
+    F = w.shape[2]
+    bm = 128
+    while C % bm:
+        bm //= 2
+    bn = 128
+    while F % bn:
+        bn //= 2
+    tile_ids = jnp.tile(jnp.repeat(jnp.arange(E), C // bm), B)
+    x = buckets.reshape(B * E * C, D)
+    y = grouped_matmul_kernel(x, w, tile_ids, block_m=bm, block_n=bn,
+                              interpret=jax.default_backend() != "tpu")
+    return y.reshape(B, E, C, F)
+
+
+def apply_moe(x, p, cfg, compute=jnp.bfloat16):
+    """x: (B,S,D) -> (out (B,S,D), aux_loss scalar)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    E, k = m.num_experts, m.top_k
+    C = _capacity(cfg, S)
+    probs = router_probs(x, p["router"])                       # (B,S,E) f32
+    wts, idx = jax.lax.top_k(probs, k)                         # (B,S,k)
+    wts = wts / jnp.maximum(jnp.sum(wts, axis=-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance aux loss
+    me = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=2), axis=(0, 1))
+    aux = m.router_aux_weight * E * jnp.sum(me * ce / k)
+
+    buckets, meta = jax.vmap(lambda xe, ie, we: _dispatch_one(xe, ie, we, E, C))(
+        x, idx, wts)                                           # (B,E,C,D)
+    # keep dispatch local: without this XLA may shard the einsum contraction
+    # and all-reduce the full bucket tensor (measured 2.7 TB/device on
+    # mixtral prefill_32k)
+    buckets = constrain(buckets, "b...")
+
+    act = act_fn(cfg.activation)
+    if cfg.moe_impl == "gmm":
+        up = _bucket_gmm(buckets, p["up"].astype(compute))
+        if cfg.mlp_gated:
+            g = _bucket_gmm(buckets, p["gate"].astype(compute))
+            h = (act(g) * up).astype(compute)
+        else:
+            h = act(up).astype(compute)
+        y = _bucket_gmm(h, p["down"].astype(compute)).astype(compute)
+    else:
+        up = jnp.einsum("becd,edf->becf", buckets, p["up"].astype(compute))
+        if cfg.mlp_gated:
+            g = jnp.einsum("becd,edf->becf", buckets, p["gate"].astype(compute))
+            h = act(g) * up
+        else:
+            h = act(up)
+        h = constrain(h, "b..m")
+        y = jnp.einsum("becf,efd->becd", h, p["down"].astype(compute))
+        y = constrain(y, "b...")
+
+    out = jax.vmap(lambda yb, mt: _combine_one(yb, mt, S, compute))(y, meta)
+    return out, aux
+
+
+def apply_moe_dense(x, p, cfg, compute=jnp.bfloat16):
+    """Decode path: all experts on the (B,1,D) token, gated combine."""
+    m = cfg.moe
+    E, k = m.num_experts, m.top_k
+    probs = router_probs(x, p["router"])                       # (B,S,E)
+    wts, idx = jax.lax.top_k(probs, k)
+    wts = wts / jnp.maximum(jnp.sum(wts, axis=-1, keepdims=True), 1e-9)
+    gates = jnp.zeros_like(probs)
+    gates = jnp.take_along_axis(gates, idx, axis=-1)           # shape trick
+    gates = jnp.zeros_like(probs).at[
+        jnp.arange(probs.shape[0])[:, None, None],
+        jnp.arange(probs.shape[1])[None, :, None],
+        idx,
+    ].set(wts)                                                 # (B,S,E)
+
+    act = act_fn(cfg.activation)
+    up = jnp.einsum("bsd,edf->bsef", x, p["up"].astype(compute))
+    if cfg.mlp_gated:
+        g = jnp.einsum("bsd,edf->bsef", x, p["gate"].astype(compute))
+        h = act(g) * up
+    else:
+        h = act(up)
+    # serve-mode EP: experts over the (otherwise idle) data axis, expert
+    # hidden over model — decode weight streaming drops by the data-axis
+    # size; token activations are tiny so the reshard is ~free.
+    h = constrain(h, "..dm")
+    y = jnp.einsum("bsef,efd->bsed", h, p["down"].astype(compute))
+    out = jnp.einsum("bsed,bse->bsd", y, gates.astype(compute))
+    return constrain(out, "b.."), jnp.float32(0.0)

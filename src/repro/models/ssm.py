@@ -1,0 +1,226 @@
+"""Mamba-2 SSD mixer (state-space duality), chunked for the MXU.
+
+The recurrence  h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;  y_t = C_t h_t + D x_t
+is evaluated in the SSD chunked form [arXiv:2405.21060]: the sequence is split
+into chunks of Q steps; intra-chunk terms become (Q,Q) masked matmuls
+(MXU-friendly) and the inter-chunk state (H,P,N per batch) is carried by a
+short lax.scan over chunks.  This is the TPU-native adaptation of the
+selective-scan: no sequential per-token loop ever touches the fast path.
+
+Decode keeps an O(1) recurrent state: {"conv": (B, W-1, conv_dim),
+"ssd": (B, H, P, N)} per layer — the reason SSM archs run `long_500k`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm
+from repro.runtime.sharding import constrain
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.state_dim
+    return s, d_inner, nheads, conv_dim
+
+
+def init_ssm(key, cfg):
+    s, d_inner, nheads, conv_dim = _dims(cfg)
+    D = cfg.d_model
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * d_inner + 2 * s.n_groups * s.state_dim + nheads
+    return {
+        "in_proj": dense_init(ks[0], (D, in_dim)),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, conv_dim)) * 0.1).astype(jnp.float32),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads).astype(jnp.float32)),
+        "D_skip": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 0.1, nheads))).astype(jnp.float32),
+        "norm_scale": jnp.zeros((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[3], (d_inner, D)),
+    }
+
+
+def _causal_conv(x, w, b):
+    """x: (B,S,C); w: (W,C) depthwise causal conv via shifted adds."""
+    W = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, W):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[W - 1 - i]
+    return out + b
+
+
+def _split_proj(zxbcdt, cfg):
+    s, d_inner, nheads, conv_dim = _dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner : d_inner + conv_dim]
+    dt = zxbcdt[..., d_inner + conv_dim :]
+    return z, xBC, dt
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """Chunked SSD scan.
+
+    x: (b,S,H,P)  dt: (b,S,H)  A: (H,)  B,C: (b,S,G,N).  Returns y (b,S,H,P).
+    All cumulative/decay math in f32.
+    """
+    """Returns (y (b,S,H,P), final_state (b,H,N,P))."""
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    assert H % G == 0
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = x.shape[1]
+    nc = Sp // chunk
+    rs = lambda t: t.reshape((b, nc, chunk) + t.shape[2:])
+    xc, dtc, Bc, Cc = rs(x), rs(dt.astype(jnp.float32)), rs(B), rs(C)
+
+    dA = dtc * A.astype(jnp.float32)                   # (b,nc,Q,H), negative
+    cum = jnp.cumsum(dA, axis=2)                       # inclusive within chunk
+    total = cum[:, :, -1]                              # (b,nc,H)
+
+    # ---- intra-chunk: y_t = C_t · sum_{j<=t} exp(cum_t - cum_j) dt_j B_j x_j
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # (b,nc,q,j,H)
+    q_idx = jnp.arange(chunk)
+    causal = q_idx[:, None] >= q_idx[None, :]
+    # mask INSIDE the exponent: non-causal seg is positive and can overflow
+    # exp() to inf; where(…, exp(seg), 0) would then produce 0*inf = NaN in
+    # the backward pass (the where-grad trap).
+    seg = jnp.where(causal[None, None, :, :, None], seg, -jnp.inf)
+    L = jnp.exp(seg)
+    CB = jnp.einsum("bcqgn,bcjgn->bcgqj", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))                      # (b,nc,G,q,j)
+    CB = jnp.repeat(CB, H // G, axis=2)                          # (b,nc,H,q,j)
+    M = CB * L.transpose(0, 1, 4, 2, 3)                          # (b,nc,H,q,j)
+    xdt = xc.astype(jnp.float32) * dtc[..., None]                # (b,nc,j,H,P)
+    y_intra = jnp.einsum("bchqj,bcjhp->bcqhp", M, xdt)
+
+    # ---- chunk-local end states: S_loc = sum_j exp(total - cum_j) dt_j B_j⊗x_j
+    assert G == 1, "SSD state einsums assume shared B/C (n_groups=1)"
+    decay_out = jnp.exp(total[:, :, None] - cum)                 # (b,nc,j,H)
+    # state (b,nc,H,N,P): einsum over j with per-head decay
+    S_loc = jnp.einsum("bcjgn,bcjh,bcjhp->bchnp",
+                       Bc.astype(jnp.float32), decay_out * dtc,
+                       xc.astype(jnp.float32))
+
+    # ---- inter-chunk recurrence (scan over chunks)
+    def body(s_prev, inp):
+        s_loc_c, total_c = inp                                   # (b,H,N,P),(b,H)
+        s_new = jnp.exp(total_c)[:, :, None, None] * s_prev + s_loc_c
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, H, B.shape[-1], P), jnp.float32)
+    s_final, s_prevs = jax.lax.scan(
+        body, s0,
+        (S_loc.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)                   # (b,nc,H,N,P)
+
+    # ---- inter-chunk contribution: y_t += C_t · exp(cum_t) S_prev
+    decay_in = jnp.exp(cum)                                      # (b,nc,q,H)
+    y_inter = jnp.einsum("bcqgn,bcqh,bchnp->bcqhp",
+                         Cc.astype(jnp.float32), decay_in, s_prevs)
+
+    y = (y_intra + y_inter).reshape(b, Sp, H, P)
+    return (y[:, :S] if pad else y), s_final
+
+
+def _ssm_forward_impl(x, p, cfg, compute, want_cache: bool):
+    s, d_inner, nheads, conv_dim = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(compute))
+    z, xBC_pre, dt = _split_proj(zxbcdt, cfg)
+    xBC = jax.nn.silu(_causal_conv(xBC_pre, p["conv_w"].astype(compute),
+                                   p["conv_b"].astype(compute)))
+    xs = xBC[..., :d_inner]
+    B_ssm = xBC[..., d_inner : d_inner + s.n_groups * s.state_dim]
+    C_ssm = xBC[..., d_inner + s.n_groups * s.state_dim :]
+    b, S, _ = x.shape
+    xh = constrain(xs.reshape(b, S, nheads, s.head_dim), "b.m.")
+    Bh = B_ssm.reshape(b, S, s.n_groups, s.state_dim)
+    Ch = C_ssm.reshape(b, S, s.n_groups, s.state_dim)
+    dt_sp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    if cfg.ssm_impl == "pallas":
+        from repro.kernels.ssd_scan.ops import ssd_scan
+        y, s_final = ssd_scan(xh, dt_sp, A, Bh, Ch, chunk=s.chunk_size)
+        y = y.astype(jnp.float32)
+    else:
+        y, s_final = ssd_chunked(xh, dt_sp, A, Bh, Ch, s.chunk_size)
+    y = y + xh.astype(jnp.float32) * p["D_skip"][None, None, :, None]
+    y = y.reshape(b, S, d_inner).astype(compute)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(compute))
+    if not want_cache:
+        return out, None
+    W = s.conv_width
+    tail = xBC_pre[:, -(W - 1):] if S >= W - 1 else jnp.pad(
+        xBC_pre, ((0, 0), (W - 1 - S, 0), (0, 0)))
+    cache = {"conv": tail.astype(jnp.bfloat16),
+             # ssd_chunked carries state as (b,H,N,P); decode uses (b,H,N,P)
+             "ssd": s_final}
+    return out, cache
+
+
+def ssm_forward(x, p, cfg, compute=jnp.bfloat16):
+    """Full Mamba-2 block over a sequence.  x: (B,S,D) -> (B,S,D)."""
+    return _ssm_forward_impl(x, p, cfg, compute, want_cache=False)[0]
+
+
+def ssm_forward_with_cache(x, p, cfg, compute=jnp.bfloat16):
+    """Prefill: (out, decode cache {conv, ssd})."""
+    return _ssm_forward_impl(x, p, cfg, compute, want_cache=True)
+
+
+# --------------------------------------------------------------------------
+# Decode (O(1) state)
+# --------------------------------------------------------------------------
+
+def init_ssm_cache(cfg, batch: int, dtype=jnp.bfloat16):
+    s, d_inner, nheads, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+        "ssd": jnp.zeros((batch, nheads, s.state_dim, s.head_dim), jnp.float32),
+    }
+
+
+def ssm_decode(x, p, cfg, cache, compute=jnp.bfloat16):
+    """One token.  x: (B,1,D) -> (out (B,1,D), new cache)."""
+    s, d_inner, nheads, conv_dim = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(compute))
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+    xBC = xBC[:, 0]                                              # (B,conv_dim)
+    # conv over (cached W-1 inputs + current)
+    hist = jnp.concatenate([cache["conv"].astype(compute), xBC[:, None]], axis=1)
+    w = p["conv_w"].astype(compute)
+    conv_out = jnp.einsum("bwc,wc->bc", hist, w) + p["conv_b"].astype(compute)
+    xBC_t = jax.nn.silu(conv_out)
+    new_conv = hist[:, 1:].astype(cache["conv"].dtype)
+
+    xs = xBC_t[..., :d_inner]
+    B_t = xBC_t[..., d_inner : d_inner + s.n_groups * s.state_dim]
+    C_t = xBC_t[..., d_inner + s.n_groups * s.state_dim :]
+    b = x.shape[0]
+    xh = xs.reshape(b, nheads, s.head_dim).astype(jnp.float32)
+    Bh = B_t.reshape(b, s.n_groups, s.state_dim).astype(jnp.float32)
+    Ch = C_t.reshape(b, s.n_groups, s.state_dim).astype(jnp.float32)
+    Bh = jnp.repeat(Bh, nheads // s.n_groups, axis=1)            # (B,H,N)
+    Ch = jnp.repeat(Ch, nheads // s.n_groups, axis=1)
+    dt_sp = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt_sp * A)                                   # (B,H)
+    upd = jnp.einsum("bh,bhn,bhp->bhnp", dt_sp, Bh, xh)
+    state = decay[:, :, None, None] * cache["ssd"] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, state)
+    y = y + xh * p["D_skip"][None, :, None]
+    y = y.reshape(b, 1, d_inner).astype(compute)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(compute))
+    return out, {"conv": new_conv, "ssd": state}

@@ -1,0 +1,18 @@
+"""Distribution substrate: mesh construction, sharding rules, elasticity,
+gradient compression."""
+
+from repro.runtime.mesh import MeshSpec, batch_axes, make_mesh, mesh_axis_size
+from repro.runtime.sharding import (
+    batch_shardings,
+    decode_state_shardings,
+    param_shardings,
+    param_spec,
+    replicated,
+    train_state_shardings,
+)
+
+__all__ = [
+    "MeshSpec", "batch_axes", "make_mesh", "mesh_axis_size",
+    "batch_shardings", "decode_state_shardings", "param_shardings",
+    "param_spec", "replicated", "train_state_shardings",
+]

@@ -1,0 +1,48 @@
+"""Int8 error-feedback gradient compression (beyond-paper optimization).
+
+Before the data-parallel gradient reduction, each gradient leaf is quantized
+to int8 with a per-leaf scale; the quantization error is kept locally and
+added back to the next step's gradient (error feedback keeps SGD/Adam
+convergence — 1-bit Adam / EF-SGD lineage).  On a real fleet this shrinks
+the reduce-scatter payload 4x (f32->i8); under XLA SPMD we model the
+transport by quantize->dequantize around the (automatic) reduction and
+account the byte savings in the roofline's collective term.
+
+Pure-functional: residual state lives in the train state next to the
+optimizer moments and shards identically to the parameters.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def _quantize_leaf(g, r):
+    g = g.astype(jnp.float32) + r
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    dq = q.astype(jnp.float32) * scale
+    return dq, g - dq
+
+
+def compress(grads, residuals):
+    """Returns (dequantized grads, new residuals).  Transport payload is the
+    int8 tensor + one f32 scale per leaf."""
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = tdef.flatten_up_to(residuals)
+    out = [_quantize_leaf(g, r) for g, r in zip(flat_g, flat_r)]
+    dq = tdef.unflatten([o[0] for o in out])
+    res = tdef.unflatten([o[1] for o in out])
+    return dq, res
+
+
+def payload_bytes(grads) -> tuple[int, int]:
+    """(uncompressed_bytes, compressed_bytes) for the DP reduction payload."""
+    raw = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(grads))
+    comp = sum(l.size * 1 + 4 for l in jax.tree.leaves(grads))
+    return raw, comp

@@ -1,0 +1,87 @@
+"""Mesh construction helpers.
+
+The production mesh (see launch/mesh.py) is (data=16, model=16) per pod and
+(pod=2, data=16, model=16) for the multi-pod dry-run.  Everything in this
+module is a pure function of an existing `jax.sharding.Mesh`; importing it
+never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh
+
+# Canonical physical axis names, outermost first.  "pod" is the slowest /
+# cross-ICI axis, "data" is the pure-replication/batch axis, "model" is the
+# tensor-parallel axis (fast ICI ring).
+POD_AXIS = "pod"
+DATA_AXIS = "data"
+MODEL_AXIS = "model"
+ALL_AXES = (POD_AXIS, DATA_AXIS, MODEL_AXIS)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """Declarative mesh description (used by configs and the pilot system).
+
+    A PilotSlice is provisioned against a MeshSpec; the payload never gets to
+    change it (late binding swaps the executable, not the resource grant).
+    """
+
+    shape: tuple[int, ...]
+    axes: tuple[str, ...]
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} / axes {self.axes} mismatch")
+        for a in self.axes:
+            if a not in ALL_AXES:
+                raise ValueError(f"unknown mesh axis {a!r}; expected {ALL_AXES}")
+
+    @property
+    def num_devices(self) -> int:
+        return math.prod(self.shape)
+
+    def axis_size(self, name: str) -> int:
+        if name not in self.axes:
+            return 1
+        return self.shape[self.axes.index(name)]
+
+    def build(self, devices: Sequence[jax.Device] | None = None) -> Mesh:
+        if devices is None:
+            return jax.make_mesh(self.shape, self.axes)
+        import numpy as np
+
+        devs = np.asarray(devices).reshape(self.shape)
+        return Mesh(devs, self.axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
+    return MeshSpec(tuple(shape), tuple(axes)).build()
+
+
+def mesh_axis_size(mesh: Mesh, name: str) -> int:
+    """Size of a named axis; 1 if the mesh does not have it."""
+    return mesh.shape.get(name, 1) if hasattr(mesh.shape, "get") else dict(
+        zip(mesh.axis_names, mesh.devices.shape)
+    ).get(name, 1)
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Physical axes the global batch is sharded over (pod+data)."""
+    return tuple(a for a in (POD_AXIS, DATA_AXIS) if a in mesh.axis_names)
+
+
+def batch_parallelism(mesh: Mesh) -> int:
+    out = 1
+    for a in batch_axes(mesh):
+        out *= mesh_axis_size(mesh, a)
+    return out
+
+
+def model_parallelism(mesh: Mesh) -> int:
+    return mesh_axis_size(mesh, MODEL_AXIS)

@@ -1,0 +1,1 @@
+from repro.serving.engine import Request, ServeEngine  # noqa: F401

@@ -1,0 +1,191 @@
+"""Batched serving engine: wave-scheduled static-slot batching.
+
+The engine owns a fixed (slots, max_len) KV-cache block compiled ONCE into
+a single decode executable; admission never recompiles.  Requests are
+scheduled in *waves*: when all slots are free, up to `slots` requests are
+pulled from the queue, left-padded to a common prompt bucket, prefilled
+slot-by-slot into the shared cache block, and then decoded TOGETHER — one
+batched decode step per token until every slot finishes.  A slot whose
+request completes early idles until the wave ends (the classic static-
+batching trade; per-slot positions — continuous batching — would need a
+vectorized `pos` through the decode path and is listed as future work in
+DESIGN.md).
+
+In the pilot system this engine is one *payload*: ``serve`` tasks late-bind
+it onto an already-held slice, and a pilot can run several engine waves for
+different models back-to-back without re-provisioning — the paper's
+multi-payload pilot, applied to inference.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import build_model, init_decode_state
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (prompt_len,) int32
+    max_new_tokens: int = 16
+    submitted: float = dataclasses.field(default_factory=time.monotonic)
+    # filled on completion
+    tokens: list = dataclasses.field(default_factory=list)
+    first_token_s: float | None = None
+    done_s: float | None = None
+
+
+@dataclasses.dataclass
+class SlotState:
+    rid: int = -1                      # -1 == free
+    remaining: int = 0
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.bundle = build_model(cfg)
+        self.state = init_decode_state(cfg, slots, max_len)
+        self.slot_meta = [SlotState() for _ in range(slots)]
+        self.queue: deque[Request] = deque()
+        self.done: dict[int, Request] = {}
+        self._live: dict[int, Request] = {}
+        self.steps = 0
+        self.idle_slot_steps = 0       # static-batching waste metric
+
+        # one compiled decode step for the whole engine lifetime
+        self._decode = jax.jit(self.bundle.decode, donate_argnums=1)
+        # prefill compiles per prompt-length bucket
+        self._prefill_cache: dict[int, Callable] = {}
+
+    # ------------------------------------------------------------------
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _prefill_fn(self, plen: int):
+        if plen not in self._prefill_cache:
+            self._prefill_cache[plen] = jax.jit(
+                lambda p, b: self.bundle.prefill(p, b))
+        return self._prefill_cache[plen]
+
+    def _bucket(self, n: int) -> int:
+        b = 16
+        while b < n:
+            b *= 2
+        return min(b, self.max_len)
+
+    # ------------------------------------------------------------------
+
+    def _start_wave(self):
+        """Admit up to `slots` queued requests; prefill each into its slot."""
+        wave = []
+        while self.queue and len(wave) < self.slots:
+            wave.append(self.queue.popleft())
+        if not wave:
+            return
+        plen = max(self._bucket(len(r.prompt)) for r in wave)
+        self.state = init_decode_state(self.cfg, self.slots, self.max_len)
+        for si, req in enumerate(wave):
+            toks = np.zeros((1, plen), np.int32)
+            toks[0, -len(req.prompt):] = req.prompt          # left-pad
+            logits, cache = self._prefill_fn(plen)(
+                self.params, {"tokens": jnp.asarray(toks)})
+            nxt = int(jnp.argmax(logits[0, -1]))
+            self.state = _install_slot(self.state, cache, si, plen, nxt)
+            meta = self.slot_meta[si]
+            meta.rid, meta.remaining = req.rid, req.max_new_tokens
+            req.tokens.append(nxt)
+            req.first_token_s = time.monotonic() - req.submitted
+            self._live[req.rid] = req
+        self.state = {**self.state, "pos": jnp.asarray(plen, jnp.int32)}
+
+    def step(self) -> int:
+        """One engine iteration.  Returns number of tokens decoded."""
+        live = [m for m in self.slot_meta if m.rid != -1]
+        if not live:
+            self._start_wave()
+            live = [m for m in self.slot_meta if m.rid != -1]
+            if not live:
+                return 0
+        logits, self.state = self._decode(self.params, self.state)
+        self.steps += 1
+        self.idle_slot_steps += self.slots - len(live)
+        toks = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for si, meta in enumerate(self.slot_meta):
+            if meta.rid == -1:
+                continue
+            req = self._live[meta.rid]
+            req.tokens.append(int(toks[si]))
+            meta.remaining -= 1
+            if meta.remaining <= 0 or int(self.state["pos"]) >= self.max_len - 1:
+                req.done_s = time.monotonic() - req.submitted
+                self.done[req.rid] = req
+                del self._live[meta.rid]
+                meta.rid = -1
+        return len(live)
+
+    def run(self, *, max_steps: int = 10_000) -> dict:
+        t0 = time.monotonic()
+        decoded = 0
+        while (self.queue or self._live) and self.steps < max_steps:
+            decoded += self.step()
+        wall = time.monotonic() - t0
+        util = (decoded / (self.steps * self.slots)) if self.steps else 0.0
+        return {
+            "completed": len(self.done),
+            "decode_steps": self.steps,
+            "tokens_decoded": decoded,
+            "slot_utilization": util,
+            "wall_s": wall,
+            "tok_per_s": decoded / wall if wall else 0.0,
+            "mean_ttft_s": float(np.mean([r.first_token_s
+                                          for r in self.done.values()]))
+            if self.done else None,
+        }
+
+
+# --------------------------------------------------------------------------
+
+
+def _install_slot(state, prefill_cache, slot: int, plen: int, next_token: int):
+    """Copy one prefilled request's cache rows into batch row `slot` of the
+    engine's shared decode state.  All LM cache leaves are stacked
+    (n_groups/L, B, ...), so the batch dim is 1 everywhere."""
+    def merge(dst, src):
+        src_b = jnp.moveaxis(src, 1, 0)[0]           # drop batch (=1)
+        dst_b = jnp.moveaxis(dst, 1, 0)              # (B, groups, ...)
+        dst_b = dst_b.at[slot].set(
+            _fit_rows(src_b, dst_b.shape[1:]).astype(dst.dtype))
+        return jnp.moveaxis(dst_b, 0, 1)
+
+    new_cache = jax.tree.map(merge, state["cache"], prefill_cache)
+    token = state["token"].at[slot, 0].set(next_token)
+    return {"cache": new_cache, "token": token, "pos": state["pos"]}
+
+
+def _fit_rows(src, dst_shape):
+    """Pad/crop the row dim of src (groups, T', ...) to dst (groups, T, ...)."""
+    if src.shape == tuple(dst_shape):
+        return src
+    out = src
+    for ax in range(len(dst_shape)):
+        T, Tp = dst_shape[ax], out.shape[ax]
+        if Tp > T:
+            out = jax.lax.slice_in_dim(out, 0, T, axis=ax)
+        elif Tp < T:
+            pad = [(0, 0)] * out.ndim
+            pad[ax] = (0, T - Tp)
+            out = jnp.pad(out, pad)
+    return out

@@ -1,0 +1,12 @@
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: multi-second integration tests (dry-run subprocess)")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    import jax
+    return jax.random.key(0)

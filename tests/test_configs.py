@@ -1,0 +1,89 @@
+"""Config system: registry, derived structure, analytic param counts."""
+
+import pytest
+
+from repro.configs.base import (SHAPES, applicable_shapes, get_config,
+                                get_smoke_config, list_archs)
+from repro.models.transformer import group_period, layer_slots
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].tokens == 4_096 * 256
+    assert SHAPES["long_500k"].global_batch == 1
+    assert SHAPES["decode_32k"].mode == "decode"
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_full_config_loads(arch):
+    cfg = get_config(arch)
+    assert cfg.name == arch
+    assert cfg.param_count() > 0
+    assert cfg.active_param_count() <= cfg.param_count()
+
+
+# Published sizes (total params).  Loose bands: our analytic count vs the
+# models' advertised scale.
+_EXPECTED_B = {
+    "jamba-v0.1-52b": (49, 55),
+    "gemma-2b": (2.0, 3.0),
+    "starcoder2-3b": (2.6, 3.6),
+    "smollm-360m": (0.30, 0.42),
+    "minicpm3-4b": (3.4, 4.6),
+    "llava-next-mistral-7b": (6.6, 7.9),
+    "mixtral-8x7b": (44, 49),
+    "mamba2-370m": (0.30, 0.45),
+}
+
+
+@pytest.mark.parametrize("arch,band", sorted(_EXPECTED_B.items()))
+def test_param_count_matches_published(arch, band):
+    n = get_config(arch).param_count() / 1e9
+    assert band[0] <= n <= band[1], (arch, n)
+
+
+def test_mixtral_active_params():
+    cfg = get_config("mixtral-8x7b")
+    active = cfg.active_param_count() / 1e9
+    assert 11 <= active <= 15, active          # ~12.9B advertised
+
+
+def test_jamba_interleave():
+    cfg = get_config("jamba-v0.1-52b")
+    assert group_period(cfg) == 8
+    slots = layer_slots(cfg)
+    assert [s["mixer"] for s in slots].count("attn") == 1    # 1:7 attn:mamba
+    assert slots[7]["mixer"] == "attn"
+    # MoE every 2nd layer
+    assert [s["ffn"] for s in slots] == ["dense", "moe"] * 4
+    assert cfg.attn_layer_indices() == (7, 15, 23, 31)
+
+
+def test_mamba2_attention_free():
+    cfg = get_config("mamba2-370m")
+    assert cfg.is_attention_free
+    assert cfg.attn_layer_indices() == ()
+    assert all(s["mixer"] == "ssm" for s in layer_slots(cfg))
+    assert all(s["ffn"] == "none" for s in layer_slots(cfg))
+
+
+def test_long_context_applicability():
+    # SSM / hybrid / SWA run long_500k; pure full-attention archs skip it.
+    runs = {a for a in list_archs()
+            if "long_500k" in applicable_shapes(get_config(a))}
+    assert runs == {"jamba-v0.1-52b", "mamba2-370m", "mixtral-8x7b"}
+
+
+def test_whisper_encdec():
+    cfg = get_config("whisper-small")
+    assert cfg.is_encdec and cfg.encoder_layers == 12
+    assert cfg.frontend_tokens == 1500
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_config_same_family(arch):
+    full, smoke = get_config(arch), get_smoke_config(arch)
+    assert smoke.family == full.family
+    assert (smoke.moe is None) == (full.moe is None)
+    assert (smoke.ssm is None) == (full.ssm is None)
+    assert (smoke.mla is None) == (full.mla is None)
+    assert smoke.is_encdec == full.is_encdec

@@ -1,0 +1,165 @@
+"""Pallas kernel sweeps: shapes x dtypes vs the pure-jnp ref oracles
+(interpret mode on CPU, per the assignment)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.grouped_matmul.ops import grouped_matmul
+from repro.kernels.grouped_matmul.ref import grouped_matmul_ref
+from repro.kernels.rmsnorm.ops import rmsnorm_fused
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+KEY = jax.random.key(42)
+
+
+def _rand(shape, dtype, k, scale=1.0):
+    return (jax.random.normal(jax.random.fold_in(KEY, k), shape,
+                              jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,T,H,K,Dh,window", [
+    (2, 128, 128, 4, 2, 64, None),
+    (1, 256, 256, 8, 1, 64, None),       # MQA
+    (2, 96, 96, 6, 3, 32, None),         # unaligned
+    (1, 192, 192, 4, 4, 128, 64),        # SWA
+    (1, 64, 256, 2, 2, 64, None),        # T > S (continuation)
+])
+def test_flash_attention_sweep(B, S, T, H, K, Dh, window, dtype):
+    q = _rand((B, S, H, Dh), dtype, 1)
+    k = _rand((B, T, K, Dh), dtype, 2)
+    v = _rand((B, T, K, Dh), dtype, 3)
+    off = T - S
+    out = flash_attention(q, k, v, causal=True, window=window, q_offset=off,
+                          block_q=64, block_k=64)
+    ref = attention_ref(q, k, v, causal=True, window=window, q_offset=off)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=5e-2, atol=2e-2)
+
+
+def test_flash_attention_noncausal():
+    q = _rand((1, 64, 4, 32), jnp.float32, 4)
+    k = _rand((1, 128, 2, 32), jnp.float32, 5)
+    v = _rand((1, 128, 2, 32), jnp.float32, 6)
+    out = flash_attention(q, k, v, causal=False, block_q=32, block_k=32)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=5e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (flash-decode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,T,H,K,Dh", [
+    (2, 256, 4, 2, 64),
+    (1, 512, 8, 8, 128),
+    (3, 160, 6, 3, 32),
+    (2, 128, 4, 1, 64),                  # MQA
+])
+def test_decode_attention_sweep(B, T, H, K, Dh, dtype):
+    q = _rand((B, H, Dh), dtype, 7)
+    kc = _rand((B, T, K, Dh), dtype, 8)
+    vc = _rand((B, T, K, Dh), dtype, 9)
+    lens = jnp.asarray([T, T // 3, 1][:B] + [T] * max(0, B - 3), jnp.int32)
+    out = decode_attention(q, kc, vc, lens, block_t=64)
+    ref = decode_attention_ref(q, kc, vc, lens)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=5e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,S,H,P,G,N,chunk", [
+    (2, 256, 4, 64, 1, 128, 64),
+    (1, 192, 8, 32, 2, 64, 64),          # grouped B/C
+    (2, 128, 2, 64, 1, 128, 128),        # single chunk
+    (1, 100, 4, 32, 1, 64, 32),          # padding
+])
+def test_ssd_scan_sweep(b, S, H, P, G, N, chunk, dtype):
+    x = _rand((b, S, H, P), dtype, 10)
+    dt = jax.nn.softplus(_rand((b, S, H), jnp.float32, 11))
+    A = -jnp.exp(_rand((H,), jnp.float32, 12, scale=0.5))
+    B = _rand((b, S, G, N), dtype, 13, scale=0.3)
+    C = _rand((b, S, G, N), dtype, 14, scale=0.3)
+    y, sf = ssd_scan(x, dt, A, B, C, chunk=chunk)
+    yr, sr = ssd_scan_ref(x, dt, A, B, C)
+    tol = 1e-3 if dtype == jnp.float32 else 6e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(yr),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sr),
+                               rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# grouped matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("E,D,F,bm,sizes", [
+    (4, 64, 128, 32, (64, 32, 96, 32)),
+    (2, 128, 256, 64, (128, 64)),
+    (8, 32, 64, 16, (16,) * 8),
+    (3, 96, 96, 32, (0, 64, 32)),        # empty group
+])
+def test_grouped_matmul_sweep(E, D, F, bm, sizes, dtype):
+    T = sum(sizes) + bm                   # tail rows owned by nobody
+    x = _rand((T, D), dtype, 15)
+    x = x.at[sum(sizes):].set(0)
+    w = _rand((E, D, F), dtype, 16, scale=0.1)
+    gs = jnp.asarray(sizes, jnp.int32)
+    y = grouped_matmul(x, w, gs, block_m=bm, block_n=32)
+    yr = grouped_matmul_ref(x, w, gs)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 64, 96), (2, 256, 960), (8, 128)])
+@pytest.mark.parametrize("with_residual", [False, True])
+def test_rmsnorm_sweep(shape, dtype, with_residual):
+    x = _rand(shape, dtype, 17)
+    res = _rand(shape, dtype, 18) if with_residual else None
+    sc = _rand((shape[-1],), jnp.float32, 19, scale=0.1)
+    o, r = rmsnorm_fused(x, sc, res)
+    orf, rrf = rmsnorm_ref(x, sc, residual=res)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(orf, np.float32),
+                               rtol=5e-2, atol=5e-2)
+    np.testing.assert_allclose(np.asarray(r, np.float32),
+                               np.asarray(rrf, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_flash_attention_noncausal_unaligned():
+    """Non-causal with T not block-aligned: padded kv rows must get zero
+    softmax mass (regression for the t_total plumbing)."""
+    q = _rand((1, 48, 4, 32), jnp.float32, 20)
+    k = _rand((1, 100, 2, 32), jnp.float32, 21)
+    v = _rand((1, 100, 2, 32), jnp.float32, 22)
+    out = flash_attention(q, k, v, causal=False, block_q=32, block_k=32)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=5e-2, atol=2e-2)

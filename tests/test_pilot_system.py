@@ -1,0 +1,290 @@
+"""The paper's functional claims, as tests.
+
+§3.3 unprivileged late binding (pod-scoped capability, image patch, warm
+rebinding), §3.4 monitoring via the shared process table + uid model,
+§3.5 env setup + exit-code relay, §3.6 cleanup by restart, plus the dHTC
+fault-tolerance substrate: leases, re-queue on node failure,
+first-completion-wins, straggler kill, checkpoint resume.
+"""
+
+import time
+
+import pytest
+
+from repro.core.arena import SharedArena
+from repro.core.cluster import ClusterSim
+from repro.core.images import ExecutableRegistry, PLACEHOLDER, PayloadImage
+from repro.core.latebind import PayloadExecutor, PermissionError_, PodPatchCapability
+from repro.core.monitor import Monitor, MonitorLimits
+from repro.core.pilot import Pilot, PilotConfig
+from repro.core.proctable import PAYLOAD_UID, PILOT_UID, ProcessTable
+from repro.core.taskrepo import PayloadTask, TaskRepo, TaskResult
+
+SMOKE_TRAIN = PayloadImage("smollm-360m", "smoke", "train")
+SMOKE_DECODE = PayloadImage("smollm-360m", "smoke", "decode")
+
+
+# ---------------------------------------------------------------------------
+# §3.3 late binding
+# ---------------------------------------------------------------------------
+
+def _executor(tmp_path):
+    arena = SharedArena(str(tmp_path / "arena"))
+    pt = ProcessTable()
+    reg = ExecutableRegistry()
+    ex = PayloadExecutor("pod-A", arena, pt, reg)
+    return ex, arena, pt, reg
+
+
+def test_placeholder_installed_at_creation(tmp_path):
+    ex, *_ = _executor(tmp_path)
+    assert ex.image == PLACEHOLDER
+    assert ex.state == "unbound"
+
+
+def test_pod_patch_capability_is_pod_scoped(tmp_path):
+    """The §3.3 authorization: 'pod patch' only inside its own pod."""
+    ex, *_ = _executor(tmp_path)
+    with pytest.raises(PermissionError_):
+        ex.patch_image(PodPatchCapability(pod_id="pod-B"), SMOKE_TRAIN)
+    exe = ex.patch_image(PodPatchCapability(pod_id="pod-A"), SMOKE_TRAIN)
+    assert ex.state == "bound" and exe.image == SMOKE_TRAIN
+
+
+def test_wait_for_spec_timeout_is_exit_124(tmp_path):
+    """Payload container started but no startup spec ever appears."""
+    ex, arena, _, _ = _executor(tmp_path)
+    ex.patch_image(PodPatchCapability("pod-A"), SMOKE_DECODE)
+    ex.start(spec_timeout=0.2)
+    ex.join(timeout=10.0)
+    assert arena.read_exit()["exitcode"] == 124
+
+
+def test_warm_rebind_skips_compilation(tmp_path):
+    """The measurable late-binding win: second bind of the same image is a
+    cache hit (image already 'pulled' on the node)."""
+    ex, _, _, reg = _executor(tmp_path)
+    cap = PodPatchCapability("pod-A")
+    e1 = ex.patch_image(cap, SMOKE_DECODE)
+    e2 = ex.patch_image(cap, SMOKE_DECODE)
+    assert not e1.cached and e2.cached
+    assert reg.stats["hits"] == 1
+    # single-flight: concurrent pulls compile once
+    import threading
+    reg2 = ExecutableRegistry()
+    outs = []
+    ts = [threading.Thread(target=lambda: outs.append(
+        reg2.pull(SMOKE_DECODE))) for _ in range(4)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert reg2.stats["misses"] == 1 and len(outs) == 4
+
+
+def test_restart_invalidates_waiting_container(tmp_path):
+    """reset() while the old container waits for a spec: the old generation
+    must not execute a spec published after the restart."""
+    ex, arena, pt, _ = _executor(tmp_path)
+    cap = PodPatchCapability("pod-A")
+    ex.patch_image(cap, SMOKE_DECODE)
+    ex.start(spec_timeout=5.0)
+    ex.reset()
+    assert ex.state == "bound"
+    ex.start(spec_timeout=5.0)
+    arena.publish_startup_spec({"n_steps": 1})
+    ex.join(timeout=30.0)
+    assert arena.read_exit()["exitcode"] == 0
+
+
+# ---------------------------------------------------------------------------
+# §3.4 process table + uid model
+# ---------------------------------------------------------------------------
+
+def test_uid_visibility_and_signal_rules():
+    pt = ProcessTable()
+    pe = pt.register(PILOT_UID, "pilot")
+    we = pt.register(PAYLOAD_UID, "payload")
+    # pilot sees all; payload sees only its own uid
+    assert {e.pid for e in pt.entries()} == {pe.pid, we.pid}
+    assert {e.pid for e in pt.entries(viewer_uid=PAYLOAD_UID)} == {we.pid}
+    # payload cannot signal the pilot (EPERM), pilot can signal payload
+    assert not pt.kill(pe.pid, signaller_uid=PAYLOAD_UID)
+    assert pt.kill(we.pid, signaller_uid=PILOT_UID)
+    assert we.stop.is_set()
+
+
+def test_monitor_wall_limit_kills():
+    pt = ProcessTable()
+    e = pt.register(PAYLOAD_UID, "payload")
+    mon = Monitor(pt, MonitorLimits(max_wall=0.5))
+    acts = mon.scan(now=e.started + 1.0)
+    assert [a.kind for a in acts] == ["kill-wall"]
+    assert e.stop.is_set()
+
+
+def test_monitor_straggler_detection():
+    pt = ProcessTable()
+    e = pt.register(PAYLOAD_UID, "payload")
+    for _ in range(5):
+        pt.heartbeat(e.pid, 1.0)                 # 1 s/step
+    mon = Monitor(pt, MonitorLimits(max_wall=1e9, straggler_factor=3.0),
+                  fleet_median_fn=lambda: 0.1)   # fleet does 100 ms/step
+    acts = mon.scan()
+    assert [a.kind for a in acts] == ["kill-straggler"]
+
+
+def test_monitor_healthy_payload_untouched():
+    pt = ProcessTable()
+    e = pt.register(PAYLOAD_UID, "payload")
+    for _ in range(5):
+        pt.heartbeat(e.pid, 0.1)
+    mon = Monitor(pt, MonitorLimits(max_wall=1e9, straggler_factor=3.0),
+                  fleet_median_fn=lambda: 0.1)
+    assert mon.scan() == []
+    assert not e.stop.is_set()
+
+
+# ---------------------------------------------------------------------------
+# §3.5 env + exit-code relay, §3.6 cleanup
+# ---------------------------------------------------------------------------
+
+def test_env_and_exit_relay_through_arena(tmp_path):
+    arena = SharedArena(str(tmp_path / "a"))
+    arena.write_env({"seed": 3, "pilot": "p1"})
+    assert arena.read_env()["seed"] == 3
+    arena.report_exit(7, {"steps": 2})
+    got = arena.read_exit()
+    assert got["exitcode"] == 7 and got["telemetry"]["steps"] == 2
+
+
+def test_wipe_shared_preserves_private(tmp_path):
+    arena = SharedArena(str(tmp_path / "a"))
+    arena.stage_file("in/data.bin", b"x")
+    with open(f"{arena.private}/lease.json", "w") as f:
+        f.write("{}")
+    arena.wipe_shared()
+    assert arena.shared_files() == []
+    import os
+    assert os.path.exists(f"{arena.private}/lease.json")
+
+
+# ---------------------------------------------------------------------------
+# TaskRepo: matchmaking, leases, first-wins
+# ---------------------------------------------------------------------------
+
+def test_matchmaking_requirements_and_priority():
+    repo = TaskRepo()
+    t_gpu = repo.submit(SMOKE_TRAIN, priority=0,
+                        requirements=lambda ad: ad["labels"].get("accel") == "tpu")
+    t_any = repo.submit(SMOKE_DECODE, priority=5)
+    ad = {"pilot_id": "p", "labels": {}}
+    got = repo.match(ad)
+    assert got.task_id == t_any                 # higher priority, matching
+    assert repo.match(ad) is None               # tpu-only task doesn't match
+    got2 = repo.match({"pilot_id": "p2", "labels": {"accel": "tpu"}})
+    assert got2.task_id == t_gpu
+
+
+def test_lease_expiry_requeues():
+    repo = TaskRepo(lease_ttl=0.05)
+    tid = repo.submit(SMOKE_TRAIN)
+    task = repo.match({"pilot_id": "p1", "labels": {}})
+    assert task.task_id == tid
+    assert repo.stats()["leased"] == 1
+    time.sleep(0.1)
+    assert repo.reap_leases() == 1
+    assert repo.stats() == {"queued": 1, "leased": 0, "done": 0, "failed": 0}
+
+
+def test_first_completion_wins():
+    repo = TaskRepo()
+    tid = repo.submit(SMOKE_TRAIN)
+    repo.match({"pilot_id": "p1", "labels": {}})
+    r1 = TaskResult(tid, "p1", 0, {})
+    r2 = TaskResult(tid, "p2", 0, {})
+    assert repo.complete(r1) is True
+    assert repo.complete(r2) is False           # speculative duplicate dropped
+    assert repo.result(tid).pilot_id == "p1"
+
+
+def test_failed_payload_retries_then_fails():
+    repo = TaskRepo()
+    tid = repo.submit(SMOKE_TRAIN, max_attempts=2)
+    for attempt in range(2):
+        t = repo.match({"pilot_id": "p", "labels": {}})
+        assert t is not None and t.attempts == attempt + 1
+        repo.complete(TaskResult(tid, "p", 1, {}))
+        repo.release(t, failed=True)
+    assert repo.match({"pilot_id": "p", "labels": {}}) is None
+    assert repo.stats()["failed"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Integration: full pilot lifecycle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_pilot_runs_multiple_payloads_one_slice():
+    """One resource claim, several different payloads — the core late-binding
+    value proposition (multi-payload pilot)."""
+    sim = ClusterSim()
+    t1 = sim.repo.submit(PayloadImage("smollm-360m", "smoke", "train"),
+                         n_steps=2)
+    t2 = sim.repo.submit(PayloadImage("gemma-2b", "smoke", "decode"),
+                         n_steps=2)
+    (s,) = sim.provision(1)
+    p = sim.spawn_pilot(s, PilotConfig(max_payloads=4, idle_grace=1.0))
+    assert sim.run_until_drained(timeout=300.0)
+    sim.join_all(30.0)
+    assert sim.repo.result(t1).exitcode == 0
+    assert sim.repo.result(t2).exitcode == 0
+    assert len(p.history) == 2
+    assert s.released                            # step (h): slice released
+
+
+@pytest.mark.slow
+def test_node_failure_requeue_and_recovery():
+    """Hard pilot death mid-payload -> lease expires -> second pilot
+    completes the task (at-least-once delivery)."""
+    repo = TaskRepo(lease_ttl=0.5)
+    sim = ClusterSim(repo=repo)
+    tid = repo.submit(PayloadImage("smollm-360m", "smoke", "train"),
+                      n_steps=3, max_attempts=5)
+    (s1,) = sim.provision(1)
+    p1 = sim.spawn_pilot(s1, PilotConfig(max_payloads=2, idle_grace=0.5))
+    time.sleep(0.3)                              # let it lease the task
+    sim.fail_node(s1.slice_id)
+    p1.join(30.0)
+    assert p1.state == "failed"
+    (s2,) = sim.provision(1)
+    sim.spawn_pilot(s2, PilotConfig(max_payloads=2, idle_grace=2.0))
+    assert sim.run_until_drained(timeout=300.0)
+    sim.join_all(30.0)
+    res = repo.result(tid)
+    assert res is not None and res.exitcode == 0
+    assert res.pilot_id != p1.pilot_id
+
+
+@pytest.mark.slow
+def test_checkpoint_resume_across_pilots(tmp_path):
+    """Train payload checkpoints; after a re-queue the successor resumes
+    from the last step instead of starting over."""
+    repo = TaskRepo(lease_ttl=60.0)
+    sim = ClusterSim(repo=repo)
+    ck = str(tmp_path / "ck")
+    resume = {"ckpt_dir": ck, "ckpt_every": 2}
+    tid = repo.submit(PayloadImage("smollm-360m", "smoke", "train"),
+                      n_steps=4, resume=resume)
+    (s,) = sim.provision(1)
+    sim.spawn_pilot(s, PilotConfig(max_payloads=2, idle_grace=1.0))
+    assert sim.run_until_drained(timeout=300.0)
+    sim.join_all(30.0)
+    from repro.ckpt import checkpoint as ckpt
+    assert ckpt.latest_step(ck) == 4
+    # resubmit the same task: it must resume from step 4 (0 new steps run)
+    tid2 = repo.submit(PayloadImage("smollm-360m", "smoke", "train"),
+                       n_steps=4, resume=resume)
+    (s2,) = sim.provision(1)
+    sim.spawn_pilot(s2, PilotConfig(max_payloads=2, idle_grace=1.0))
+    assert sim.run_until_drained(timeout=300.0)
+    sim.join_all(30.0)
+    assert repo.result(tid2).telemetry.get("resumed_from") == 4

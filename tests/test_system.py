@@ -1,0 +1,43 @@
+"""Import-everything sanity + public API surface."""
+
+
+def test_imports():
+    import repro.configs.base            # noqa: F401
+    import repro.core.arena              # noqa: F401
+    import repro.core.cluster            # noqa: F401
+    import repro.core.images             # noqa: F401
+    import repro.core.latebind           # noqa: F401
+    import repro.core.monitor            # noqa: F401
+    import repro.core.pilot              # noqa: F401
+    import repro.core.proctable          # noqa: F401
+    import repro.core.taskrepo           # noqa: F401
+    import repro.core.wrapper            # noqa: F401
+    import repro.ckpt.checkpoint         # noqa: F401
+    import repro.data.synthetic          # noqa: F401
+    import repro.launch.hlo_stats        # noqa: F401
+    import repro.launch.mesh             # noqa: F401
+    import repro.launch.specs            # noqa: F401
+    import repro.launch.steps            # noqa: F401
+    import repro.models.api              # noqa: F401
+    import repro.optim.adamw             # noqa: F401
+    import repro.runtime.compression     # noqa: F401
+    import repro.runtime.elastic         # noqa: F401
+    import repro.runtime.mesh            # noqa: F401
+    import repro.runtime.sharding        # noqa: F401
+    import repro.serving.engine          # noqa: F401
+
+
+def test_arch_registry_complete():
+    from repro.configs.base import list_archs
+    assert list_archs() == (
+        "gemma-2b", "granite-moe-3b-a800m", "jamba-v0.1-52b",
+        "llava-next-mistral-7b", "mamba2-370m", "minicpm3-4b",
+        "mixtral-8x7b", "smollm-360m", "starcoder2-3b", "whisper-small")
+
+
+def test_every_arch_has_smoke_config():
+    from repro.configs.base import get_smoke_config, list_archs
+    for a in list_archs():
+        cfg = get_smoke_config(a)
+        assert cfg.num_layers <= 8, (a, "smoke config must be reduced")
+        assert cfg.vocab_size <= 4096
