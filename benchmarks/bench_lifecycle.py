@@ -30,8 +30,8 @@ def run() -> list[tuple[str, float, str]]:
     out.append(("a_start_s", time.monotonic() - t, "arena+placeholder"))
 
     t = time.monotonic()
-    task = repo.match({"pilot_id": "bench", "labels": {}})
-    out.append(("b_match_s", time.monotonic() - t, "matchmaking"))
+    task = repo.match_wait({"pilot_id": "bench", "labels": {}}, timeout=1.0)
+    out.append(("b_match_s", time.monotonic() - t, "matchmaking (indexed)"))
 
     t = time.monotonic()
     ex.patch_image(PodPatchCapability("pod-l"), task.image)
@@ -42,8 +42,7 @@ def run() -> list[tuple[str, float, str]]:
                 "pod patch + stage + publish spec"))
 
     t = time.monotonic()
-    while ex.running:
-        time.sleep(0.01)
+    ex.wait_exit(timeout=300.0)          # park on the exit event, no polling
     out.append(("d_payload_run_s", time.monotonic() - t,
                 f"{task.n_steps} train steps incl. jit"))
 

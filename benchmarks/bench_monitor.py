@@ -37,4 +37,18 @@ def run() -> list[tuple[str, float, str]]:
             break
     out.append(("straggler_detect_scans", float(scans),
                 "heartbeats until kill at 10x median"))
+
+    # EWMA eviction: exited pids must not accumulate state across payloads
+    pt = ProcessTable()
+    mon = Monitor(pt, MonitorLimits(max_wall=1e9),
+                  fleet_median_fn=lambda: 0.1)
+    for i in range(1000):
+        e = pt.register(PAYLOAD_UID, f"gen{i}")
+        for _ in range(3):
+            pt.heartbeat(e.pid, 0.1)
+        mon.scan()
+        pt.mark_exited(e.pid, 0)
+    mon.scan()
+    out.append(("monitor_ewma_entries_after_1k_payloads", float(len(mon._ewma)),
+                "leak check: must stay O(live payloads)"))
     return out

@@ -18,31 +18,28 @@ sim = ClusterSim()
 for i in range(4):
     sim.repo.submit(PayloadImage("smollm-360m", "smoke", "train"), n_steps=2)
 
-slices = sim.provision(2)
-pilots = [sim.spawn_pilot(s, PilotConfig(max_payloads=6, idle_grace=2.0))
-          for s in slices]
+fleet = sim.spawn_fleet(2, PilotConfig(max_payloads=6, idle_grace=2.0))
 plan0 = sim.remesh_plan(model_parallel=16, global_batch=256)
 print(f"  2 live pilots -> mesh {plan0.new_mesh.shape} "
       f"(per-slice batch {plan0.new_per_data})")
 
-sim.drain(slices[0].slice_id)
-pilots[0].join(60.0)
+(victim,) = fleet.scale_down(1)          # graceful drain, event-driven
+victim.join(60.0)
 plan1 = sim.remesh_plan(model_parallel=16, global_batch=256,
                         old=plan0.new_mesh)
-print(f"  after drain -> mesh {plan1.new_mesh.shape} "
+print(f"  after drain ({victim.state}) -> mesh {plan1.new_mesh.shape} "
       f"(per-slice batch {plan1.new_per_data}); actions: {plan1.actions}")
 
-assert sim.run_until_drained(timeout=300.0)
+assert fleet.await_drained(timeout=300.0)
 print(f"  queue drained by the remaining pilot: {sim.repo.stats()}")
-sim.join_all(30.0)
+fleet.join_all(30.0)
 
 # grow back: three fresh slices join the fleet
 print("== elastic scale-up ==")
-for s in sim.provision(3):
-    sim.spawn_pilot(s, PilotConfig(max_payloads=1, idle_grace=1.0))
+fleet.scale_up(3)
 plan2 = sim.remesh_plan(model_parallel=16, global_batch=256,
                         old=plan1.new_mesh)
-print(f"  3 live pilots -> mesh {plan2.new_mesh.shape} "
+print(f"  {fleet.size()} live pilots -> mesh {plan2.new_mesh.shape} "
       f"(per-slice batch {plan2.new_per_data}); actions: {plan2.actions}")
-sim.join_all(30.0)
+fleet.join_all(30.0)
 print("elastic demo OK")

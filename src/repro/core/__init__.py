@@ -10,7 +10,7 @@ Kubernetes -> ClusterSim.
 """
 
 from repro.core.arena import SharedArena
-from repro.core.cluster import ClusterSim, PilotSlice
+from repro.core.cluster import ClusterSim, Fleet, PilotSlice
 from repro.core.images import (
     Executable, ExecutableRegistry, PLACEHOLDER, PayloadImage,
 )
@@ -18,16 +18,20 @@ from repro.core.latebind import (
     PayloadExecutor, PermissionError_, PodPatchCapability,
 )
 from repro.core.monitor import Monitor, MonitorAction, MonitorLimits
-from repro.core.pilot import Pilot, PilotConfig
+from repro.core.pilot import (
+    InvalidTransition, Pilot, PilotConfig, TERMINAL_STATES, TRANSITIONS,
+)
 from repro.core.proctable import PAYLOAD_UID, PILOT_UID, ProcessTable
 from repro.core.taskrepo import PayloadTask, TaskRepo, TaskResult
+from repro.core.timerwheel import TimerWheel, shared_wheel
 from repro.core.wrapper import PayloadCapability, run_wrapper
 
 __all__ = [
-    "SharedArena", "ClusterSim", "PilotSlice", "Executable",
+    "SharedArena", "ClusterSim", "Fleet", "PilotSlice", "Executable",
     "ExecutableRegistry", "PLACEHOLDER", "PayloadImage", "PayloadExecutor",
     "PermissionError_", "PodPatchCapability", "Monitor", "MonitorAction",
-    "MonitorLimits", "Pilot", "PilotConfig", "PAYLOAD_UID", "PILOT_UID",
-    "ProcessTable", "PayloadTask", "TaskRepo", "TaskResult",
-    "PayloadCapability", "run_wrapper",
+    "MonitorLimits", "InvalidTransition", "Pilot", "PilotConfig",
+    "TERMINAL_STATES", "TRANSITIONS", "PAYLOAD_UID", "PILOT_UID",
+    "ProcessTable", "PayloadTask", "TaskRepo", "TaskResult", "TimerWheel",
+    "shared_wheel", "PayloadCapability", "run_wrapper",
 ]

@@ -5,6 +5,11 @@ failures, and supports elastic grow/shrink.  The simulation is deliberately
 thin: its job is to exercise the pilot system's provisioning-facing
 contracts (grant -> run -> release; hard failure -> lease expiry -> re-queue;
 membership change -> remesh plan) so they are testable without a cluster.
+
+The :class:`Fleet` layer manages N pilots as one unit — spawn, scale up,
+graceful scale-down, await-drained — all notification-driven:
+``run_until_drained``/``Fleet.await_drained`` block on the repo's drain
+event instead of polling ``stats()`` on a timer.
 """
 
 from __future__ import annotations
@@ -12,13 +17,12 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import threading
-import time
 from typing import Optional
 
 import jax
 
 from repro.core.images import ExecutableRegistry
-from repro.core.pilot import Pilot, PilotConfig
+from repro.core.pilot import Pilot, PilotConfig, TERMINAL_STATES
 from repro.core.taskrepo import TaskRepo
 from repro.runtime.elastic import plan_remesh
 from repro.runtime.mesh import MeshSpec
@@ -69,6 +73,13 @@ class ClusterSim:
         p.start_async()
         return p
 
+    def spawn_fleet(self, n_pilots: int, config: PilotConfig | None = None,
+                    *, labels: dict | None = None, mesh=None) -> "Fleet":
+        """Provision n slices and start a pilot on each, as one Fleet."""
+        fleet = Fleet(self, config, labels=labels, mesh=mesh)
+        fleet.scale_up(n_pilots)
+        return fleet
+
     # ---- failure injection / drain -------------------------------------------
 
     def fail_node(self, slice_id: int):
@@ -79,21 +90,21 @@ class ClusterSim:
         with self._lock:
             p = self.pilots.get(slice_id)
         if p:
-            p.fail_flag.set()
+            p.fail()
             p.proctable.kill_uid(PAYLOAD_UID)
 
     def drain(self, slice_id: int):
         with self._lock:
             p = self.pilots.get(slice_id)
         if p:
-            p.drain_flag.set()
+            p.drain()
 
     # ---- elasticity ------------------------------------------------------------
 
     def live_pilots(self) -> list[Pilot]:
         with self._lock:
             return [p for p in self.pilots.values()
-                    if p.state not in ("terminated", "failed")]
+                    if p.state not in TERMINAL_STATES]
 
     def remesh_plan(self, model_parallel: int, global_batch: int,
                     old: MeshSpec | None = None):
@@ -102,15 +113,70 @@ class ClusterSim:
 
     # ---- convenience -------------------------------------------------------------
 
-    def run_until_drained(self, timeout: float = 60.0, poll: float = 0.05) -> bool:
-        deadline = time.monotonic() + timeout
-        while time.monotonic() < deadline:
-            self.repo.reap_leases()
-            if self.repo.drain_done():
-                return True
-            time.sleep(poll)
-        return False
+    def run_until_drained(self, timeout: float = 60.0,
+                          poll: float | None = None) -> bool:
+        """Block on the repo's drain event (queued == leased == 0).
+
+        Lease expiry is serviced by the repo's deadline-heap timer, so there
+        is nothing to poll; ``poll`` is kept for API compatibility and
+        ignored.
+        """
+        return self.repo.wait_drained(timeout)
 
     def join_all(self, timeout: float = 10.0):
         for p in list(self.pilots.values()):
+            p.join(timeout)
+
+
+class Fleet:
+    """A managed group of pilots over one ClusterSim (paper §4 at scale:
+    provisioning N pods is one autoscaler action, not N manual spawns)."""
+
+    def __init__(self, sim: ClusterSim, config: PilotConfig | None = None,
+                 *, labels: dict | None = None, mesh=None):
+        self.sim = sim
+        self.config = config
+        self.labels = labels
+        self.mesh = mesh
+        self.members: list[Pilot] = []
+
+    # ---- scaling ------------------------------------------------------------
+
+    def scale_up(self, n: int) -> list[Pilot]:
+        """Provision n fresh slices and start a pilot on each."""
+        started = []
+        for s in self.sim.provision(n, labels=self.labels, mesh=self.mesh):
+            started.append(self.sim.spawn_pilot(s, self.config))
+        self.members.extend(started)
+        return started
+
+    def scale_down(self, n: int) -> list[Pilot]:
+        """Gracefully drain the n most recently started live pilots.
+        Pilots already draining don't count — back-to-back calls shed
+        distinct pilots."""
+        victims = [p for p in reversed(self.members)
+                   if p.state not in TERMINAL_STATES
+                   and not p.drain_flag.is_set()][:n]
+        for p in victims:
+            p.drain()
+        return victims
+
+    def live(self) -> list[Pilot]:
+        return [p for p in self.members if p.state not in TERMINAL_STATES]
+
+    def size(self) -> int:
+        return len(self.live())
+
+    # ---- lifecycle ----------------------------------------------------------
+
+    def await_drained(self, timeout: float = 60.0) -> bool:
+        """Block until the repo has nothing queued or leased (drain event)."""
+        return self.sim.repo.wait_drained(timeout)
+
+    def drain_all(self):
+        for p in self.members:
+            p.drain()
+
+    def join_all(self, timeout: float = 10.0):
+        for p in self.members:
             p.join(timeout)

@@ -59,8 +59,14 @@ class PayloadExecutor:
         self.exe: Executable | None = registry.pull(PLACEHOLDER, mesh)
         self.state = UNBOUND
         self.generation = 0               # bumped by every restart/patch
-        self._thread: threading.Thread | None = None
+        self.exit_event: threading.Event | None = None
         self._lock = threading.Lock()
+        # the persistent container-runtime thread: entrypoint generations
+        # boot from a queue instead of spawning a thread per payload
+        self._boot_cond = threading.Condition()
+        self._boot: tuple | None = None
+        self._runtime: threading.Thread | None = None
+        self._closed = False
         self.last_bind_seconds: float | None = None
         self.last_bind_cached: bool | None = None
 
@@ -87,40 +93,85 @@ class PayloadExecutor:
     # container start: wait-for-spec loop, then run the wrapper
     # ------------------------------------------------------------------
 
-    def start(self, *, spec_timeout: float = 30.0):
-        """Start the payload container's entrypoint (async)."""
-        if self._thread is not None and self._thread.is_alive():
+    def start(self, *, spec_timeout: float = 30.0, on_exit=None):
+        """Start the payload container's entrypoint (async).
+
+        ``on_exit`` (optional) is called exactly once when the container's
+        entrypoint finishes, on the container thread — the pilot's
+        event-driven collection hook.  ``exit_event`` is set at the same
+        point, so observers can block without polling ``running``.
+        """
+        if self.running:
             raise RuntimeError("payload container already running")
-        gen = self.generation
+        done = threading.Event()
+        self.exit_event = done
+        with self._boot_cond:
+            self._boot = (self.generation, spec_timeout, on_exit, done)
+            if self._runtime is None or not self._runtime.is_alive():
+                self._runtime = threading.Thread(
+                    target=self._runtime_loop, daemon=True,
+                    name=f"payload-container-{self.pod_id}")
+                self._runtime.start()
+            self._boot_cond.notify()
 
-        def entry():
-            spec = self.arena.wait_for_startup_spec(timeout=spec_timeout)
-            with self._lock:
-                if self.generation != gen:        # restarted while waiting
+    def _runtime_loop(self):
+        """One thread per pod for the container runtime: it parks between
+        payloads and boots each entrypoint generation from the queue."""
+        while True:
+            with self._boot_cond:
+                while self._boot is None and not self._closed:
+                    self._boot_cond.wait()
+                if self._boot is None:    # closed with nothing queued
                     return
-                exe = self.exe
-            if spec is None:
-                self.arena.report_exit(124, {"error": "startup spec timeout"})
+                gen, spec_timeout, on_exit, done = self._boot
+                self._boot = None
+            try:
+                spec = self.arena.wait_for_startup_spec(timeout=spec_timeout)
+                with self._lock:
+                    stale = self.generation != gen    # restarted while waiting
+                    exe = self.exe
+                if stale:
+                    continue
+                if spec is None:
+                    self.arena.report_exit(124, {"error": "startup spec timeout"})
+                    self.state = EXITED
+                else:
+                    self.state = RUNNING
+                    run_wrapper(self.arena, self.proctable, exe, spec)
+                    self.state = EXITED
+            except Exception:             # noqa: BLE001 — runtime survives
                 self.state = EXITED
-                return
-            self.state = RUNNING
-            run_wrapper(self.arena, self.proctable, exe, spec)
-            self.state = EXITED
+            finally:
+                done.set()
+                if on_exit is not None:
+                    try:
+                        on_exit()
+                    except Exception:     # noqa: BLE001
+                        pass
 
-        self._thread = threading.Thread(
-            target=entry, name=f"payload-container-{self.pod_id}", daemon=True)
-        self._thread.start()
+    def close(self):
+        """Tear down the pod: stop the container-runtime thread once the
+        current entrypoint (if any) finishes.  Terminated pilots must call
+        this or every pilot ever created leaks a parked thread."""
+        with self._boot_cond:
+            self._closed = True
+            self._boot_cond.notify()
 
     def join(self, timeout: float | None = None) -> bool:
-        t = self._thread
-        if t is None:
+        """Wait for the current entrypoint generation to finish."""
+        ev = self.exit_event
+        if ev is None:
             return True
-        t.join(timeout)
-        return not t.is_alive()
+        return ev.wait(timeout)
+
+    def wait_exit(self, timeout: float | None = None) -> bool:
+        """Block on the completion event (microsecond wake-up, no polling)."""
+        return self.join(timeout)
 
     @property
     def running(self) -> bool:
-        return self._thread is not None and self._thread.is_alive()
+        ev = self.exit_event
+        return ev is not None and not ev.is_set()
 
     # ------------------------------------------------------------------
     # cleanup by restart (§3.6)
@@ -133,7 +184,7 @@ class PayloadExecutor:
         self.join(timeout=5.0)
         with self._lock:
             self.generation += 1
-            self._thread = None
+            self.exit_event = None
             if back_to_placeholder:
                 self.image = PLACEHOLDER
                 self.exe = self.registry.pull(PLACEHOLDER, self.mesh)

@@ -48,9 +48,11 @@ class Monitor:
         now = now if now is not None else time.monotonic()
         acts: list[MonitorAction] = []
         lim = self.limits
+        running: set[int] = set()
         for e in self.proctable.entries(uid=PAYLOAD_UID, viewer_uid=PILOT_UID):
             if e.state != "running":
                 continue
+            running.add(e.pid)
             wall = now - e.started
             if wall > lim.max_wall:
                 acts.append(MonitorAction(e.pid, "kill-wall",
@@ -71,4 +73,9 @@ class Monitor:
         for a in acts:
             self.proctable.kill(a.pid, signaller_uid=PILOT_UID)
         self.actions.extend(acts)
+        # evict EWMA state for exited/killed pids — without this, a pilot
+        # running thousands of payloads leaks one float per dead pid forever
+        for pid in list(self._ewma):
+            if pid not in running:
+                del self._ewma[pid]
         return acts

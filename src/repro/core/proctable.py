@@ -41,10 +41,35 @@ class ProcEntry:
 
 
 class ProcessTable:
+    """Event-driven: observers subscribe to ``exit`` and ``step`` events
+    instead of scanning the table on a timer.  Callbacks fire on the thread
+    that caused the event, outside the table lock (no lock-order hazards);
+    they must be short and exception-safe."""
+
     def __init__(self):
         self._lock = threading.Lock()
         self._next_pid = 1
         self._entries: dict[int, ProcEntry] = {}
+        self._listeners: list = []        # callables (kind, entry)
+
+    def subscribe(self, fn) -> None:
+        """fn(kind, entry) with kind in {"exit", "step"}."""
+        with self._lock:
+            self._listeners.append(fn)
+
+    def unsubscribe(self, fn) -> None:
+        with self._lock:
+            if fn in self._listeners:
+                self._listeners.remove(fn)
+
+    def _notify(self, kind: str, entry: ProcEntry):
+        with self._lock:
+            listeners = list(self._listeners)
+        for fn in listeners:
+            try:
+                fn(kind, entry)
+            except Exception:             # noqa: BLE001
+                pass
 
     def register(self, uid: int, name: str) -> ProcEntry:
         with self._lock:
@@ -61,6 +86,10 @@ class ProcessTable:
             if e and e.state == "running":
                 e.state = "exited"
                 e.exitcode = exitcode
+            else:
+                e = None
+        if e is not None:
+            self._notify("exit", e)
 
     def heartbeat(self, pid: int, step_time: float):
         with self._lock:
@@ -68,6 +97,8 @@ class ProcessTable:
             if e:
                 e.last_step_time = step_time
                 e.steps_done += 1
+        if e is not None:
+            self._notify("step", e)
 
     # ---- enumeration: uid-scoped, like `ps` in a shared namespace ----------
 

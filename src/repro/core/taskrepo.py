@@ -8,15 +8,35 @@ heartbeat the lease or it expires and the task is re-queued — the
 at-least-once delivery that makes dead pilots harmless (fault tolerance at
 1000-node scale).  First completion wins: duplicate results from speculative
 re-execution are dropped.
+
+Event-driven control plane (this module is its hub):
+
+* ``match_wait(pilot_ad, timeout)`` blocks an idle pilot on a
+  ``threading.Condition`` instead of a sleep loop; ``submit``/``release``/
+  lease expiry notify all waiters, so a new task wakes pilots in
+  microseconds and an idle fleet burns zero CPU.
+* Matchmaking is *indexed*: unconstrained tasks live in one priority heap,
+  tasks with ``require_labels`` (equality constraints) are bucketed per
+  label-set, and only tasks with an opaque predicate need evaluation — a
+  match costs O(log n + predicates checked), not a full queue scan.
+* Lease expiry is a deadline heap serviced by the shared
+  :class:`~repro.core.timerwheel.TimerWheel` (one repo-owned timer), not a
+  side effect piggybacked on every ``match`` call.
+* ``wait_drained(timeout)`` blocks on a drain event that flips whenever
+  queued == leased == 0 — ``ClusterSim.run_until_drained`` no longer polls.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import itertools
 import threading
 import time
+from collections import deque
 from typing import Any, Callable
+
+from repro.core.timerwheel import TimerWheel, shared_wheel
 
 Predicate = Callable[[dict], bool]
 
@@ -26,6 +46,7 @@ class PayloadTask:
     task_id: int
     image: Any                          # PayloadImage (core.images)
     requirements: Predicate | None = None
+    require_labels: dict | None = None  # equality constraints, indexable
     priority: int = 0
     n_steps: int = 20
     max_wall: float = 120.0             # seconds
@@ -52,42 +73,194 @@ class TaskResult:
     outputs: dict[str, bytes] = dataclasses.field(default_factory=dict)
 
 
+class _TaskHeap:
+    """Priority heap of queued tasks: highest priority first, FIFO within a
+    priority level.  Ordered by task_id (submission order), not a per-push
+    sequence — a task re-queued after a predicate rejection or a lease
+    expiry keeps its place instead of starving behind newer tasks."""
+
+    __slots__ = ("_heap",)
+
+    def __init__(self):
+        self._heap: list[tuple[int, int, PayloadTask]] = []
+
+    def push(self, task: PayloadTask):
+        heapq.heappush(self._heap, (-task.priority, task.task_id, task))
+
+    def peek(self) -> PayloadTask | None:
+        return self._heap[0][2] if self._heap else None
+
+    def pop(self) -> PayloadTask:
+        return heapq.heappop(self._heap)[2]
+
+    def __len__(self):
+        return len(self._heap)
+
+    def __bool__(self):
+        return bool(self._heap)
+
+
 class TaskRepo:
-    def __init__(self, *, lease_ttl: float = 10.0):
+    def __init__(self, *, lease_ttl: float = 10.0, wheel: TimerWheel | None = None):
         self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
         self._ids = itertools.count(1)
-        self._queue: list[PayloadTask] = []
+        self._open = _TaskHeap()                      # no constraints
+        self._by_labels: dict[frozenset, _TaskHeap] = {}   # equality-indexed
+        self._pred = _TaskHeap()                      # opaque predicates
         self._leases: dict[int, Lease] = {}
+        self._deadlines: list[tuple[float, int]] = []  # (expires, task_id)
+        self._reap_timer = None
         self._results: dict[int, TaskResult] = {}
         self._failed: dict[int, PayloadTask] = {}
         self._pilot_heartbeats: dict[str, float] = {}
         self._step_times: dict[str, float] = {}     # pilot_id -> EWMA
         self.lease_ttl = lease_ttl
+        self._wheel = wheel or shared_wheel()
+        self._drained = threading.Event()
+        self._drained.set()                           # empty repo is drained
+        # observability for benchmarks: match cost + scheduler wakeups
+        self.match_latencies: deque[float] = deque(maxlen=8192)
+        self.idle_wakeups = 0                         # woke, found no match
+        self.notifies = 0
+
+    # ---- internal: queue index ----------------------------------------------
+
+    def _n_queued(self) -> int:
+        return (len(self._open) + len(self._pred)
+                + sum(len(h) for h in self._by_labels.values()))
+
+    def _enqueue(self, task: PayloadTask):
+        """Route a task to its index bucket.  Caller holds the lock."""
+        if task.requirements is not None:
+            self._pred.push(task)
+        elif task.require_labels:
+            key = frozenset(task.require_labels.items())
+            self._by_labels.setdefault(key, _TaskHeap()).push(task)
+        else:
+            self._open.push(task)
+        self._drained.clear()
+        self.notifies += 1
+        self._cond.notify_all()
+
+    def _update_drained(self):
+        """Caller holds the lock."""
+        if self._n_queued() == 0 and not self._leases:
+            self._drained.set()
+        else:
+            self._drained.clear()
 
     # ---- submission ---------------------------------------------------------
 
     def submit(self, image, **kw) -> int:
         with self._lock:
             tid = next(self._ids)
-            self._queue.append(PayloadTask(task_id=tid, image=image, **kw))
-            self._queue.sort(key=lambda t: -t.priority)
+            self._enqueue(PayloadTask(task_id=tid, image=image, **kw))
             return tid
 
     # ---- matchmaking (step (b)) ---------------------------------------------
 
+    def _try_match(self, pilot_ad: dict) -> PayloadTask | None:
+        """Best matching task across the index buckets.  Caller holds lock.
+
+        Candidates: head of the open heap (O(1)), heads of label buckets
+        satisfied by the pilot's labels (O(#distinct label-sets)), and the
+        best matching predicate task (pops until a predicate passes,
+        non-matching entries are pushed back — O(k log n) for k checked).
+        """
+        t0 = time.perf_counter()
+        labels = pilot_ad.get("labels") or {}
+        best: tuple[tuple[int, int], Callable[[], PayloadTask]] | None = None
+
+        def consider(task: PayloadTask, take: Callable[[], PayloadTask]):
+            nonlocal best
+            rank = (-task.priority, task.task_id)      # FIFO within priority
+            if best is None or rank < best[0]:
+                best = (rank, take)
+
+        head = self._open.peek()
+        if head is not None:
+            consider(head, self._open.pop)
+        for key, h in self._by_labels.items():
+            if h and all(labels.get(k) == v for k, v in key):
+                def take_label(h=h, key=key):
+                    t = h.pop()
+                    if not h:             # drop drained buckets so matches
+                        del self._by_labels[key]   # stay O(active label-sets)
+                    return t
+                consider(h.peek(), take_label)
+        # predicate bucket: pop in priority order until one matches
+        rejected = []
+        while self._pred:
+            cand = self._pred.peek()
+            if best is not None and (-cand.priority, cand.task_id) >= best[0]:
+                break                     # can't beat the indexed candidate
+            cand = self._pred.pop()
+            try:
+                # a task may carry BOTH label constraints and a predicate
+                ok = (not cand.require_labels
+                      or all(labels.get(k) == v
+                             for k, v in cand.require_labels.items())) \
+                    and cand.requirements(pilot_ad)
+            except Exception:             # noqa: BLE001 — bad predicate ≠ crash
+                ok = False
+            if ok:
+                consider(cand, lambda c=cand: c)
+                break
+            rejected.append(cand)
+        for r in rejected:
+            self._pred.push(r)
+
+        if best is None:
+            return None
+        task = best[1]()
+        task.attempts += 1
+        self._leases[task.task_id] = Lease(
+            task=task, pilot_id=pilot_ad["pilot_id"],
+            expires=time.monotonic() + self.lease_ttl)
+        self._push_deadline(task.task_id, self._leases[task.task_id].expires)
+        self.match_latencies.append(time.perf_counter() - t0)
+        return task
+
     def match(self, pilot_ad: dict) -> PayloadTask | None:
         """Lease the best matching task for this pilot ad, or None."""
-        self.reap_leases()
         with self._lock:
-            for i, task in enumerate(self._queue):
-                if task.requirements is None or task.requirements(pilot_ad):
-                    self._queue.pop(i)
-                    task.attempts += 1
-                    self._leases[task.task_id] = Lease(
-                        task=task, pilot_id=pilot_ad["pilot_id"],
-                        expires=time.monotonic() + self.lease_ttl)
+            return self._try_match(pilot_ad)
+
+    def match_wait(self, pilot_ad: dict, timeout: float | None = None,
+                   cancel: Callable[[], bool] | None = None
+                   ) -> PayloadTask | None:
+        """Lease the best matching task, blocking until one appears.
+
+        The pilot parks on the repo condition; ``submit``/``release``/lease
+        expiry wake it.  Returns None on timeout or when ``cancel()`` turns
+        true (drain/failure injection — the caller kicks the condition via
+        :meth:`kick`).
+        """
+        deadline = None if timeout is None else time.monotonic() + timeout
+        woke = False
+        with self._lock:
+            while True:
+                if cancel is not None and cancel():
+                    return None
+                task = self._try_match(pilot_ad)
+                if task is not None:
                     return task
-            return None
+                if woke:                           # woke up, still nothing
+                    self.idle_wakeups += 1
+                if deadline is None:
+                    self._cond.wait()
+                else:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return None
+                    self._cond.wait(timeout=remaining)
+                woke = True
+
+    def kick(self):
+        """Wake all parked pilots so they re-check their cancel conditions."""
+        with self._lock:
+            self._cond.notify_all()
 
     def renew(self, task_id: int, pilot_id: str) -> bool:
         with self._lock:
@@ -95,6 +268,7 @@ class TaskRepo:
             if lease is None or lease.pilot_id != pilot_id:
                 return False
             lease.expires = time.monotonic() + self.lease_ttl
+            self._push_deadline(task_id, lease.expires)
             return True
 
     def heartbeat_pilot(self, pilot_id: str, step_time: float | None = None):
@@ -115,14 +289,18 @@ class TaskRepo:
 
     def complete(self, result: TaskResult) -> bool:
         """Returns True if this result was accepted (first completion wins;
-        speculative duplicates are dropped).  Non-zero exits are NOT stored —
-        the pilot follows up with release(task, failed=True) to retry/fail."""
+        speculative duplicates are dropped).  Non-zero exits keep their lease
+        — the pilot follows up with release(task, failed=True) to retry/fail,
+        so the repo never looks transiently drained between the two calls."""
         with self._lock:
-            self._leases.pop(result.task_id, None)
             if result.task_id in self._results:
+                self._leases.pop(result.task_id, None)
+                self._update_drained()
                 return False                       # speculative duplicate
             if result.exitcode == 0:
+                self._leases.pop(result.task_id, None)
                 self._results[result.task_id] = result
+                self._update_drained()
                 return True
             return False
 
@@ -131,34 +309,75 @@ class TaskRepo:
         with self._lock:
             self._leases.pop(task.task_id, None)
             if task.task_id in self._results:
+                self._update_drained()
                 return
             if failed and task.attempts >= task.max_attempts:
                 self._failed[task.task_id] = task
+                self._update_drained()
                 return
-            self._queue.append(task)
-            self._queue.sort(key=lambda t: -t.priority)
+            self._enqueue(task)
 
-    # ---- lease reaping (dead pilots) -----------------------------------------
+    # ---- lease reaping: deadline heap + repo-owned timer ---------------------
+
+    def _push_deadline(self, task_id: int, expires: float):
+        """Caller holds the lock.  Entries are lazy — renewals push a fresh
+        tuple and stale ones are discarded when popped."""
+        heapq.heappush(self._deadlines, (expires, task_id))
+        self._arm_reap_timer(expires)
+
+    def _arm_reap_timer(self, expires: float):
+        """Caller holds the lock."""
+        if self._reap_timer is None or self._reap_timer.deadline > expires:
+            if self._reap_timer is not None:
+                self._reap_timer.cancel()
+            self._reap_timer = self._wheel.call_at(expires, self._on_reap_timer)
+
+    def _on_reap_timer(self):
+        with self._lock:
+            self._reap_timer = None
+        self.reap_leases()
 
     def reap_leases(self) -> int:
         now = time.monotonic()
         with self._lock:
-            expired = [l for l in self._leases.values() if l.expires < now]
-            for l in expired:
-                del self._leases[l.task.task_id]
-        for l in expired:
-            self.release(l.task, failed=False)
-        return len(expired)
+            expired: list[PayloadTask] = []
+            while self._deadlines and self._deadlines[0][0] <= now:
+                _, tid = heapq.heappop(self._deadlines)
+                lease = self._leases.get(tid)
+                if lease is None or lease.expires > now:
+                    continue                       # stale entry (renewed/done)
+                del self._leases[tid]
+                expired.append(lease.task)
+            for task in expired:
+                if task.task_id not in self._results:
+                    self._enqueue(task)
+            self._update_drained()
+            if self._deadlines:                    # re-arm for the next lease
+                self._arm_reap_timer(self._deadlines[0][0])
+            return len(expired)
 
     # ---- introspection --------------------------------------------------------
 
     def stats(self) -> dict:
         with self._lock:
             return {
-                "queued": len(self._queue),
+                "queued": self._n_queued(),
                 "leased": len(self._leases),
                 "done": len(self._results),
                 "failed": len(self._failed),
+            }
+
+    def scheduler_metrics(self) -> dict:
+        """Match-cost distribution + wakeup accounting for benchmarks."""
+        with self._lock:
+            lat = sorted(self.match_latencies)
+            n = len(lat)
+            return {
+                "matches": n,
+                "match_p50_us": 1e6 * lat[n // 2] if n else 0.0,
+                "match_p99_us": 1e6 * lat[min(n - 1, (99 * n) // 100)] if n else 0.0,
+                "idle_wakeups": self.idle_wakeups,
+                "notifies": self.notifies,
             }
 
     def result(self, task_id: int) -> TaskResult | None:
@@ -166,5 +385,8 @@ class TaskRepo:
             return self._results.get(task_id)
 
     def drain_done(self) -> bool:
-        s = self.stats()
-        return s["queued"] == 0 and s["leased"] == 0
+        return self._drained.is_set()
+
+    def wait_drained(self, timeout: float | None = None) -> bool:
+        """Block until nothing is queued or leased (event, not a poll)."""
+        return self._drained.wait(timeout)

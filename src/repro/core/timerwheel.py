@@ -1,0 +1,116 @@
+"""TimerWheel — one deadline-heap timer thread for the whole control plane.
+
+The event-driven refactor removes the per-pilot sleep loops; everything that
+still needs a clock (lease expiry, lease renewal, the monitor's wall/straggler
+tick, telemetry heartbeats) is a *timer* on a shared wheel instead.  One
+thread services a heap of deadlines: it sleeps exactly until the earliest
+deadline (interruptible by new, earlier timers) and fires callbacks on the
+wheel thread.  With N pilots the process holds one timer thread, not N
+polling loops — control-plane CPU stays flat as the fleet grows.
+
+Callbacks must be short and non-blocking (they share one thread); anything
+heavy should set an event and let the owner's thread do the work.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+import time
+from typing import Callable
+
+
+class Timer:
+    """Handle for a scheduled callback.  ``cancel()`` is lazy: the wheel
+    drops cancelled entries when they surface at the top of the heap."""
+
+    __slots__ = ("fn", "deadline", "interval", "cancelled")
+
+    def __init__(self, fn: Callable[[], None], deadline: float,
+                 interval: float | None):
+        self.fn = fn
+        self.deadline = deadline
+        self.interval = interval          # None -> one-shot
+        self.cancelled = False
+
+    def cancel(self):
+        self.cancelled = True
+
+
+class TimerWheel:
+    def __init__(self, name: str = "timer-wheel"):
+        self._cond = threading.Condition()
+        self._heap: list[tuple[float, int, Timer]] = []
+        self._seq = itertools.count()
+        self._thread: threading.Thread | None = None
+        self._name = name
+        self.fired = 0                    # observability: callbacks run
+
+    # ---- scheduling -------------------------------------------------------
+
+    def call_later(self, delay: float, fn: Callable[[], None]) -> Timer:
+        return self._push(Timer(fn, time.monotonic() + max(delay, 0.0), None))
+
+    def call_at(self, deadline: float, fn: Callable[[], None]) -> Timer:
+        return self._push(Timer(fn, deadline, None))
+
+    def call_periodic(self, interval: float, fn: Callable[[], None]) -> Timer:
+        if interval <= 0:
+            raise ValueError("periodic interval must be > 0")
+        return self._push(Timer(fn, time.monotonic() + interval, interval))
+
+    def _push(self, t: Timer) -> Timer:
+        with self._cond:
+            is_earliest = not self._heap or t.deadline < self._heap[0][0]
+            heapq.heappush(self._heap, (t.deadline, next(self._seq), t))
+            self._ensure_thread()
+            if is_earliest:               # only interrupt the service thread
+                self._cond.notify()       # when its wait deadline moves up
+        return t
+
+    # ---- service thread ---------------------------------------------------
+
+    def _ensure_thread(self):
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(target=self._run, daemon=True,
+                                            name=self._name)
+            self._thread.start()
+
+    def _run(self):
+        while True:
+            with self._cond:
+                while True:
+                    if not self._heap:
+                        self._cond.wait()
+                        continue
+                    deadline, _, timer = self._heap[0]
+                    if timer.cancelled:
+                        heapq.heappop(self._heap)
+                        continue
+                    wait = deadline - time.monotonic()
+                    if wait <= 0:
+                        heapq.heappop(self._heap)
+                        break
+                    self._cond.wait(timeout=wait)
+            try:
+                timer.fn()
+            except Exception:             # noqa: BLE001 — timers never kill the wheel
+                pass
+            self.fired += 1
+            if timer.interval is not None and not timer.cancelled:
+                timer.deadline = time.monotonic() + timer.interval
+                self._push(timer)
+
+
+_default_wheel: TimerWheel | None = None
+_default_lock = threading.Lock()
+
+
+def shared_wheel() -> TimerWheel:
+    """Process-wide wheel: TaskRepo and all Pilots share one timer thread."""
+    global _default_wheel
+    with _default_lock:
+        if _default_wheel is None:
+            _default_wheel = TimerWheel("control-plane-timer")
+        return _default_wheel

@@ -35,10 +35,29 @@ class PayloadCapability:
     shared_dir: str
 
 
+_KEY_CACHE: dict[int, object] = {}
+
+
+def _seed_key(seed: int):
+    """jax.random.key costs ~3 ms of dispatch per call — dominant in the
+    control-plane cost of a tiny payload.  Keys are pure functions of the
+    seed, so memoize (bounded: payload seeds are few)."""
+    k = _KEY_CACHE.get(seed)
+    if k is None:
+        if len(_KEY_CACHE) > 128:
+            _KEY_CACHE.clear()
+        k = _KEY_CACHE[seed] = jax.random.key(seed)
+    return k
+
+
 def run_wrapper(arena: SharedArena, proctable: ProcessTable, exe, spec: dict):
     """Execute one payload under the payload uid.  Never raises: every
     outcome becomes an exit code in the arena (the paper's relay)."""
-    env = arena.read_env()
+    # env arrives inside the startup spec (the pilot path) or, for direct
+    # arena users, in the standalone env file on the shared volume (§3.5)
+    env = spec.get("env")
+    if env is None:
+        env = arena.read_env()
     entry = proctable.register(PAYLOAD_UID, f"payload:{exe.image.arch}:{exe.image.mode}")
     cap = PayloadCapability(uid=PAYLOAD_UID, shared_dir=arena.shared)
     t_start = time.monotonic()
@@ -46,7 +65,7 @@ def run_wrapper(arena: SharedArena, proctable: ProcessTable, exe, spec: dict):
                        "arch": exe.image.arch, "step_times": []}
     exitcode = 0
     try:
-        key = jax.random.key(int(env.get("seed", 0)))
+        key = _seed_key(int(env.get("seed", 0)))
         n_steps = int(spec.get("n_steps", 1))
         if exe.image.mode == "noop":
             exe.fn(exe.make_inputs(key))

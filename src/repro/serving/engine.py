@@ -49,6 +49,27 @@ class SlotState:
     remaining: int = 0
 
 
+def admit_length(prompt_len: int, max_len: int) -> int:
+    """Round a prompt length up to its power-of-two bucket, rejecting
+    prompts that cannot decode a single token inside the (slots, max_len)
+    cache block.  Raises ValueError instead of silently cropping.
+
+    The bucket is capped at ``max_len - 1``: prefill occupies ``plen``
+    positions and decode starts writing KV at ``pos == plen``, so a bucket
+    equal to ``max_len`` would leave zero decode room (the first decode
+    write clamps onto the last prompt position and corrupts its cache row).
+    """
+    if prompt_len >= max_len:
+        raise ValueError(
+            f"prompt length {prompt_len} does not fit engine max_len "
+            f"{max_len} (needs prompt + >=1 generated token); truncate the "
+            f"prompt or build the engine with a larger max_len")
+    b = 16
+    while b < prompt_len:
+        b *= 2
+    return min(b, max_len - 1)
+
+
 class ServeEngine:
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256):
         self.cfg = cfg
@@ -72,6 +93,12 @@ class ServeEngine:
     # ------------------------------------------------------------------
 
     def submit(self, req: Request):
+        """Admit a request.  A prompt that cannot fit the engine's KV block
+        (prompt + at least one generated token within ``max_len``) is
+        rejected here, explicitly — the old behavior silently clamped the
+        bucket to ``max_len`` and then left-pad indexing wrote the prompt
+        out of range."""
+        admit_length(len(req.prompt), self.max_len)
         self.queue.append(req)
 
     def _prefill_fn(self, plen: int):
@@ -81,10 +108,7 @@ class ServeEngine:
         return self._prefill_cache[plen]
 
     def _bucket(self, n: int) -> int:
-        b = 16
-        while b < n:
-            b *= 2
-        return min(b, self.max_len)
+        return admit_length(n, self.max_len)
 
     # ------------------------------------------------------------------
 

@@ -1,0 +1,386 @@
+"""The event-driven control plane, as tests.
+
+Pilot state-machine transition table, `match_wait` wake-on-submit, the
+deadline-heap lease reaper re-queuing under concurrent pilots, drain-event
+`run_until_drained`, the label/predicate matchmaking index, the shared
+timer wheel, monitor EWMA eviction, and serve-engine admission.  All
+assertions are event-driven — threads rendezvous on events/conditions, no
+`time.sleep` in any assertion path.
+"""
+
+import threading
+import time
+
+import pytest
+
+from repro.core.cluster import ClusterSim, Fleet
+from repro.core.images import PayloadImage
+from repro.core.monitor import Monitor, MonitorLimits
+from repro.core.pilot import (InvalidTransition, Pilot, PilotConfig,
+                              TERMINAL_STATES, TRANSITIONS)
+from repro.core.proctable import PAYLOAD_UID, ProcessTable
+from repro.core.taskrepo import TaskRepo, TaskResult
+from repro.core.timerwheel import TimerWheel
+from repro.serving.engine import admit_length
+
+NOOP = PayloadImage(arch="placeholder", shape="none", mode="noop")
+
+
+# ---------------------------------------------------------------------------
+# pilot state machine
+# ---------------------------------------------------------------------------
+
+def test_transition_table_shape():
+    # every state named in a transition is itself declared
+    for src, dsts in TRANSITIONS.items():
+        for d in dsts:
+            assert d in TRANSITIONS, f"{src} -> {d} names unknown state"
+    # terminal states have no exits and include the three documented ones
+    assert TERMINAL_STATES == {"terminated", "drained", "failed"}
+    # the happy path is expressible
+    path = ["created", "starting", "idle", "bound", "running", "collecting",
+            "idle", "terminated"]
+    for a, b in zip(path, path[1:]):
+        assert b in TRANSITIONS[a], f"happy path broken at {a} -> {b}"
+
+
+def test_invalid_transition_rejected():
+    repo = TaskRepo()
+    sim = ClusterSim(repo=repo)
+    (s,) = sim.provision(1)
+    p = Pilot(s, repo, sim.registry)
+    assert p.state == "created"
+    with pytest.raises(InvalidTransition):
+        p._transition("running")          # created -> running is not legal
+    p._transition("starting")
+    with pytest.raises(InvalidTransition):
+        p._transition("collecting")
+
+
+def test_pilot_state_log_follows_table():
+    """A real pilot run only ever takes documented transitions."""
+    sim = ClusterSim()
+    sim.repo.submit(NOOP, n_steps=1)
+    (s,) = sim.provision(1)
+    p = sim.spawn_pilot(s, PilotConfig(max_payloads=2, idle_grace=0.2))
+    assert sim.run_until_drained(timeout=60.0)
+    p.join(30.0)
+    assert p.state == "terminated"
+    for a, b in zip(p.state_log, p.state_log[1:]):
+        assert b in TRANSITIONS[a], f"undocumented transition {a} -> {b}"
+    assert p.state_log[:5] == ["created", "starting", "idle", "bound",
+                               "running"]
+
+
+# ---------------------------------------------------------------------------
+# match_wait: wake on submit, no polling
+# ---------------------------------------------------------------------------
+
+def test_match_wait_wakes_on_submit():
+    repo = TaskRepo()
+    got = []
+    t = threading.Thread(target=lambda: got.append(
+        repo.match_wait({"pilot_id": "w", "labels": {}}, timeout=30.0)))
+    t0 = time.monotonic()
+    t.start()
+    tid = repo.submit(NOOP)
+    t.join(10.0)
+    elapsed = time.monotonic() - t0
+    assert got and got[0] is not None and got[0].task_id == tid
+    # woken by the submit notification, not the 30 s timeout
+    assert elapsed < 5.0
+
+
+def test_match_wait_timeout_returns_none():
+    repo = TaskRepo()
+    assert repo.match_wait({"pilot_id": "w", "labels": {}},
+                           timeout=0.05) is None
+
+
+def test_match_wait_cancel_via_kick():
+    repo = TaskRepo()
+    stop = threading.Event()
+    got = []
+    t = threading.Thread(target=lambda: got.append(
+        repo.match_wait({"pilot_id": "w", "labels": {}}, timeout=30.0,
+                        cancel=stop.is_set)))
+    t0 = time.monotonic()
+    t.start()
+    stop.set()
+    repo.kick()
+    t.join(10.0)
+    assert got == [None]
+    assert time.monotonic() - t0 < 5.0
+
+
+# ---------------------------------------------------------------------------
+# deadline-heap lease reaper
+# ---------------------------------------------------------------------------
+
+def test_lease_expiry_requeues_to_concurrent_pilot():
+    """Pilot 1 leases and dies silently; pilot 2 is parked in match_wait and
+    is handed the re-queued task by the repo's own reap timer — nothing in
+    the test (or the repo) polls."""
+    repo = TaskRepo(lease_ttl=0.15)
+    tid = repo.submit(NOOP)
+    first = repo.match({"pilot_id": "p1", "labels": {}})
+    assert first.task_id == tid and repo.stats()["leased"] == 1
+    second = repo.match_wait({"pilot_id": "p2", "labels": {}}, timeout=10.0)
+    assert second is not None and second.task_id == tid
+    assert second.attempts == 2
+    assert repo.stats()["leased"] == 1
+
+
+def test_lease_renew_defers_reaper():
+    repo = TaskRepo(lease_ttl=0.2)
+    tid = repo.submit(NOOP)
+    repo.match({"pilot_id": "p1", "labels": {}})
+    deadline = time.monotonic() + 1.0
+    while time.monotonic() < deadline:
+        assert repo.renew(tid, "p1")      # keeps the lease alive
+    assert repo.stats()["leased"] == 1    # never reaped while renewed
+    # stop renewing: the reaper timer must fire and hand it to a waiter
+    second = repo.match_wait({"pilot_id": "p2", "labels": {}}, timeout=10.0)
+    assert second is not None and second.task_id == tid
+
+
+def test_explicit_reap_still_works():
+    repo = TaskRepo(lease_ttl=30.0)       # timer far in the future
+    repo.submit(NOOP)
+    task = repo.match({"pilot_id": "p1", "labels": {}})
+    # force-expire by rewinding the lease, then reap explicitly.  The
+    # rewound deadline also re-arms the wheel timer, so the wheel thread
+    # may legally reap first — assert on the resulting state, not on which
+    # thread won the race to the expired lease.
+    with repo._lock:
+        repo._leases[task.task_id].expires = time.monotonic() - 1.0
+        repo._push_deadline(task.task_id, repo._leases[task.task_id].expires)
+    repo.reap_leases()
+    assert repo.stats() == {"queued": 1, "leased": 0, "done": 0, "failed": 0}
+
+
+# ---------------------------------------------------------------------------
+# matchmaking index
+# ---------------------------------------------------------------------------
+
+def test_label_index_routing():
+    repo = TaskRepo()
+    t_eu = repo.submit(NOOP, require_labels={"zone": "eu"})
+    t_us = repo.submit(NOOP, require_labels={"zone": "us"})
+    t_open = repo.submit(NOOP, priority=-1)    # lower priority than both
+    assert repo.match({"pilot_id": "p", "labels": {"zone": "us"}}
+                      ).task_id == t_us
+    assert repo.match({"pilot_id": "p", "labels": {}}).task_id == t_open
+    assert repo.match({"pilot_id": "p", "labels": {"zone": "eu"}}
+                      ).task_id == t_eu
+    assert repo.stats()["queued"] == 0
+
+
+def test_priority_order_across_buckets():
+    repo = TaskRepo()
+    lo = repo.submit(NOOP, priority=1)
+    hi_lbl = repo.submit(NOOP, priority=5, require_labels={"a": "x"})
+    hi_pred = repo.submit(NOOP, priority=9,
+                          requirements=lambda ad: ad["labels"].get("a") == "x")
+    ad = {"pilot_id": "p", "labels": {"a": "x"}}
+    assert repo.match(ad).task_id == hi_pred
+    assert repo.match(ad).task_id == hi_lbl
+    assert repo.match(ad).task_id == lo
+
+
+def test_predicate_rejection_keeps_fifo_order():
+    """A predicate task rejected by one pilot keeps its queue position —
+    re-pushing must not starve it behind newer same-priority tasks."""
+    repo = TaskRepo()
+    gpu_only = lambda ad: ad["labels"].get("accel") == "gpu"   # noqa: E731
+    anyone = lambda ad: True                                   # noqa: E731
+    t1 = repo.submit(NOOP, requirements=gpu_only)
+    t2 = repo.submit(NOOP, requirements=anyone)
+    t3 = repo.submit(NOOP, requirements=anyone)
+    # CPU pilot: rejects t1, leases t2 (t1 is popped and re-pushed)
+    assert repo.match({"pilot_id": "cpu", "labels": {}}).task_id == t2
+    # GPU pilot: must get the OLDER t1, not t3
+    assert repo.match({"pilot_id": "gpu",
+                       "labels": {"accel": "gpu"}}).task_id == t1
+    assert repo.match({"pilot_id": "cpu", "labels": {}}).task_id == t3
+
+
+def test_broken_predicate_does_not_crash_matchmaking():
+    repo = TaskRepo()
+    repo.submit(NOOP, requirements=lambda ad: ad["no_such_key"] > 0)
+    ok = repo.submit(NOOP)
+    assert repo.match({"pilot_id": "p", "labels": {}}).task_id == ok
+    assert repo.match({"pilot_id": "p", "labels": {}}) is None
+
+
+# ---------------------------------------------------------------------------
+# drain event
+# ---------------------------------------------------------------------------
+
+def test_run_until_drained_blocks_on_event():
+    sim = ClusterSim()
+    assert sim.run_until_drained(timeout=0.05)       # empty repo is drained
+    tids = [sim.repo.submit(NOOP, n_steps=1) for _ in range(3)]
+    assert not sim.repo.drain_done()
+    fleet = sim.spawn_fleet(2, PilotConfig(max_payloads=4, idle_grace=0.2))
+    assert sim.run_until_drained(timeout=60.0)
+    fleet.join_all(30.0)
+    for tid in tids:
+        assert sim.repo.result(tid).exitcode == 0
+
+
+def test_failed_complete_release_has_no_transient_drain():
+    """Between complete(exit!=0) and release(failed=True) the repo must not
+    look drained — the lease is held until the release lands."""
+    repo = TaskRepo()
+    repo.submit(NOOP, max_attempts=3)
+    task = repo.match({"pilot_id": "p", "labels": {}})
+    assert repo.complete(TaskResult(task.task_id, "p", 1, {})) is False
+    assert not repo.drain_done()          # still leased
+    repo.release(task, failed=True)
+    assert not repo.drain_done()          # re-queued for retry
+    assert repo.stats()["queued"] == 1
+
+
+# ---------------------------------------------------------------------------
+# fleet scaling
+# ---------------------------------------------------------------------------
+
+def test_fleet_scale_up_down():
+    sim = ClusterSim()
+    fleet = sim.spawn_fleet(2, PilotConfig(max_payloads=4, idle_grace=30.0))
+    assert fleet.size() == 2
+    fleet.scale_up(1)
+    assert fleet.size() == 3
+    # back-to-back single-pilot scale-downs must pick distinct victims
+    victims = fleet.scale_down(1) + fleet.scale_down(1)
+    assert len(victims) == 2 and victims[0] is not victims[1]
+    for v in victims:
+        v.join(10.0)
+        assert v.state == "drained"
+    assert fleet.size() == 1
+    fleet.drain_all()
+    fleet.join_all(10.0)
+    assert fleet.size() == 0
+
+
+# ---------------------------------------------------------------------------
+# timer wheel
+# ---------------------------------------------------------------------------
+
+def test_timerwheel_one_shot_and_cancel():
+    wheel = TimerWheel("test-wheel")
+    fired = threading.Event()
+    wheel.call_later(0.01, fired.set)
+    assert fired.wait(5.0)
+    held = wheel.call_later(0.05, lambda: pytest.fail("cancelled timer fired"))
+    held.cancel()
+    probe = threading.Event()
+    wheel.call_later(0.1, probe.set)      # fires after the cancelled slot
+    assert probe.wait(5.0)
+
+
+def test_timerwheel_periodic():
+    wheel = TimerWheel("test-wheel-2")
+    hits = threading.Semaphore(0)
+    t = wheel.call_periodic(0.01, hits.release)
+    for _ in range(3):
+        assert hits.acquire(timeout=5.0)
+    t.cancel()
+
+
+# ---------------------------------------------------------------------------
+# monitor EWMA eviction (leak fix)
+# ---------------------------------------------------------------------------
+
+def test_monitor_ewma_evicted_on_exit():
+    pt = ProcessTable()
+    mon = Monitor(pt, MonitorLimits(max_wall=1e9), fleet_median_fn=lambda: 0.1)
+    for i in range(50):
+        e = pt.register(PAYLOAD_UID, f"w{i}")
+        for _ in range(3):
+            pt.heartbeat(e.pid, 0.1)
+        mon.scan()
+        assert e.pid in mon._ewma
+        pt.mark_exited(e.pid, 0)
+        mon.scan()
+        assert e.pid not in mon._ewma
+    assert mon._ewma == {}
+
+
+# ---------------------------------------------------------------------------
+# proctable events
+# ---------------------------------------------------------------------------
+
+def test_proctable_fires_step_and_exit_events():
+    pt = ProcessTable()
+    events = []
+    pt.subscribe(lambda kind, e: events.append((kind, e.pid)))
+    e = pt.register(PAYLOAD_UID, "w")
+    pt.heartbeat(e.pid, 0.1)
+    pt.mark_exited(e.pid, 0)
+    pt.mark_exited(e.pid, 0)              # second exit: no duplicate event
+    assert events == [("step", e.pid), ("exit", e.pid)]
+    pt.unsubscribe(pt._listeners[0] if pt._listeners else None)
+
+
+# ---------------------------------------------------------------------------
+# serve-engine admission (satellite: explicit rejection, no silent crop)
+# ---------------------------------------------------------------------------
+
+def test_admit_length_buckets_and_rejects():
+    assert admit_length(1, 256) == 16
+    assert admit_length(16, 256) == 16
+    assert admit_length(17, 256) == 32
+    # bucket capped below max_len so decode keeps >=1 free cache position
+    assert admit_length(200, 256) == 255
+    with pytest.raises(ValueError):
+        admit_length(256, 256)            # no room for a generated token
+    with pytest.raises(ValueError):
+        admit_length(300, 256)
+
+
+def test_mixed_labels_and_predicate_requirements():
+    """A task carrying BOTH require_labels and a predicate must satisfy
+    both — the label constraint is not dropped in the predicate bucket."""
+    repo = TaskRepo()
+    tid = repo.submit(NOOP, require_labels={"accel": "tpu"},
+                      requirements=lambda ad: ad.get("n_devices", 0) >= 2)
+    # matching predicate but wrong labels: must NOT match
+    assert repo.match({"pilot_id": "p", "labels": {}, "n_devices": 4}) is None
+    # right labels but failing predicate: must NOT match
+    assert repo.match({"pilot_id": "p", "labels": {"accel": "tpu"},
+                       "n_devices": 1}) is None
+    # both satisfied
+    got = repo.match({"pilot_id": "p", "labels": {"accel": "tpu"},
+                      "n_devices": 2})
+    assert got is not None and got.task_id == tid
+
+
+def test_runtime_thread_stops_after_terminate():
+    """Pilot termination must close the executor's container-runtime thread
+    — elastic churn would otherwise leak one parked thread per pilot."""
+    sim = ClusterSim()
+    sim.repo.submit(NOOP, n_steps=1)
+    (s,) = sim.provision(1)
+    p = sim.spawn_pilot(s, PilotConfig(max_payloads=1, idle_grace=0.2))
+    assert sim.run_until_drained(timeout=60.0)
+    p.join(10.0)
+    rt = p.executor._runtime
+    assert rt is not None
+    rt.join(5.0)
+    assert not rt.is_alive()
+
+
+def test_soft_crash_reaches_terminal_state():
+    """A pilot whose start step raises (no devices) must land in 'failed',
+    not linger in a non-terminal state that Fleet/live_pilots counts."""
+    sim = ClusterSim()
+    (s,) = sim.provision(1)
+    s.devices = []                        # invalid slice
+    p = sim.spawn_pilot(s, PilotConfig(max_payloads=1, idle_grace=0.1))
+    p.join(10.0)
+    assert p.state == "failed"
+    assert p.state in TERMINAL_STATES
+    assert sim.live_pilots() == []
+    assert s.released                     # slice still handed back

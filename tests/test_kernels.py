@@ -29,7 +29,11 @@ def _rand(shape, dtype, k, scale=1.0):
 # flash attention
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [
+    jnp.float32,
+    # bf16 sweeps double kernel-test wall time; fast lane keeps f32
+    pytest.param(jnp.bfloat16, marks=pytest.mark.slow),
+])
 @pytest.mark.parametrize("B,S,T,H,K,Dh,window", [
     (2, 128, 128, 4, 2, 64, None),
     (1, 256, 256, 8, 1, 64, None),       # MQA
@@ -64,7 +68,11 @@ def test_flash_attention_noncausal():
 # decode attention (flash-decode)
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [
+    jnp.float32,
+    # bf16 sweeps double kernel-test wall time; fast lane keeps f32
+    pytest.param(jnp.bfloat16, marks=pytest.mark.slow),
+])
 @pytest.mark.parametrize("B,T,H,K,Dh", [
     (2, 256, 4, 2, 64),
     (1, 512, 8, 8, 128),
@@ -87,7 +95,11 @@ def test_decode_attention_sweep(B, T, H, K, Dh, dtype):
 # ssd scan
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [
+    jnp.float32,
+    # bf16 sweeps double kernel-test wall time; fast lane keeps f32
+    pytest.param(jnp.bfloat16, marks=pytest.mark.slow),
+])
 @pytest.mark.parametrize("b,S,H,P,G,N,chunk", [
     (2, 256, 4, 64, 1, 128, 64),
     (1, 192, 8, 32, 2, 64, 64),          # grouped B/C
@@ -113,7 +125,11 @@ def test_ssd_scan_sweep(b, S, H, P, G, N, chunk, dtype):
 # grouped matmul
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [
+    jnp.float32,
+    # bf16 sweeps double kernel-test wall time; fast lane keeps f32
+    pytest.param(jnp.bfloat16, marks=pytest.mark.slow),
+])
 @pytest.mark.parametrize("E,D,F,bm,sizes", [
     (4, 64, 128, 32, (64, 32, 96, 32)),
     (2, 128, 256, 64, (128, 64)),
@@ -136,7 +152,11 @@ def test_grouped_matmul_sweep(E, D, F, bm, sizes, dtype):
 # rmsnorm
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [
+    jnp.float32,
+    # bf16 sweeps double kernel-test wall time; fast lane keeps f32
+    pytest.param(jnp.bfloat16, marks=pytest.mark.slow),
+])
 @pytest.mark.parametrize("shape", [(4, 64, 96), (2, 256, 960), (8, 128)])
 @pytest.mark.parametrize("with_residual", [False, True])
 def test_rmsnorm_sweep(shape, dtype, with_residual):

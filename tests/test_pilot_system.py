@@ -190,8 +190,11 @@ def test_lease_expiry_requeues():
     task = repo.match({"pilot_id": "p1", "labels": {}})
     assert task.task_id == tid
     assert repo.stats()["leased"] == 1
-    time.sleep(0.1)
-    assert repo.reap_leases() == 1
+    # the repo-owned deadline-heap timer expires the lease and hands the
+    # re-queued task to a parked pilot — nobody polls or reaps by hand
+    got = repo.match_wait({"pilot_id": "p2", "labels": {}}, timeout=10.0)
+    assert got is not None and got.task_id == tid and got.attempts == 2
+    repo.release(got)
     assert repo.stats() == {"queued": 1, "leased": 0, "done": 0, "failed": 0}
 
 
