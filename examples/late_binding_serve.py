@@ -26,11 +26,14 @@ executor = PayloadExecutor("pod-serve", arena, ProcessTable(), registry)
 cap = PodPatchCapability("pod-serve")
 
 rng = np.random.default_rng(0)
-for arch in ("smollm-360m", "gemma-2b"):
+ARCHS = ("smollm-360m", "gemma-2b")
+for n, arch in enumerate(ARCHS):
     t0 = time.monotonic()
     image = PayloadImage(arch, "smoke", "decode")
     executor.patch_image(cap, image)         # the unprivileged image swap
     bind_ms = (time.monotonic() - t0) * 1e3
+    if n + 1 < len(ARCHS):                   # overlap the NEXT image's pull
+        registry.prefetch(PayloadImage(ARCHS[n + 1], "smoke", "decode"))
 
     cfg = get_smoke_config(arch)
     params = build_model(cfg).init(jax.random.key(0))

@@ -33,7 +33,7 @@ class PayloadImage:
     """Immutable image reference (the `image:` field of the pod spec)."""
     arch: str                        # registry name, or "<name>-smoke"
     shape: str                       # key into SHAPES, or "smoke"
-    mode: str                        # "train" | "prefill" | "decode" | "noop"
+    mode: str                        # "train" | "prefill" | "decode" | "serve" | "noop"
     smoke: bool = True               # reduced config (tests/examples) vs full
     flags: tuple = ()                # e.g. (("remat","dots"), ("attn_impl","causal_blocked"))
 
@@ -68,6 +68,12 @@ class Executable:
     make_inputs: Any                  # (key) -> concrete input pytree
     compile_seconds: float
     cached: bool = False
+    # force the lazy XLA compile now (one representative invocation);
+    # None for modes whose compile cannot be staged ahead (serve engines
+    # jit per instance).  prefetch() runs this in the background so the
+    # whole pull — python build AND XLA compile — overlaps the current
+    # payload instead of landing on the next bind's first step.
+    warm: Any = None
 
 
 class ExecutableRegistry:
@@ -78,18 +84,67 @@ class ExecutableRegistry:
         self._lock = threading.Lock()
         self._cache: dict[tuple, Executable] = {}
         self._inflight: dict[tuple, threading.Event] = {}
-        self.stats = {"hits": 0, "misses": 0}
+        self._prefetching: dict[tuple, threading.Event] = {}
+        self.stats = {"hits": 0, "misses": 0, "prefetches": 0}
+
+    @staticmethod
+    def _key(image: PayloadImage, mesh) -> tuple:
+        return (image.key(), None if mesh is None else
+                (tuple(mesh.devices.shape), tuple(mesh.axis_names)))
+
+    def prefetch(self, image: PayloadImage, mesh=None) -> threading.Event:
+        """Start pulling an image in the BACKGROUND and return an event that
+        is set once it is cached.  Single-flight with `pull`: a concurrent
+        bind for the same key waits on the same compile instead of starting
+        a second one, and a later `pull` that lands mid-compile parks on the
+        inflight event and then takes the cache hit.
+
+        This is how a pilot overlaps the next task's image pull with the
+        current payload's run (the hint rides on the matched task) — the
+        late-binding analogue of a kubelet pre-pulling the next image while
+        the current container still executes.
+        """
+        key = self._key(image, mesh)
+        with self._lock:
+            ev = self._prefetching.get(key)
+            if ev is not None:                # join the in-progress prefetch:
+                return ev                     # set only after warm() finishes
+            done = threading.Event()
+            if key in self._cache:
+                done.set()
+                return done
+            # claim the key under the lock so concurrent prefetches of the
+            # same image join `done` instead of spawning a second worker
+            self._prefetching[key] = done
+            self.stats["prefetches"] += 1
+
+        def work():
+            try:
+                # pull() joins any concurrent bind's compile (single-flight)
+                exe = self.pull(image, mesh)
+                if exe.warm is not None:
+                    exe.warm()            # stage the lazy XLA compile too
+            except Exception:             # noqa: BLE001 — prefetch is a hint
+                pass
+            finally:
+                with self._lock:
+                    self._prefetching.pop(key, None)
+                done.set()
+
+        threading.Thread(target=work, daemon=True,
+                         name=f"prefetch-{image.arch}:{image.mode}").start()
+        return done
 
     def pull(self, image: PayloadImage, mesh=None) -> Executable:
-        key = (image.key(), None if mesh is None else
-               (tuple(mesh.devices.shape), tuple(mesh.axis_names)))
+        key = self._key(image, mesh)
         while True:
             with self._lock:
                 if key in self._cache:
                     self.stats["hits"] += 1
                     e = self._cache[key]
                     return Executable(e.image, e.fn, e.make_inputs,
-                                      e.compile_seconds, cached=True)
+                                      e.compile_seconds, cached=True,
+                                      warm=e.warm)
                 ev = self._inflight.get(key)
                 if ev is None:
                     self._inflight[key] = threading.Event()
@@ -120,6 +175,7 @@ class ExecutableRegistry:
         shape = image.shape_spec()
         bundle = build_model(cfg)
 
+        warm = None
         if image.mode == "train":
             step = make_train_step(cfg, OptimConfig(total_steps=1000))
             fn = jax.jit(step, donate_argnums=0)
@@ -132,6 +188,12 @@ class ExecutableRegistry:
                     cfg.vocab_size, _text_len(cfg, shape.seq_len),
                     shape.global_batch))
                 return state, data
+
+            def warm():
+                state, data = make_inputs(jax.random.key(0))
+                batch = {k: jnp.asarray(v)
+                         for k, v in data.batch_at(0).items()}
+                jax.block_until_ready(fn(state, batch)[1]["loss"])
         elif image.mode == "prefill":
             step = make_prefill_step(cfg)
             fn = jax.jit(step)
@@ -140,6 +202,50 @@ class ExecutableRegistry:
                 params = bundle.init(key)
                 batch = _concrete_batch(cfg, shape, key, with_targets=False)
                 return params, batch
+
+            def warm():
+                jax.block_until_ready(fn(*make_inputs(jax.random.key(0)))[0])
+        elif image.mode == "serve":
+            # a serve image is an ENGINE factory: the wrapper builds a
+            # continuous-batching ServeEngine over freshly-initialized params
+            # and drives it from the request trace in the startup spec.
+            # Every engine from this factory shares ONE jitted step (per
+            # max_len) and ONE jitted prefill wrapper, so warm() can stage
+            # the XLA compile at prefetch time and the payload's first tick
+            # hits the cache.
+            from repro.models.api import init_decode_state
+            from repro.serving.engine import ServeEngine, make_engine_step
+
+            step_fns: dict[int, Any] = {}
+            prefill_fn = jax.jit(bundle.prefill)
+
+            def step_for(max_len):
+                if max_len not in step_fns:
+                    step_fns[max_len] = make_engine_step(bundle, max_len)
+                return step_fns[max_len]
+
+            def fn(params, slots=None, max_len=None):
+                ml = max_len or shape.seq_len
+                return ServeEngine(cfg, params,
+                                   slots=slots or shape.global_batch,
+                                   max_len=ml, bundle=bundle,
+                                   step_fn=step_for(ml),
+                                   prefill_fn=prefill_fn)
+
+            def make_inputs(key):
+                return bundle.init(key)
+
+            def warm():
+                B, S = shape.global_batch, shape.seq_len
+                params = bundle.init(jax.random.key(0))
+                state = init_decode_state(cfg, B, S)
+                out = step_for(S)(params, state,
+                                  jnp.zeros((B,), bool),
+                                  jnp.zeros((B,), jnp.int32))
+                jax.block_until_ready(out[0])
+                logits, _ = prefill_fn(
+                    params, {"tokens": jnp.zeros((1, 16), jnp.int32)})
+                jax.block_until_ready(logits)
         else:                            # decode
             step = make_serve_step(cfg)
             fn = jax.jit(step, donate_argnums=1)
@@ -151,7 +257,11 @@ class ExecutableRegistry:
                                           shape.seq_len)
                 return params, state
 
-        return Executable(image, fn, make_inputs, time.monotonic() - t0)
+            def warm():
+                jax.block_until_ready(fn(*make_inputs(jax.random.key(0)))[0])
+
+        return Executable(image, fn, make_inputs, time.monotonic() - t0,
+                          warm=warm)
 
 
 def _text_len(cfg, seq_len):

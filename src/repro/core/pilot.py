@@ -253,16 +253,30 @@ class Pilot:
             self.executor.start(spec_timeout=self.config.spec_timeout,
                                 on_exit=self._wake.set)
             # env rides in the startup spec (the paper's startup script
-            # carries the env exports): one shared-volume publish, not two
+            # carries the env exports): one shared-volume publish, not two;
+            # payload_spec carries payload-kind extras (a serve payload's
+            # request trace and engine geometry)
             self.arena.publish_startup_spec({
                 "n_steps": task.n_steps,
                 "task_id": task.task_id,
                 "env": {**task.env, "pilot": self.pilot_id},
                 **task.resume,
+                **task.payload_spec,
             })
             record["bind_seconds"] = self.executor.last_bind_seconds
             record["bind_cached"] = self.executor.last_bind_cached
             self._transition("running")
+            # overlap the NEXT image pull with this payload's run: the hint
+            # names the image a follow-up task needs, and the registry
+            # compiles it on a background thread (single-flight with any
+            # concurrent bind) so the next patch_image is a cache hit
+            if task.prefetch_hint is not None:
+                try:
+                    self.registry.prefetch(task.prefetch_hint,
+                                           getattr(self.slice, "mesh", None))
+                    record["prefetch_started"] = True
+                except Exception:         # noqa: BLE001 — the hint is
+                    pass                  # advisory; never fail the payload
 
             # (d) heartbeats on the shared timer wheel; the pilot thread
             # itself parks on the payload exit event (no sleep loop)

@@ -53,6 +53,12 @@ class PayloadTask:
     input_files: dict[str, bytes] = dataclasses.field(default_factory=dict)
     env: dict = dataclasses.field(default_factory=dict)
     resume: dict = dataclasses.field(default_factory=dict)  # ckpt info
+    # extra JSON-able fields merged into the startup spec the pilot
+    # publishes — e.g. a serve payload's request trace / engine geometry
+    payload_spec: dict = dataclasses.field(default_factory=dict)
+    # hint: the image a follow-up task will need; the pilot prefetches it
+    # (background compile) while THIS payload runs, so the next bind is warm
+    prefetch_hint: Any = None
     attempts: int = 0
     max_attempts: int = 3
 

@@ -84,6 +84,9 @@ def run_wrapper(arena: SharedArena, proctable: ProcessTable, exe, spec: dict):
             telemetry["step_times"].append(dt)
             if not np.isfinite(np.asarray(logits, np.float32)).all():
                 exitcode = 3
+        elif exe.image.mode == "serve":
+            exitcode = _serve_loop(exe, key, n_steps, entry, proctable,
+                                   telemetry, spec)
         else:                                           # decode
             params, state = exe.make_inputs(key)
             for i in range(n_steps):
@@ -105,6 +108,41 @@ def run_wrapper(arena: SharedArena, proctable: ProcessTable, exe, spec: dict):
     proctable.mark_exited(entry.pid, exitcode)
     arena.report_exit(exitcode, telemetry)
     return exitcode
+
+
+def _serve_loop(exe, key, n_steps, entry, proctable, telemetry, spec) -> int:
+    """Serve payload: a continuous-batching inference server late-bound onto
+    the slice, driven by the request *trace* in the startup spec.
+
+    Trace entries are JSON dicts ``{"rid", "prompt": [ints],
+    "max_new_tokens", "at_step"}``; a request is admitted once the engine
+    has ticked ``at_step`` times (staggered arrivals).  ``n_steps`` bounds
+    the tick count — the lease/budget contract serve shares with train.
+    The engine's decode loop is device-resident (one device→host transfer
+    per step); each tick heartbeats the proctable so the pilot's monitor
+    meters serve progress exactly as it meters train steps.
+    """
+    params = exe.make_inputs(key)
+    eng = exe.fn(params, slots=spec.get("slots"), max_len=spec.get("max_len"))
+
+    def on_tick(tick, dt):
+        if entry.stop.is_set():
+            return False                                # SIGTERM-by-pilot
+        proctable.heartbeat(entry.pid, dt)
+        telemetry["steps"] = tick
+        telemetry["step_times"].append(dt)
+        return True
+
+    stats = eng.run_trace(spec.get("trace") or [], max_ticks=n_steps,
+                          on_tick=on_tick)
+    if entry.stop.is_set():
+        return 143
+    telemetry["serve"] = {k: stats[k] for k in (
+        "completed", "decode_steps", "tokens_decoded", "slot_utilization",
+        "idle_slot_steps", "d2h_transfers", "tok_per_s",
+        "ttft_p50_s", "ttft_p99_s")}
+    telemetry["tokens"] = {str(r.rid): r.tokens for r in eng.done.values()}
+    return 0
 
 
 def _train_loop(exe, key, n_steps, entry, proctable, telemetry, spec, arena,

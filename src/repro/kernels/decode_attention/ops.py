@@ -18,7 +18,12 @@ def _on_tpu() -> bool:
 def decode_attention(q, k_cache, v_cache, cache_len, *, block_t=128,
                      interpret=None):
     """q: (B,H,Dh) one new token per sequence; caches: (B,T,K,Dh);
-    cache_len: scalar or (B,) valid-entry count.  Returns (B,H,Dh)."""
+    cache_len: scalar or (B,) valid-entry count.  Returns (B,H,Dh).
+
+    Per-row (ragged) lengths are the continuous-batching serve path: each
+    batch row is an independent request at its own position, so the lens
+    vector arrives via scalar prefetch and the kernel masks each row's KV
+    tail without recompiling (fully-masked tiles skip their compute)."""
     B, H, Dh = q.shape
     T, K = k_cache.shape[1], k_cache.shape[2]
     assert H % K == 0, (H, K)

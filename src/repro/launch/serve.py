@@ -1,19 +1,21 @@
 """Batched-serving driver THROUGH the pilot system.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
-      --requests 16 --slots 4 [--via-pilots]
+      --requests 16 --slots 4 [--wave] [--via-pilots]
 
-Default runs the engine directly; ``--via-pilots`` submits the engine run
-as a ``serve`` payload so the whole request batch is late-bound onto a
-pilot-held slice (and a second model can be served by the SAME pilot right
-after — the multi-payload demo).
+Default runs the continuous-batching engine directly on a staggered-arrival
+trace (``--wave`` selects the static wave-batching baseline for comparison);
+``--via-pilots`` submits full inference servers as ``serve`` payloads: each
+engine run — trace and all — is late-bound onto a pilot-held slice, and a
+second model is served by the SAME pilot right after (the multi-payload
+demo).  The first task carries a prefetch hint for the second image, so its
+compile overlaps the first server's run.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import jax
 import numpy as np
@@ -23,42 +25,74 @@ from repro.core.cluster import ClusterSim
 from repro.core.images import PayloadImage
 from repro.core.pilot import PilotConfig
 from repro.models.api import build_model
-from repro.serving.engine import Request, ServeEngine
+from repro.serving.engine import ServeEngine
+
+
+def make_trace(vocab_size: int, n_requests: int, *, max_len: int = 128,
+               stagger: int = 1, seed: int = 0) -> list[dict]:
+    """Staggered-arrival request trace (the startup-spec format): request i
+    becomes visible at engine tick ``i * stagger``, with mixed prompt
+    lengths and token budgets."""
+    rng = np.random.default_rng(seed)
+    trace = []
+    for i in range(n_requests):
+        plen = int(rng.integers(4, max(5, max_len // 4)))
+        trace.append({
+            "rid": i,
+            "prompt": rng.integers(0, vocab_size, size=plen).tolist(),
+            "max_new_tokens": int(rng.choice([6, 10, 18, 28])),
+            "at_step": i * stagger,
+        })
+    return trace
 
 
 def serve_direct(cfg, n_requests: int, slots: int, max_len: int,
-                 seed: int = 0) -> dict:
+                 seed: int = 0, admission: str = "continuous") -> dict:
     params = build_model(cfg).init(jax.random.key(seed))
-    eng = ServeEngine(cfg, params, slots=slots, max_len=max_len)
-    rng = np.random.default_rng(seed)
-    for i in range(n_requests):
-        eng.submit(Request(
-            rid=i,
-            prompt=rng.integers(0, cfg.vocab_size,
-                                size=int(rng.integers(4, max_len // 4))),
-            max_new_tokens=int(rng.integers(8, 24))))
-    return eng.run()
+    eng = ServeEngine(cfg, params, slots=slots, max_len=max_len,
+                      admission=admission)
+    trace = make_trace(cfg.vocab_size, n_requests, max_len=max_len, seed=seed)
+    return eng.run_trace(trace)
 
 
-def serve_via_pilots(archs: list[str], n_steps: int = 12) -> None:
-    """Several serve payloads (different models!) multiplexed over ONE
-    pilot — container late-binding for inference."""
+def serve_via_pilots(archs: list[str], n_requests: int = 8,
+                     n_steps: int = 400, slots: int | None = None,
+                     max_len: int | None = None) -> None:
+    """Several inference servers (different models!) multiplexed over ONE
+    pilot — container late-binding for serving.  Task i hints task i+1's
+    image so the pilot prefetches the next compile during the current run."""
     sim = ClusterSim()
-    tids = [sim.repo.submit(PayloadImage(arch=a, shape="smoke", mode="decode"),
-                            n_steps=n_steps) for a in archs]
+    images = [PayloadImage(arch=a, shape="smoke", mode="serve") for a in archs]
+    tids = []
+    for i, (a, img) in enumerate(zip(archs, images)):
+        cfg = get_smoke_config(a)
+        # None = the image's factory geometry (shape spec) — which is also
+        # what a prefetch warm() stages, so the default demo hits the
+        # prefetched compile; explicit flags override both
+        eff_max_len = max_len or img.shape_spec().seq_len
+        trace = make_trace(cfg.vocab_size, n_requests, max_len=eff_max_len,
+                           seed=i)
+        hint = images[i + 1] if i + 1 < len(images) else None
+        tids.append(sim.repo.submit(
+            img, n_steps=n_steps, prefetch_hint=hint,
+            payload_spec={"trace": trace, "max_len": max_len,
+                          "slots": slots}))
     (s,) = sim.provision(1)
     pilot = sim.spawn_pilot(s, PilotConfig(max_payloads=len(archs) + 1,
                                            idle_grace=2.0))
     ok = sim.run_until_drained(timeout=600.0)
     sim.join_all(timeout=30.0)
-    print(f"[serve] drained={ok} repo={sim.repo.stats()}")
-    for tid, arch in zip(tids, archs):
+    print(f"[serve] drained={ok} repo={sim.repo.stats()} "
+          f"registry={sim.registry.stats}")
+    for i, (tid, arch) in enumerate(zip(tids, archs)):
         r = sim.repo.result(tid)
         if r:
-            st = r.telemetry.get("step_times", [])
-            print(f"  {arch}: {r.telemetry.get('steps')} decode steps, "
-                  f"mean {np.mean(st)*1e3:.1f} ms/step "
-                  f"(bind cached={pilot.history[tids.index(tid)].get('bind_cached')})")
+            sv = r.telemetry.get("serve", {})
+            print(f"  {arch}: completed={sv.get('completed')} "
+                  f"util={sv.get('slot_utilization', 0):.2f} "
+                  f"tok/s={sv.get('tok_per_s', 0):.1f} "
+                  f"ttft_p50={sv.get('ttft_p50_s')} "
+                  f"(bind cached={pilot.history[i].get('bind_cached')})")
 
 
 def main():
@@ -67,18 +101,27 @@ def main():
     ap.add_argument("--archs", default=None,
                     help="comma list for --via-pilots multi-model demo")
     ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--slots", type=int, default=None,
+                    help="engine slots (default: 4 direct; image shape "
+                         "via pilots)")
+    ap.add_argument("--max-len", type=int, default=None,
+                    help="engine KV length (default: 128 direct; image "
+                         "shape via pilots)")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--wave", action="store_true",
+                    help="static wave-batching baseline (for comparison)")
     ap.add_argument("--via-pilots", action="store_true")
     args = ap.parse_args()
 
     if args.via_pilots:
         archs = (args.archs or f"{args.arch},gemma-2b").split(",")
-        serve_via_pilots(archs)
+        serve_via_pilots(archs, n_requests=args.requests, slots=args.slots,
+                         max_len=args.max_len)
         return
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    stats = serve_direct(cfg, args.requests, args.slots, args.max_len)
+    stats = serve_direct(cfg, args.requests, args.slots or 4,
+                         args.max_len or 128,
+                         admission="wave" if args.wave else "continuous")
     print(json.dumps(stats, indent=1))
 
 

@@ -79,7 +79,12 @@ class ModelBundle:
 
 def init_decode_state(cfg: ArchConfig, batch: int, max_len: int, *,
                       dtype=jnp.bfloat16):
-    """Concrete zero decode state (also used via eval_shape for specs)."""
+    """Concrete zero decode state (also used via eval_shape for specs).
+
+    ``pos`` is a per-row (batch,) vector: every batch row decodes at its own
+    absolute position, which is what lets the serving engine refill one slot
+    mid-flight (continuous batching) instead of wave-stepping the whole
+    block.  Rows that advance in lockstep simply carry equal entries."""
     if cfg.is_encdec:
         cache = encdec_mod.init_encdec_cache(cfg, batch, max_len, dtype)
     else:
@@ -87,7 +92,7 @@ def init_decode_state(cfg: ArchConfig, batch: int, max_len: int, *,
     return {
         "cache": cache,
         "token": jnp.zeros((batch, 1), jnp.int32),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
     }
 
 

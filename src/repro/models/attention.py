@@ -224,9 +224,10 @@ def attend(q, k, v, cfg, *, causal=True, window=None, q_offset=0):
 def decode_attend(q, k_cache, v_cache, cache_len, *, window=None):
     """Single-token attention against a KV cache.
 
-    q: (B,1,H,Dh); caches: (B,T,K,Dh); cache_len: scalar count of valid
-    entries.  With T sharded over "model", the max/sum reductions lower to
-    all-reduces = flash-decode split-K via SPMD.
+    q: (B,1,H,Dh); caches: (B,T,K,Dh); cache_len: scalar or (B,) count of
+    valid entries per row (continuous batching gives every batch row its own
+    position, so the lengths are ragged).  With T sharded over "model", the
+    max/sum reductions lower to all-reduces = flash-decode split-K via SPMD.
     """
     B, _, H, Dh = q.shape
     T, K = k_cache.shape[1], k_cache.shape[2]
@@ -236,10 +237,11 @@ def decode_attend(q, k_cache, v_cache, cache_len, *, window=None):
     s = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache.astype(jnp.bfloat16),
                    preferred_element_type=jnp.float32) * scale
     t_pos = jnp.arange(T)
-    valid = t_pos < cache_len
+    cl = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (B,))
+    valid = t_pos[None, :] < cl[:, None]                      # (B,T) ragged
     # Rolling SWA caches keep only the last `window` tokens, so every valid
     # slot is inside the window by construction; no extra masking needed.
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgt,btkd->bkgd", p.astype(jnp.bfloat16),
                      v_cache.astype(jnp.bfloat16),
@@ -344,24 +346,43 @@ def _mla_prefill(x, p, cfg, rope, cache, *, compute):
                  "krope": kr_w.astype(cache["krope"].dtype)}
 
 
+def _row_positions(pos, batch: int):
+    """Normalize a decode position to the per-row (B,) form.  Scalar `pos`
+    (every row at the same absolute position — the wave-era contract) is
+    broadcast; a (B,) vector (continuous batching) passes through."""
+    return jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (batch,))
+
+
+def _ring_write_rows(cache, new, slot):
+    """Per-row ring-buffer write: cache (B,T,...), new (B,1,...), slot (B,).
+    Each batch row lands at its own `pos mod T` — the vectorized form of the
+    old scalar dynamic_update_slice."""
+    upd = jax.vmap(
+        lambda c, n, s: jax.lax.dynamic_update_slice_in_dim(c, n, s, axis=0))
+    return upd(cache, new.astype(cache.dtype), slot)
+
+
 def attention_decode(x, p, cfg, cache, pos, *, rope_theta=None,
                      window=None, compute=jnp.bfloat16):
-    """One decode step.  x: (B,1,D); cache {"k","v"}: (B,T,K,Dh); pos: scalar
-    absolute position.  Returns (out, new_cache)."""
+    """One decode step.  x: (B,1,D); cache {"k","v"}: (B,T,K,Dh); pos:
+    scalar or (B,) absolute position(s) of the new token — per-row positions
+    are the continuous-batching path.  Returns (out, new_cache)."""
     if cfg.mla is not None:
         return _mla_decode(x, p, cfg, cache, pos, compute=compute)
     theta = rope_theta if rope_theta is not None else cfg.rope_theta
+    B = x.shape[0]
+    pos = _row_positions(pos, B)
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(compute))
     k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(compute))
     v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(compute))
-    cos, sin = rope_table(jnp.array([pos]), cfg.head_dim, theta)
+    cos, sin = rope_table(pos[:, None], cfg.head_dim, theta)   # (B,1,dim/2)
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
     T = cache["k"].shape[1]
-    # ring-buffer write (rolling for SWA; plain append when T >= max len)
+    # per-row ring-buffer write (rolling for SWA; plain append when T >= max)
     slot = jnp.mod(pos, T)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    k_cache = _ring_write_rows(cache["k"], k, slot)
+    v_cache = _ring_write_rows(cache["v"], v, slot)
     cache_len = jnp.minimum(pos + 1, T)
     if cfg.attn_impl == "pallas":
         from repro.kernels.decode_attention.ops import decode_attention
@@ -443,8 +464,9 @@ def _mla_decode(x, p, cfg, cache, pos, *, compute):
     s = cfg.mla
     B = x.shape[0]
     H = cfg.num_heads
+    pos = _row_positions(pos, B)
     q_nope, q_rope = _mla_project_q(x, p, cfg, compute)          # (B,1,H,*)
-    cos, sin = rope_table(jnp.array([pos]), s.qk_rope_head_dim, cfg.rope_theta)
+    cos, sin = rope_table(pos[:, None], s.qk_rope_head_dim, cfg.rope_theta)
     q_rope = apply_rope(q_rope, cos, sin)
 
     kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(compute))
@@ -453,10 +475,8 @@ def _mla_decode(x, p, cfg, cache, pos, *, compute):
 
     T = cache["ckv"].shape[1]
     slot = jnp.mod(pos, T)
-    ckv = jax.lax.dynamic_update_slice_in_dim(
-        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), slot, axis=1)
-    krope = jax.lax.dynamic_update_slice_in_dim(
-        cache["krope"], kr_new.astype(cache["krope"].dtype), slot, axis=1)
+    ckv = _ring_write_rows(cache["ckv"], ckv_new, slot)
+    krope = _ring_write_rows(cache["krope"], kr_new, slot)
 
     wkv_b = p["wkv_b"].astype(compute)                           # (r,H,n+v)
     wk = wkv_b[..., : s.qk_nope_head_dim]                        # (r,H,n)
@@ -469,8 +489,8 @@ def _mla_decode(x, p, cfg, cache, pos, *, compute):
         + jnp.einsum("bhk,btk->bht", q_rope[:, 0], krope.astype(compute),
                      preferred_element_type=jnp.float32)
     ) * scale
-    valid = jnp.arange(T) < jnp.minimum(pos + 1, T)
-    scores = jnp.where(valid[None, None], scores, NEG_INF)
+    valid = jnp.arange(T)[None] < jnp.minimum(pos + 1, T)[:, None]   # (B,T)
+    scores = jnp.where(valid[:, None], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out_lat = jnp.einsum("bht,btr->bhr", probs.astype(compute),
                          ckv.astype(compute),

@@ -178,7 +178,8 @@ def encdec_prefill(params, cfg, frames, tokens, cache, *, compute=jnp.bfloat16):
 
 
 def encdec_decode(params, cfg, token, cache, pos, *, compute=jnp.bfloat16):
-    """One decoder step against self + cross caches."""
+    """One decoder step against self + cross caches.  pos: scalar or (B,)
+    per-row absolute positions (continuous batching)."""
     x = embed_lookup(token, params["embed"], compute)
 
     def body(x, inp):

@@ -77,11 +77,15 @@ def rope_table(positions, dim: int, theta: float):
 
 
 def apply_rope(x, cos, sin):
-    """x: (..., seq, heads, dim); cos/sin: (seq, dim/2) or broadcastable."""
+    """x: (..., seq, heads, dim); cos/sin: (seq, dim/2), (B, seq, dim/2)
+    (per-row positions — continuous-batching decode), or broadcastable."""
     x1, x2 = jnp.split(x, 2, axis=-1)
     if cos.ndim == 2:      # (S, dim/2) -> broadcast over batch and heads
         cos = cos[None, :, None, :]
         sin = sin[None, :, None, :]
+    elif cos.ndim == 3:    # (B, S, dim/2) -> broadcast over heads
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
     out1 = x1 * cos - x2 * sin
     out2 = x2 * cos + x1 * sin
     return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)

@@ -256,8 +256,9 @@ def lm_prefill(params, cfg, tokens, cache, *, extra_embeds=None,
 
 
 def lm_decode(params, cfg, token, cache, pos, *, compute=jnp.bfloat16):
-    """One decode step.  token: (B,1) int32; pos: scalar int32 absolute
-    position of the new token.  Returns (logits (B,1,V), new cache)."""
+    """One decode step.  token: (B,1) int32; pos: scalar or (B,) int32
+    absolute position(s) of the new token — per-row positions are the
+    continuous-batching serve path.  Returns (logits (B,1,V), new cache)."""
     slots = layer_slots(cfg)
     x = embed_lookup(token, params["embed"], compute)
 

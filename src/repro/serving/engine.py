@@ -1,19 +1,39 @@
-"""Batched serving engine: wave-scheduled static-slot batching.
+"""Batched serving engine: continuous batching over static slots.
 
 The engine owns a fixed (slots, max_len) KV-cache block compiled ONCE into
-a single decode executable; admission never recompiles.  Requests are
-scheduled in *waves*: when all slots are free, up to `slots` requests are
-pulled from the queue, left-padded to a common prompt bucket, prefilled
-slot-by-slot into the shared cache block, and then decoded TOGETHER — one
-batched decode step per token until every slot finishes.  A slot whose
-request completes early idles until the wave ends (the classic static-
-batching trade; per-slot positions — continuous batching — would need a
-vectorized `pos` through the decode path and is listed as future work in
-DESIGN.md).
+a single decode executable; admission never recompiles.  ``pos`` is a
+per-slot ``(slots,)`` vector threaded through the whole decode path
+(models/api.py -> attention per-row ring writes and ragged KV lengths), so
+every slot decodes at its own absolute position.  A slot whose request
+finishes is refilled IMMEDIATELY: the next queued request is prefilled into
+just that batch row (`_install_slot`) while the other slots keep decoding —
+no wave barrier, no decode-state reallocation, no idle slots while work is
+queued.
 
-In the pilot system this engine is one *payload*: ``serve`` tasks late-bind
-it onto an already-held slice, and a pilot can run several engine waves for
-different models back-to-back without re-provisioning — the paper's
+Per-slot ``pos`` invariants:
+
+* after admission into slot ``s`` with prompt bucket ``plen``,
+  ``pos[s] == plen`` and cache rows ``0..plen-1`` of row ``s`` hold the
+  (left-padded) prompt KV;
+* each decode step writes row ``s``'s KV at ``pos[s]`` and advances
+  ``pos[s] += 1`` — rows never interact, so admitting a request mid-decode
+  leaves every other slot's token stream bitwise identical to a solo run;
+* a slot is evicted when ``pos[s]`` reaches ``max_len`` (its cache row is
+  full) or its token budget is spent — both checked ON DEVICE;
+* free slots keep stepping over garbage in their own row (cheaper than
+  masking the batched matmuls); admission overwrites the row wholesale.
+
+One-transfer-per-step rule: the decode loop is device-resident.  A single
+jitted step (donated state) decodes, argmaxes, debits the per-slot token
+budget and computes the done mask on device, returning one packed
+``(2, slots)`` int32 array — tokens and done flags — which is the ONLY
+device→host transfer of the step (``d2h_transfers`` counts them; tests
+assert ``d2h_transfers == steps``).  The wave-era engine pulled ``pos``
+once per live slot plus an argmax round-trip per request.
+
+In the pilot system this engine is a first-class *payload*: ``serve``
+tasks late-bind it onto an already-held slice and drive it from a request
+trace in the startup spec (core/images.py + core/wrapper.py) — the paper's
 multi-payload pilot, applied to inference.
 """
 
@@ -22,7 +42,6 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -46,7 +65,6 @@ class Request:
 @dataclasses.dataclass
 class SlotState:
     rid: int = -1                      # -1 == free
-    remaining: int = 0
 
 
 def admit_length(prompt_len: int, max_len: int) -> int:
@@ -70,114 +88,216 @@ def admit_length(prompt_len: int, max_len: int) -> int:
     return min(b, max_len - 1)
 
 
+def make_engine_step(bundle, max_len: int):
+    """The engine's jitted decode step: decode + argmax + per-slot budget
+    debit + done mask, all on device, returning one packed (2, slots) int32
+    array.  Module-level so engines built over the SAME bundle/max_len (a
+    serve image's factory) share one jit wrapper — which is what lets
+    ``ExecutableRegistry.prefetch`` stage the XLA compile before the
+    payload's first tick."""
+    def step(params, state, active, budget):
+        logits, new_state = bundle.decode(params, state)       # argmax inside
+        tok = new_state["token"][:, 0]
+        budget = budget - active.astype(jnp.int32)
+        done = active & ((budget <= 0) | (new_state["pos"] >= max_len))
+        packed = jnp.stack([tok, done.astype(jnp.int32)])      # (2, slots)
+        return packed, new_state, active & ~done, budget
+
+    return jax.jit(step, donate_argnums=(1, 2, 3))
+
+
 class ServeEngine:
-    def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256):
+    """Continuous-batching engine.  ``admission="wave"`` restores the old
+    wave-scheduled baseline (refill only when every slot has drained) so
+    benchmarks can quantify the win on identical workloads.
+
+    ``bundle``/``step_fn``/``prefill_fn`` let a serve image's factory share
+    one model bundle and its jitted step/prefill wrappers across engine
+    instances (jit caches are per wrapper, so sharing the wrapper is what
+    makes a prefetched compile reusable)."""
+
+    def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256,
+                 admission: str = "continuous", bundle=None, step_fn=None,
+                 prefill_fn=None):
+        assert admission in ("continuous", "wave"), admission
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
-        self.bundle = build_model(cfg)
-        self.state = init_decode_state(cfg, slots, max_len)
+        self.admission = admission
+        self.bundle = bundle or build_model(cfg)
+        self.state = init_decode_state(cfg, slots, max_len)   # pos: (slots,)
+        self.budget = jnp.zeros((slots,), jnp.int32)          # device-side
+        self.active = jnp.zeros((slots,), bool)               # device-side
         self.slot_meta = [SlotState() for _ in range(slots)]
         self.queue: deque[Request] = deque()
         self.done: dict[int, Request] = {}
         self._live: dict[int, Request] = {}
         self.steps = 0
-        self.idle_slot_steps = 0       # static-batching waste metric
+        self.idle_slot_steps = 0       # slots with no request during a step
+        self.d2h_transfers = 0         # must equal `steps` (one per step)
 
-        # one compiled decode step for the whole engine lifetime
-        self._decode = jax.jit(self.bundle.decode, donate_argnums=1)
-        # prefill compiles per prompt-length bucket
-        self._prefill_cache: dict[int, Callable] = {}
+        # one compiled decode step for the whole engine lifetime; engine
+        # state (decode state + budget + active) is donated every step
+        self._step_fn = step_fn or make_engine_step(self.bundle, max_len)
+        # one jitted prefill wrapper; jax re-traces per prompt bucket shape
+        self._prefill = prefill_fn or jax.jit(self.bundle.prefill)
 
     # ------------------------------------------------------------------
 
     def submit(self, req: Request):
         """Admit a request.  A prompt that cannot fit the engine's KV block
         (prompt + at least one generated token within ``max_len``) is
-        rejected here, explicitly — the old behavior silently clamped the
-        bucket to ``max_len`` and then left-pad indexing wrote the prompt
-        out of range."""
+        rejected here, explicitly — never silently cropped."""
         admit_length(len(req.prompt), self.max_len)
         self.queue.append(req)
-
-    def _prefill_fn(self, plen: int):
-        if plen not in self._prefill_cache:
-            self._prefill_cache[plen] = jax.jit(
-                lambda p, b: self.bundle.prefill(p, b))
-        return self._prefill_cache[plen]
 
     def _bucket(self, n: int) -> int:
         return admit_length(n, self.max_len)
 
     # ------------------------------------------------------------------
+    # slot-granular admission
+    # ------------------------------------------------------------------
 
-    def _start_wave(self):
-        """Admit up to `slots` queued requests; prefill each into its slot."""
-        wave = []
-        while self.queue and len(wave) < self.slots:
-            wave.append(self.queue.popleft())
-        if not wave:
+    def _admit(self):
+        """Fill free slots from the queue.  Continuous mode refills any free
+        slot immediately; wave mode (baseline) only refills once ALL slots
+        have drained."""
+        free = [i for i, m in enumerate(self.slot_meta) if m.rid == -1]
+        if not free or not self.queue:
             return
-        plen = max(self._bucket(len(r.prompt)) for r in wave)
-        self.state = init_decode_state(self.cfg, self.slots, self.max_len)
-        for si, req in enumerate(wave):
-            toks = np.zeros((1, plen), np.int32)
-            toks[0, -len(req.prompt):] = req.prompt          # left-pad
-            logits, cache = self._prefill_fn(plen)(
-                self.params, {"tokens": jnp.asarray(toks)})
-            nxt = int(jnp.argmax(logits[0, -1]))
-            self.state = _install_slot(self.state, cache, si, plen, nxt)
-            meta = self.slot_meta[si]
-            meta.rid, meta.remaining = req.rid, req.max_new_tokens
-            req.tokens.append(nxt)
-            req.first_token_s = time.monotonic() - req.submitted
-            self._live[req.rid] = req
-        self.state = {**self.state, "pos": jnp.asarray(plen, jnp.int32)}
+        if self.admission == "wave" and len(free) < self.slots:
+            return
+        for si in free:
+            if not self.queue:
+                break
+            self._admit_into(si, self.queue.popleft())
+
+    def _admit_into(self, si: int, req: Request):
+        """Prefill one request into batch row `si` while the other slots'
+        decode state stays untouched."""
+        plen = self._bucket(len(req.prompt))
+        toks = np.zeros((1, plen), np.int32)
+        toks[0, -len(req.prompt):] = req.prompt               # left-pad
+        logits, cache = self._prefill(
+            self.params, {"tokens": jnp.asarray(toks)})
+        nxt = int(jnp.argmax(logits[0, -1]))                  # admission-time
+        self.state = _install_slot(self.state, cache, si, plen, nxt)
+        self.active = self.active.at[si].set(True)
+        self.budget = self.budget.at[si].set(req.max_new_tokens)
+        self.slot_meta[si].rid = req.rid
+        req.tokens.append(nxt)
+        req.first_token_s = time.monotonic() - req.submitted
+        self._live[req.rid] = req
+
+    # ------------------------------------------------------------------
 
     def step(self) -> int:
-        """One engine iteration.  Returns number of tokens decoded."""
-        live = [m for m in self.slot_meta if m.rid != -1]
-        if not live:
-            self._start_wave()
-            live = [m for m in self.slot_meta if m.rid != -1]
-            if not live:
-                return 0
-        logits, self.state = self._decode(self.params, self.state)
+        """One engine iteration: admit into free slots, then one batched
+        decode step.  Returns the number of live slots decoded (0 when the
+        engine is idle — an idle tick is not a decode step)."""
+        self._admit()
+        n_live = sum(1 for m in self.slot_meta if m.rid != -1)
+        if n_live == 0:
+            return 0
+        packed, self.state, self.active, self.budget = self._step_fn(
+            self.params, self.state, self.active, self.budget)
         self.steps += 1
-        self.idle_slot_steps += self.slots - len(live)
-        toks = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        self.idle_slot_steps += self.slots - n_live
+        out = jax.device_get(packed)       # THE device→host transfer
+        self.d2h_transfers += 1
+        toks, dones = out[0], out[1]
+        now = time.monotonic()
         for si, meta in enumerate(self.slot_meta):
             if meta.rid == -1:
                 continue
             req = self._live[meta.rid]
             req.tokens.append(int(toks[si]))
-            meta.remaining -= 1
-            if meta.remaining <= 0 or int(self.state["pos"]) >= self.max_len - 1:
-                req.done_s = time.monotonic() - req.submitted
+            if dones[si]:
+                req.done_s = now - req.submitted
                 self.done[req.rid] = req
                 del self._live[meta.rid]
                 meta.rid = -1
-        return len(live)
+        return n_live
+
+    # ------------------------------------------------------------------
 
     def run(self, *, max_steps: int = 10_000) -> dict:
         t0 = time.monotonic()
         decoded = 0
         while (self.queue or self._live) and self.steps < max_steps:
             decoded += self.step()
-        wall = time.monotonic() - t0
+        return self._stats(decoded, time.monotonic() - t0)
+
+    def run_trace(self, trace, *, max_ticks: int = 100_000,
+                  on_tick=None) -> dict:
+        """Drive the engine from a request *trace* with staggered arrivals.
+
+        ``trace`` is a list of JSON-able dicts (the startup-spec format the
+        pilot system ships to a serve payload):
+        ``{"rid", "prompt": [ints], "max_new_tokens", "at_step"}`` — the
+        request becomes visible to admission at tick ``at_step``.  Idle
+        ticks (waiting for an arrival) advance time but are not decode
+        steps.
+
+        ``on_tick(tick, step_seconds)`` (optional) runs after every tick —
+        the wrapper's heartbeat/stop hook; returning False aborts the run.
+        """
+        pending = sorted(enumerate(trace),
+                         key=lambda ie: int(ie[1].get("at_step", 0)))
+        t0 = time.monotonic()
+        decoded, tick, i = 0, 0, 0
+        while i < len(pending) or self.queue or self._live:
+            while i < len(pending) and int(pending[i][1].get("at_step", 0)) <= tick:
+                idx, e = pending[i]
+                i += 1
+                self.submit(Request(
+                    rid=int(e.get("rid", idx)),
+                    prompt=np.asarray(e["prompt"], np.int32),
+                    max_new_tokens=int(e.get("max_new_tokens", 16))))
+            t_step = time.monotonic()
+            decoded += self.step()
+            tick += 1
+            if on_tick is not None and on_tick(
+                    tick, time.monotonic() - t_step) is False:
+                break
+            if tick >= max_ticks:
+                break
+        return self._stats(decoded, time.monotonic() - t0)
+
+    def _stats(self, decoded: int, wall: float) -> dict:
         util = (decoded / (self.steps * self.slots)) if self.steps else 0.0
+        ttfts = [r.first_token_s for r in self.done.values()
+                 if r.first_token_s is not None]
+        tpots = [(r.done_s - r.first_token_s) / max(1, len(r.tokens) - 1)
+                 for r in self.done.values()
+                 if r.done_s is not None and r.first_token_s is not None
+                 and len(r.tokens) > 1]
+        pct = lambda v, q: float(np.percentile(v, q)) if v else None
         return {
             "completed": len(self.done),
             "decode_steps": self.steps,
             "tokens_decoded": decoded,
             "slot_utilization": util,
+            "idle_slot_steps": self.idle_slot_steps,
+            "d2h_transfers": self.d2h_transfers,
             "wall_s": wall,
             "tok_per_s": decoded / wall if wall else 0.0,
-            "mean_ttft_s": float(np.mean([r.first_token_s
-                                          for r in self.done.values()]))
-            if self.done else None,
+            "mean_ttft_s": float(np.mean(ttfts)) if ttfts else None,
+            "ttft_p50_s": pct(ttfts, 50),
+            "ttft_p99_s": pct(ttfts, 99),
+            "tpot_p50_s": pct(tpots, 50),
+            "tpot_p99_s": pct(tpots, 99),
         }
+
+    def reset_metrics(self):
+        """Zero the counters/results between benchmark phases (e.g. after a
+        jit-warmup run) without touching compiled functions or slot state."""
+        assert not self._live and not self.queue, "engine still has work"
+        self.steps = 0
+        self.idle_slot_steps = 0
+        self.d2h_transfers = 0
+        self.done.clear()
 
 
 # --------------------------------------------------------------------------
@@ -185,8 +305,9 @@ class ServeEngine:
 
 def _install_slot(state, prefill_cache, slot: int, plen: int, next_token: int):
     """Copy one prefilled request's cache rows into batch row `slot` of the
-    engine's shared decode state.  All LM cache leaves are stacked
-    (n_groups/L, B, ...), so the batch dim is 1 everywhere."""
+    engine's shared decode state and reset that row's position to `plen`.
+    All LM cache leaves are stacked (n_groups/L, B, ...), so the batch dim
+    is 1 everywhere."""
     def merge(dst, src):
         src_b = jnp.moveaxis(src, 1, 0)[0]           # drop batch (=1)
         dst_b = jnp.moveaxis(dst, 1, 0)              # (B, groups, ...)
@@ -196,7 +317,8 @@ def _install_slot(state, prefill_cache, slot: int, plen: int, next_token: int):
 
     new_cache = jax.tree.map(merge, state["cache"], prefill_cache)
     token = state["token"].at[slot, 0].set(next_token)
-    return {"cache": new_cache, "token": token, "pos": state["pos"]}
+    pos = state["pos"].at[slot].set(plen)
+    return {"cache": new_cache, "token": token, "pos": pos}
 
 
 def _fit_rows(src, dst_shape):

@@ -76,10 +76,11 @@ def test_decode_step(arch, rng_key):
     logits, state = jax.jit(bundle.decode)(params, state)
     assert logits.shape == (B, 1, cfg.vocab_size)
     assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
-    assert int(state["pos"]) == 1
+    # pos is per-row (continuous batching); lockstep rows advance together
+    np.testing.assert_array_equal(np.asarray(state["pos"]), np.ones(B))
     # second step advances
     logits2, state = jax.jit(bundle.decode)(params, state)
-    assert int(state["pos"]) == 2
+    np.testing.assert_array_equal(np.asarray(state["pos"]), np.full(B, 2))
     assert bool(jnp.all(jnp.isfinite(logits2.astype(jnp.float32))))
 
 

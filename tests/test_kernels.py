@@ -91,6 +91,29 @@ def test_decode_attention_sweep(B, T, H, K, Dh, dtype):
         rtol=5e-2, atol=2e-2)
 
 
+def test_decode_attention_ragged_positions():
+    """Continuous-batching shape: every batch row is an independent request
+    at its own position, so per-row KV lengths are fully ragged — a
+    freshly-admitted row (short prefix) next to a nearly-full one, with
+    lengths off the tile boundary."""
+    B, T, H, K, Dh = 5, 160, 4, 2, 32
+    q = _rand((B, H, Dh), jnp.float32, 17)
+    kc = _rand((B, T, K, Dh), jnp.float32, 18)
+    vc = _rand((B, T, K, Dh), jnp.float32, 19)
+    lens = jnp.asarray([160, 1, 33, 97, 17], jnp.int32)
+    out = decode_attention(q, kc, vc, lens, block_t=32)
+    ref = decode_attention_ref(q, kc, vc, lens)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=5e-2, atol=2e-2)
+    # row independence: changing the OTHER rows' lengths must not change a
+    # given row's output (each row masks only its own KV tail)
+    lens2 = jnp.asarray([160, 90, 2, 5, 17], jnp.int32)
+    out2 = decode_attention(q, kc, vc, lens2, block_t=32)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(out2[0]))
+    np.testing.assert_array_equal(np.asarray(out[4]), np.asarray(out2[4]))
+
+
 # ---------------------------------------------------------------------------
 # ssd scan
 # ---------------------------------------------------------------------------

@@ -1,0 +1,328 @@
+"""Continuous-batching serve path: slot isolation, churn, per-slot
+eviction, the one-device→host-transfer-per-step rule, per-row decode
+positions, registry prefetch, and the serve payload through the pilot.
+
+Model-heavy tests carry @pytest.mark.slow (fast lane skips them); the
+per-row attention unit tests and the registry prefetch contract run in the
+fast lane.
+"""
+
+from __future__ import annotations
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.serving.engine import Request, ServeEngine, admit_length
+
+
+def _params(cfg):
+    from repro.models.api import build_model
+    return build_model(cfg).init(jax.random.key(0))
+
+
+def _req(rid, plen, max_new, vocab=512, seed=None):
+    rng = np.random.default_rng(seed if seed is not None else rid)
+    return Request(rid=rid,
+                   prompt=rng.integers(0, vocab, size=plen).astype(np.int32),
+                   max_new_tokens=max_new)
+
+
+# ---------------------------------------------------------------------------
+# per-row decode positions (unit level, fast lane)
+# ---------------------------------------------------------------------------
+
+def test_attention_decode_vector_pos_matches_scalar():
+    """All rows at the same position: the (B,) pos vector must reproduce the
+    scalar-pos decode bit for bit."""
+    from repro.models import attention as attn
+
+    cfg = get_smoke_config("smollm-360m")
+    p = attn.init_attention(jax.random.key(1), cfg)
+    B, T = 3, 32
+    cache = attn.init_kv_cache(cfg, B, T)
+    x = jax.random.normal(jax.random.key(2), (B, 1, cfg.d_model),
+                          jnp.bfloat16)
+    out_s, c_s = attn.attention_decode(x, p, cfg, cache, jnp.int32(5))
+    out_v, c_v = attn.attention_decode(x, p, cfg, cache,
+                                       jnp.full((B,), 5, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out_s, np.float32),
+                                  np.asarray(out_v, np.float32))
+    for a, b in zip(jax.tree.leaves(c_s), jax.tree.leaves(c_v)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_attention_decode_ragged_pos_matches_per_row_runs():
+    """Ragged positions: row b of a batched decode must equal running that
+    row alone at its scalar position — the slot-isolation invariant at the
+    attention layer."""
+    from repro.models import attention as attn
+
+    cfg = get_smoke_config("smollm-360m")
+    p = attn.init_attention(jax.random.key(1), cfg)
+    B, T = 3, 32
+    cache = {k: jax.random.normal(jax.random.key(3), v.shape, v.dtype) * 0.1
+             for k, v in attn.init_kv_cache(cfg, B, T).items()}
+    x = jax.random.normal(jax.random.key(2), (B, 1, cfg.d_model),
+                          jnp.bfloat16)
+    pos = jnp.asarray([2, 17, 30], jnp.int32)
+    out, new_cache = attn.attention_decode(x, p, cfg, cache, pos)
+    for b in range(B):
+        cache_b = {k: v[b:b + 1] for k, v in cache.items()}
+        out_b, nc_b = attn.attention_decode(x[b:b + 1], p, cfg, cache_b,
+                                            pos[b])
+        np.testing.assert_array_equal(np.asarray(out[b], np.float32),
+                                      np.asarray(out_b[0], np.float32))
+        for k in new_cache:
+            np.testing.assert_array_equal(
+                np.asarray(new_cache[k][b], np.float32),
+                np.asarray(nc_b[k][0], np.float32))
+
+
+def test_decode_state_pos_is_per_slot():
+    from repro.models.api import init_decode_state
+
+    st = init_decode_state(get_smoke_config("smollm-360m"), 4, 32)
+    assert st["pos"].shape == (4,)
+
+
+# ---------------------------------------------------------------------------
+# engine: slot isolation / churn / eviction (model-level, slow lane)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_slot_isolation_mid_decode_admission():
+    """Admitting a request mid-decode must leave the other slot's token
+    stream IDENTICAL to a solo run — per-slot positions mean rows never
+    interact."""
+    cfg = get_smoke_config("smollm-360m")
+    params = _params(cfg)
+
+    solo = ServeEngine(cfg, params, slots=2, max_len=64)
+    solo.submit(_req(0, 7, 12, cfg.vocab_size))
+    solo.run()
+    solo_tokens = tuple(solo.done[0].tokens)
+
+    eng = ServeEngine(cfg, params, slots=2, max_len=64)
+    eng.submit(_req(0, 7, 12, cfg.vocab_size))
+    for _ in range(5):
+        eng.step()                       # request 0 is mid-decode
+    eng.submit(_req(1, 13, 9, cfg.vocab_size))
+    eng.run()
+    assert tuple(eng.done[0].tokens) == solo_tokens
+    assert eng.done[1].tokens            # the intruder also completed
+
+
+@pytest.mark.slow
+def test_churn_full_queue_mixed_prompt_lengths():
+    """More requests than slots, mixed prompt lengths and budgets: freed
+    slots must be refilled immediately (no wave barrier), every request
+    completes with exactly 1 + max_new_tokens tokens."""
+    cfg = get_smoke_config("smollm-360m")
+    params = _params(cfg)
+    eng = ServeEngine(cfg, params, slots=2, max_len=96)
+    lens = [4, 21, 9, 40, 5, 17, 30]
+    budgets = [3, 7, 5, 4, 9, 6, 8]
+    for i, (pl, mn) in enumerate(zip(lens, budgets)):
+        eng.submit(_req(i, pl, mn, cfg.vocab_size))
+    stats = eng.run()
+    assert stats["completed"] == 7
+    for i, mn in enumerate(budgets):
+        assert len(eng.done[i].tokens) == mn + 1, (i, eng.done[i].tokens)
+    # continuous admission: the whole run needs only ceil(total/2) + ramp
+    # steps, far below the wave schedule's sum of per-wave maxima
+    assert stats["slot_utilization"] > 0.8, stats
+    # device-resident loop contract
+    assert stats["d2h_transfers"] == stats["decode_steps"]
+
+
+@pytest.mark.slow
+def test_max_len_eviction_per_slot():
+    """A slot whose pos reaches max_len is evicted on its own clock while
+    its neighbor keeps decoding, and the freed slot is refilled."""
+    cfg = get_smoke_config("smollm-360m")
+    params = _params(cfg)
+    eng = ServeEngine(cfg, params, slots=2, max_len=32)
+    eng.submit(_req(0, 5, 500, cfg.vocab_size))     # bucket 16: evicts at 32
+    eng.submit(_req(1, 5, 3, cfg.vocab_size))
+    eng.submit(_req(2, 5, 4, cfg.vocab_size))       # refills slot 1
+    eng.run()
+    assert len(eng.done) == 3
+    # prefill token + one per decode position plen..max_len-1
+    assert len(eng.done[0].tokens) == 1 + (32 - 16)
+    assert len(eng.done[1].tokens) == 4
+    assert len(eng.done[2].tokens) == 5
+
+
+@pytest.mark.slow
+def test_prompt_too_long_rejected():
+    cfg = get_smoke_config("smollm-360m")
+    params = _params(cfg)
+    eng = ServeEngine(cfg, params, slots=1, max_len=32)
+    with pytest.raises(ValueError):
+        eng.submit(_req(0, 32, 4, cfg.vocab_size))
+    assert admit_length(5, 32) == 16
+
+
+# ---------------------------------------------------------------------------
+# the one-transfer-per-step rule
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_single_host_transfer_per_decode_step():
+    """The decode loop must perform exactly ONE device→host materialization
+    per step (the packed tokens/done array).  Counted by intercepting
+    ArrayImpl._value — the funnel for device_get and int()/float() pulls —
+    which is what the wave engine's per-slot int(pos) syncs went through."""
+    import jax._src.array as jarr
+
+    cfg = get_smoke_config("smollm-360m")
+    params = _params(cfg)
+    eng = ServeEngine(cfg, params, slots=2, max_len=64)
+    eng.submit(_req(0, 7, 30, cfg.vocab_size))
+    eng.submit(_req(1, 4, 30, cfg.vocab_size))
+    eng.step()                 # admissions (prefill argmax pulls) land here
+
+    orig = jarr.ArrayImpl.__dict__["_value"]
+    pulls = []
+    jarr.ArrayImpl._value = property(lambda self: (pulls.append(1),
+                                                   orig.fget(self))[1])
+    try:
+        before = eng.steps
+        for _ in range(6):
+            eng.step()
+        n_steps = eng.steps - before
+    finally:
+        jarr.ArrayImpl._value = orig
+    assert n_steps == 6
+    assert len(pulls) == n_steps, f"{len(pulls)} host pulls in {n_steps} steps"
+    assert eng.d2h_transfers == eng.steps
+
+
+# ---------------------------------------------------------------------------
+# registry prefetch (fast lane: noop image compiles in microseconds)
+# ---------------------------------------------------------------------------
+
+def test_registry_prefetch_single_flight():
+    from repro.core.images import ExecutableRegistry, PayloadImage
+
+    reg = ExecutableRegistry()
+    img = PayloadImage(arch="placeholder", shape="none", mode="noop")
+    ev = reg.prefetch(img)
+    assert ev.wait(timeout=30.0)
+    exe = reg.pull(img)
+    assert exe.cached                       # the prefetch paid the compile
+    assert reg.stats["prefetches"] == 1
+    # an already-cached image prefetches to an immediately-set event
+    ev2 = reg.prefetch(img)
+    assert ev2.is_set()
+    assert reg.stats["prefetches"] == 1     # no second background compile
+
+
+def test_registry_prefetch_concurrent_pull_single_compile():
+    """A pull racing a prefetch of the same image must wait on the same
+    single-flight compile, not start a second one."""
+    from repro.core.images import ExecutableRegistry, PayloadImage
+
+    reg = ExecutableRegistry()
+    img = PayloadImage(arch="placeholder", shape="none", mode="noop")
+    results = []
+
+    def bind():
+        results.append(reg.pull(img))
+
+    ev = reg.prefetch(img)
+    t = threading.Thread(target=bind)
+    t.start()
+    t.join(30.0)
+    assert ev.wait(timeout=30.0)
+    assert reg.stats["misses"] == 1         # exactly one compile happened
+
+
+def test_registry_prefetch_race_spawns_one_worker():
+    """Concurrent prefetches of the same uncached image must claim the key
+    under the lock: one background compile, every caller joins it."""
+    from repro.core.images import ExecutableRegistry, PayloadImage
+
+    reg = ExecutableRegistry()
+    img = PayloadImage(arch="placeholder", shape="none", mode="noop")
+    start = threading.Barrier(4)
+    evs = []
+
+    def go():
+        start.wait()
+        evs.append(reg.prefetch(img))
+
+    threads = [threading.Thread(target=go) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(30.0)
+    assert len(evs) == 4
+    for ev in evs:
+        assert ev.wait(timeout=30.0)
+    assert reg.stats["prefetches"] == 1
+    assert reg.stats["misses"] == 1
+
+
+@pytest.mark.slow
+def test_prefetch_hint_warms_next_bind():
+    """A matched task's prefetch hint overlaps the NEXT image's pull with
+    the current payload's run: the follow-up bind is a cache hit."""
+    from repro.core.cluster import ClusterSim
+    from repro.core.images import PayloadImage
+    from repro.core.pilot import PilotConfig
+
+    sim = ClusterSim()
+    img1 = PayloadImage("smollm-360m", "smoke", "decode")
+    img2 = PayloadImage("mamba2-370m", "smoke", "decode")
+    sim.repo.submit(img1, n_steps=3, prefetch_hint=img2)
+    sim.repo.submit(img2, n_steps=3)
+    (s,) = sim.provision(1)
+    pilot = sim.spawn_pilot(s, PilotConfig(max_payloads=3, idle_grace=1.0))
+    assert sim.run_until_drained(timeout=300.0)
+    sim.join_all(30.0)
+    assert sim.registry.stats["prefetches"] == 1
+    assert [h["exitcode"] for h in pilot.history] == [0, 0]
+    assert pilot.history[0]["prefetch_started"] is True
+    # the second bind found its image in the cache (compile overlapped or
+    # joined via single-flight — either way the pull was not a fresh miss)
+    assert pilot.history[1]["bind_cached"] is True
+
+
+# ---------------------------------------------------------------------------
+# serve as a first-class pilot payload
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_serve_payload_via_pilot():
+    """A pilot late-binds an inference SERVER the way it late-binds a train
+    step: the request trace rides in the startup spec, and the telemetry
+    reports continuous-batching serving stats."""
+    from repro.core.cluster import ClusterSim
+    from repro.core.images import PayloadImage
+    from repro.core.pilot import PilotConfig
+    from repro.launch.serve import make_trace
+
+    cfg = get_smoke_config("smollm-360m")
+    trace = make_trace(cfg.vocab_size, 5, max_len=64, seed=3)
+    sim = ClusterSim()
+    tid = sim.repo.submit(
+        PayloadImage("smollm-360m", "smoke", "serve"),
+        n_steps=500, payload_spec={"trace": trace, "max_len": 64})
+    (s,) = sim.provision(1)
+    sim.spawn_pilot(s, PilotConfig(max_payloads=1, idle_grace=1.0))
+    assert sim.run_until_drained(timeout=300.0)
+    sim.join_all(30.0)
+    r = sim.repo.result(tid)
+    assert r is not None and r.exitcode == 0
+    sv = r.telemetry["serve"]
+    assert sv["completed"] == 5
+    assert sv["d2h_transfers"] == sv["decode_steps"]
+    assert 0.0 < sv["slot_utilization"] <= 1.0
+    assert len(r.telemetry["tokens"]) == 5
