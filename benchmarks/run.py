@@ -22,6 +22,7 @@ SUITES = {
     "sched": bench_scheduler.run,      # overlay scheduler throughput
     "monitor": bench_monitor.run,      # paper §3.4 monitor overhead
     "serving": bench_serving.run,      # payload-side serving numbers
+    "serving_paged": bench_serving.run_smoke,  # paged-vs-dense CI smoke
     "train": bench_train.run,          # payload-side training numbers
     "roofline": roofline.run,          # dry-run roofline aggregates
 }

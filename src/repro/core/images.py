@@ -210,42 +210,47 @@ class ExecutableRegistry:
             # continuous-batching ServeEngine over freshly-initialized params
             # and drives it from the request trace in the startup spec.
             # Every engine from this factory shares ONE jitted step (per
-            # max_len) and ONE jitted prefill wrapper, so warm() can stage
-            # the XLA compile at prefetch time and the payload's first tick
-            # hits the cache.
-            from repro.models.api import init_decode_state
+            # max_len), ONE jitted prefill wrapper and ONE chunked-prefill
+            # wrapper, so warm() can stage the XLA compiles at prefetch time
+            # and the payload's first tick hits the cache.
             from repro.serving.engine import ServeEngine, make_engine_step
 
             step_fns: dict[int, Any] = {}
             prefill_fn = jax.jit(bundle.prefill)
+            chunk_fn = (jax.jit(bundle.prefill_chunk, donate_argnums=1)
+                        if bundle.prefill_chunk is not None else None)
 
             def step_for(max_len):
                 if max_len not in step_fns:
                     step_fns[max_len] = make_engine_step(bundle, max_len)
                 return step_fns[max_len]
 
-            def fn(params, slots=None, max_len=None):
+            def fn(params, slots=None, max_len=None, **kw):
                 ml = max_len or shape.seq_len
                 return ServeEngine(cfg, params,
                                    slots=slots or shape.global_batch,
                                    max_len=ml, bundle=bundle,
                                    step_fn=step_for(ml),
-                                   prefill_fn=prefill_fn)
+                                   prefill_fn=prefill_fn,
+                                   chunk_fn=chunk_fn, **kw)
 
             def make_inputs(key):
                 return bundle.init(key)
 
             def warm():
-                B, S = shape.global_batch, shape.seq_len
+                # build a throwaway engine THROUGH the factory so the
+                # staged shapes (KV layout, pool size, buckets, chunk
+                # shapes) are exactly what served engines will use — the
+                # jit wrappers are shared, so every compile lands in the
+                # caches production engines hit.  Specs that override
+                # engine geometry (num_blocks/block_size/prefill_chunk)
+                # trade this prewarm for a first-tick compile.
                 params = bundle.init(jax.random.key(0))
-                state = init_decode_state(cfg, B, S)
-                out = step_for(S)(params, state,
-                                  jnp.zeros((B,), bool),
-                                  jnp.zeros((B,), jnp.int32))
+                eng = fn(params, prefill="chunked")
+                eng.warm_admission()   # every bucket + every chunk shape
+                out = eng._step_fn(params, eng.state, eng.active,
+                                   eng.budget)   # the decode-step compile
                 jax.block_until_ready(out[0])
-                logits, _ = prefill_fn(
-                    params, {"tokens": jnp.zeros((1, 16), jnp.int32)})
-                jax.block_until_ready(logits)
         else:                            # decode
             step = make_serve_step(cfg)
             fn = jax.jit(step, donate_argnums=1)

@@ -123,7 +123,12 @@ def _serve_loop(exe, key, n_steps, entry, proctable, telemetry, spec) -> int:
     meters serve progress exactly as it meters train steps.
     """
     params = exe.make_inputs(key)
-    eng = exe.fn(params, slots=spec.get("slots"), max_len=spec.get("max_len"))
+    kv_kw = {k: spec[k] for k in ("kv", "prefill", "prefill_chunk",
+                                  "num_blocks", "block_size",
+                                  "prefix_sharing")
+             if spec.get(k) is not None}
+    eng = exe.fn(params, slots=spec.get("slots"),
+                 max_len=spec.get("max_len"), **kv_kw)
 
     def on_tick(tick, dt):
         if entry.stop.is_set():
@@ -131,6 +136,9 @@ def _serve_loop(exe, key, n_steps, entry, proctable, telemetry, spec) -> int:
         proctable.heartbeat(entry.pid, dt)
         telemetry["steps"] = tick
         telemetry["step_times"].append(dt)
+        # live cache-pressure sample rides every heartbeat, so the pilot's
+        # monitor sees KV pressure mid-run, not only at exit
+        telemetry["serve_live"] = eng.kv_pressure()
         return True
 
     stats = eng.run_trace(spec.get("trace") or [], max_ticks=n_steps,
@@ -140,7 +148,13 @@ def _serve_loop(exe, key, n_steps, entry, proctable, telemetry, spec) -> int:
     telemetry["serve"] = {k: stats[k] for k in (
         "completed", "decode_steps", "tokens_decoded", "slot_utilization",
         "idle_slot_steps", "d2h_transfers", "tok_per_s",
-        "ttft_p50_s", "ttft_p99_s")}
+        "ttft_p50_s", "ttft_p99_s",
+        # cache pressure: the pilot's heartbeat consumer sees how hot the
+        # slot-sized claim is running (live/allocated KV) and how much the
+        # prefix cache is saving
+        "kv", "kv_memory_utilization", "kv_peak_live_tokens",
+        "kv_capacity_tokens", "prefix_hit_rate", "prefill_chunks",
+        "blocked_admissions")}
     telemetry["tokens"] = {str(r.rid): r.tokens for r in eng.done.values()}
     return 0
 

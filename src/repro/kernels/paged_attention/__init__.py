@@ -1,0 +1,1 @@
+from repro.kernels.paged_attention.ops import paged_decode_attention  # noqa: F401

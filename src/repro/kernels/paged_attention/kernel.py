@@ -1,0 +1,113 @@
+"""Paged flash-decode: single-token attention over a block-pool KV cache.
+
+The pool ``(num_blocks, block_size, K, Dh)`` is shared by every sequence;
+a per-row block table maps logical position ``p`` of batch row ``b`` to
+``pool[table[b, p // bs], p % bs]``.  Grid = (B, K, mb): the last axis
+walks the row's block table sequentially, carrying the online-softmax
+state in VMEM scratch.  Both the ragged lengths AND the block tables
+arrive via scalar prefetch (SMEM), so the physical block to stream into
+VMEM is chosen by the BlockSpec index_map — the gather never materializes
+a contiguous copy of the sequence, which is the whole point of paging:
+HBM holds exactly the live blocks, and admission-time block remapping
+(prefix reuse) costs zero copies.
+
+Blocks past ``cache_len`` skip their compute entirely (their table
+entries point at the reserved scratch block), so short sequences pay for
+the blocks they own, not for the table width.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(len_ref, btab_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_sc, l_sc, acc_sc, *, scale, block_size, n_b):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    b = pl.program_id(0)
+    t_pos = ti * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_size), 1)
+    valid = (t_pos < len_ref[b])[0]                       # (block_size,)
+
+    @pl.when(jnp.any(valid))
+    def _compute():
+        q = q_ref[0, 0]                                   # (G, Dh)
+        k = k_ref[0, :, 0]                                # (block_size, Dh)
+        # zero invalid rows so 0-weight garbage can't poison p@v
+        v = jnp.where(valid[:, None], v_ref[0, :, 0], 0.0)
+        s = jax.lax.dot_general(
+            q.astype(jnp.bfloat16), k.astype(jnp.bfloat16),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (G, block_size)
+        s = jnp.where(valid[None], s, NEG_INF)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * alpha + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p.astype(jnp.bfloat16), v.astype(jnp.bfloat16),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (G, Dh)
+        acc_sc[...] = acc_sc[...] * alpha[..., None] + pv
+        m_sc[...] = m_new
+
+    @pl.when(ti == n_b - 1)
+    def _finalize():
+        l = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0, 0] = (acc_sc[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention_kernel(q, k_pool, v_pool, block_tables, cache_len,
+                                  *, interpret=False):
+    """q: (B,K,G,Dh); pools: (nb, block_size, K, Dh); block_tables: (B, mb)
+    int32 physical block ids; cache_len: (B,) int32 valid positions."""
+    B, K, G, Dh = q.shape
+    nb, block_size = k_pool.shape[0], k_pool.shape[1]
+    mb = block_tables.shape[1]
+    scale = 1.0 / (Dh ** 0.5)
+
+    kernel = functools.partial(_paged_kernel, scale=scale,
+                               block_size=block_size, n_b=mb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                # lens, block_tables
+        grid=(B, K, mb),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, Dh),
+                         lambda b, h, ti, lens, btab: (b, h, 0, 0)),
+            # the paged gather: the physical block streamed into VMEM is
+            # picked from the prefetched table, per grid cell
+            pl.BlockSpec((1, block_size, 1, Dh),
+                         lambda b, h, ti, lens, btab: (btab[b, ti], 0, h, 0)),
+            pl.BlockSpec((1, block_size, 1, Dh),
+                         lambda b, h, ti, lens, btab: (btab[b, ti], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dh),
+                               lambda b, h, ti, lens, btab: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, Dh), jnp.float32),
+        ],
+    )
+    lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (B,))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(lens, block_tables.astype(jnp.int32), q, k_pool, v_pool)

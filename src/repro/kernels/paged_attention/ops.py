@@ -1,0 +1,36 @@
+"""jit'd public wrapper for the paged flash-decode Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_decode_attention_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pool, v_pool, block_tables, cache_len, *,
+                           interpret=None):
+    """q: (B,H,Dh) one new token per sequence; pools: (nb, bs, K, Dh) shared
+    block pool; block_tables: (B, mb) int32; cache_len: scalar or (B,) valid
+    count.  Returns (B,H,Dh).
+
+    The logical sequence of row ``b`` is ``pool[table[b, p // bs], p % bs]``
+    for ``p < cache_len[b]``; table entries past the row's allocation point
+    at the reserved scratch block (id 0) and are masked out by the ragged
+    lengths, so they are never read into the softmax."""
+    B, H, Dh = q.shape
+    K = k_pool.shape[2]
+    assert H % K == 0, (H, K)
+    G = H // K
+    if interpret is None:
+        interpret = not _on_tpu()
+    qg = q.reshape(B, K, G, Dh)
+    o = paged_decode_attention_kernel(qg, k_pool, v_pool, block_tables,
+                                      cache_len, interpret=interpret)
+    return o.reshape(B, H, Dh)

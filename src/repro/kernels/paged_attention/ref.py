@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for paged single-token decode attention.
+
+The KV cache is a shared block pool ``(num_blocks, block_size, K, Dh)``;
+each batch row owns a *block table* ``(max_blocks,)`` of physical block
+ids mapping logical position ``p`` to ``pool[table[p // bs], p % bs]``.
+The oracle gathers each row's logical view and defers to the dense
+decode-attention oracle, so kernel-vs-ref equality also certifies the
+gather semantics.
+"""
+
+from __future__ import annotations
+
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def gather_kv(pool, block_tables):
+    """pool: (nb, bs, ...); block_tables: (B, mb) int32.
+    Returns the per-row logical view (B, mb*bs, ...)."""
+    B, mb = block_tables.shape
+    g = pool[block_tables]                     # (B, mb, bs, ...)
+    return g.reshape((B, mb * pool.shape[1]) + pool.shape[2:])
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, cache_len):
+    """q: (B,H,Dh); pools: (nb, bs, K, Dh); block_tables: (B, mb) int32;
+    cache_len: scalar or (B,) valid-entry count.  Returns (B,H,Dh)."""
+    kg = gather_kv(k_pool, block_tables)
+    vg = gather_kv(v_pool, block_tables)
+    return decode_attention_ref(q, kg, vg, cache_len)

@@ -29,17 +29,24 @@ from repro.serving.engine import ServeEngine
 
 
 def make_trace(vocab_size: int, n_requests: int, *, max_len: int = 128,
-               stagger: int = 1, seed: int = 0) -> list[dict]:
+               stagger: int = 1, seed: int = 0,
+               dup_rate: float = 0.0) -> list[dict]:
     """Staggered-arrival request trace (the startup-spec format): request i
     becomes visible at engine tick ``i * stagger``, with mixed prompt
-    lengths and token budgets."""
+    lengths and token budgets.  ``dup_rate`` is the fraction of requests
+    that repeat an earlier prompt verbatim (the repeated-query pattern the
+    paged engine's prefix cache serves copy-free)."""
     rng = np.random.default_rng(seed)
     trace = []
     for i in range(n_requests):
-        plen = int(rng.integers(4, max(5, max_len // 4)))
+        if trace and rng.random() < dup_rate:
+            prompt = list(trace[int(rng.integers(0, len(trace)))]["prompt"])
+        else:
+            plen = int(rng.integers(4, max(5, max_len // 4)))
+            prompt = rng.integers(0, vocab_size, size=plen).tolist()
         trace.append({
             "rid": i,
-            "prompt": rng.integers(0, vocab_size, size=plen).tolist(),
+            "prompt": prompt,
             "max_new_tokens": int(rng.choice([6, 10, 18, 28])),
             "at_step": i * stagger,
         })
@@ -47,11 +54,16 @@ def make_trace(vocab_size: int, n_requests: int, *, max_len: int = 128,
 
 
 def serve_direct(cfg, n_requests: int, slots: int, max_len: int,
-                 seed: int = 0, admission: str = "continuous") -> dict:
+                 seed: int = 0, admission: str = "continuous",
+                 kv: str | None = None, prefill: str = "oneshot",
+                 num_blocks: int | None = None,
+                 dup_rate: float = 0.0) -> dict:
     params = build_model(cfg).init(jax.random.key(seed))
     eng = ServeEngine(cfg, params, slots=slots, max_len=max_len,
-                      admission=admission)
-    trace = make_trace(cfg.vocab_size, n_requests, max_len=max_len, seed=seed)
+                      admission=admission, kv=kv, prefill=prefill,
+                      num_blocks=num_blocks)
+    trace = make_trace(cfg.vocab_size, n_requests, max_len=max_len,
+                       seed=seed, dup_rate=dup_rate)
     return eng.run_trace(trace)
 
 
@@ -110,6 +122,17 @@ def main():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--wave", action="store_true",
                     help="static wave-batching baseline (for comparison)")
+    ap.add_argument("--kv", choices=("paged", "dense"), default=None,
+                    help="KV layout (default: paged for decoder LMs; "
+                         "dense is the ablation)")
+    ap.add_argument("--prefill", choices=("oneshot", "chunked"),
+                    default="oneshot",
+                    help="admission prefill: whole-bucket, or chunks "
+                         "interleaved with decode")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="paged pool size (default: dense-equivalent)")
+    ap.add_argument("--dup-rate", type=float, default=0.0,
+                    help="fraction of repeated prompts (prefix-cache hits)")
     ap.add_argument("--via-pilots", action="store_true")
     args = ap.parse_args()
 
@@ -121,7 +144,10 @@ def main():
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     stats = serve_direct(cfg, args.requests, args.slots or 4,
                          args.max_len or 128,
-                         admission="wave" if args.wave else "continuous")
+                         admission="wave" if args.wave else "continuous",
+                         kv=args.kv, prefill=args.prefill,
+                         num_blocks=args.num_blocks,
+                         dup_rate=args.dup_rate)
     print(json.dumps(stats, indent=1))
 
 

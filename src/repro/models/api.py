@@ -46,6 +46,11 @@ class ModelBundle:
     loss: Callable[[Any, Any], Any]
     prefill: Callable[[Any, Any], Any]
     decode: Callable[[Any, Any], Any]
+    # (params, state, tokens (1,C), table_row (mb,), slot, q_offset)
+    # -> (logits (1,V), state) — one chunk of an admission prefill into one
+    # row of a PAGED decode state; None for families without a chunked
+    # path (enc-dec).
+    prefill_chunk: Callable[..., Any] | None = None
 
     # ---- shape specs (ShapeDtypeStruct stand-ins; no allocation) ----------
 
@@ -77,23 +82,50 @@ class ModelBundle:
         return jax.eval_shape(lambda: self.init(jax.random.key(0)))
 
 
+def default_num_blocks(batch: int, max_len: int, block_size: int) -> int:
+    """Pool size matching the dense cache's token capacity, plus the
+    reserved scratch block (id 0, the garbage sink for free slots)."""
+    return batch * (max_len // block_size) + 1
+
+
 def init_decode_state(cfg: ArchConfig, batch: int, max_len: int, *,
-                      dtype=jnp.bfloat16):
+                      dtype=jnp.bfloat16, kv: str = "dense",
+                      num_blocks: int | None = None, block_size: int = 16):
     """Concrete zero decode state (also used via eval_shape for specs).
 
     ``pos`` is a per-row (batch,) vector: every batch row decodes at its own
     absolute position, which is what lets the serving engine refill one slot
     mid-flight (continuous batching) instead of wave-stepping the whole
-    block.  Rows that advance in lockstep simply carry equal entries."""
+    block.  Rows that advance in lockstep simply carry equal entries.
+
+    ``kv="paged"`` swaps the dense per-row KV slabs for shared block pools
+    plus a per-row ``block_tables`` (batch, max_len // block_size) map; the
+    table width times the block size equals ``max_len`` so the gathered
+    logical view has the dense shapes (bitwise-equal attend math)."""
     if cfg.is_encdec:
+        if kv == "paged":
+            raise ValueError("paged KV is a decoder-LM path; "
+                             f"{cfg.name} is enc-dec (use kv='dense')")
         cache = encdec_mod.init_encdec_cache(cfg, batch, max_len, dtype)
+    elif kv == "paged":
+        if max_len % block_size:
+            raise ValueError(
+                f"paged KV needs max_len % block_size == 0, got "
+                f"{max_len} % {block_size}")
+        nb = num_blocks or default_num_blocks(batch, max_len, block_size)
+        cache = tf.init_cache_paged(cfg, batch, max_len, nb, block_size,
+                                    dtype)
     else:
         cache = tf.init_cache(cfg, batch, max_len, dtype)
-    return {
+    state = {
         "cache": cache,
         "token": jnp.zeros((batch, 1), jnp.int32),
         "pos": jnp.zeros((batch,), jnp.int32),
     }
+    if kv == "paged":
+        state["block_tables"] = jnp.zeros(
+            (batch, max_len // block_size), jnp.int32)
+    return state
 
 
 def build_model(cfg: ArchConfig, compute=jnp.bfloat16) -> ModelBundle:
@@ -120,14 +152,24 @@ def _build_lm(cfg, compute):
                              compute=compute)
 
     def decode(params, state):
+        bt = state.get("block_tables")
         logits, cache = tf.lm_decode(params, cfg, state["token"],
                                      state["cache"], state["pos"],
-                                     compute=compute)
+                                     block_tables=bt, compute=compute)
         token = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        return logits, {"cache": cache, "token": token,
-                        "pos": state["pos"] + 1}
+        out = {"cache": cache, "token": token, "pos": state["pos"] + 1}
+        if bt is not None:
+            out["block_tables"] = bt
+        return logits, out
 
-    return ModelBundle(cfg, init, loss, prefill, decode)
+    def prefill_chunk(params, state, tokens, table_row, slot, q_offset):
+        logits, cache = tf.lm_prefill_chunk(
+            params, cfg, tokens, state["cache"], table_row, slot, q_offset,
+            compute=compute)
+        return logits, {**state, "cache": cache}
+
+    return ModelBundle(cfg, init, loss, prefill, decode,
+                       prefill_chunk=prefill_chunk)
 
 
 def _build_encdec(cfg, compute):

@@ -353,6 +353,50 @@ def _row_positions(pos, batch: int):
     return jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (batch,))
 
 
+# --------------------------------------------------------------------------
+# Paged KV: block-pool writes and gathers
+# --------------------------------------------------------------------------
+#
+# The paged cache is a shared pool ``(num_blocks, block_size, ...)`` plus a
+# per-row block table ``(B, max_blocks)``: logical position ``p`` of row
+# ``b`` lives at ``pool[table[b, p // bs], p % bs]``.  Block 0 is a
+# reserved scratch block — free slots keep decoding over garbage (cheaper
+# than masking the batched matmuls, same as the dense engine) and their
+# writes land there, never in a live request's blocks.  The XLA fallback
+# gathers each row's logical ``(max_blocks * bs,)`` view, which the
+# allocator sizes to the engine ``max_len`` so the attend math (shapes,
+# masks, reduction order) is bitwise-identical to the dense ring path.
+
+
+def _paged_write_rows(pool, new, block_tables, pos):
+    """Per-row paged write: pool (nb, bs, ...), new (B, 1, ...),
+    block_tables (B, mb), pos (B,).  Row b's new entry lands at
+    ``pool[table[b, (pos_b // bs) % mb], pos_b % bs]``."""
+    bs = pool.shape[1]
+    mb = block_tables.shape[1]
+    pb = jnp.take_along_axis(
+        block_tables, ((pos // bs) % mb)[:, None], axis=1)[:, 0]
+    return pool.at[pb, pos % bs].set(new[:, 0].astype(pool.dtype))
+
+
+def _paged_gather(pool, block_tables):
+    """Materialize each row's logical view: (B, mb * bs, ...).  XLA
+    fallback only — the Pallas kernel gathers via scalar prefetch.  One
+    definition shared with the kernel oracle so the fallback and the
+    oracle can never diverge."""
+    from repro.kernels.paged_attention.ref import gather_kv
+    return gather_kv(pool, block_tables)
+
+
+def _paged_write_chunk(pool, new, table_row, positions):
+    """Write a prefill chunk's rows for ONE batch row: pool (nb, bs, ...),
+    new (C, ...), table_row (mb,), positions (C,) absolute."""
+    bs = pool.shape[1]
+    mb = table_row.shape[0]
+    pb = table_row[(positions // bs) % mb]
+    return pool.at[pb, positions % bs].set(new.astype(pool.dtype))
+
+
 def _ring_write_rows(cache, new, slot):
     """Per-row ring-buffer write: cache (B,T,...), new (B,1,...), slot (B,).
     Each batch row lands at its own `pos mod T` — the vectorized form of the
@@ -363,12 +407,15 @@ def _ring_write_rows(cache, new, slot):
 
 
 def attention_decode(x, p, cfg, cache, pos, *, rope_theta=None,
-                     window=None, compute=jnp.bfloat16):
-    """One decode step.  x: (B,1,D); cache {"k","v"}: (B,T,K,Dh); pos:
-    scalar or (B,) absolute position(s) of the new token — per-row positions
-    are the continuous-batching path.  Returns (out, new_cache)."""
+                     window=None, block_tables=None, compute=jnp.bfloat16):
+    """One decode step.  x: (B,1,D); cache {"k","v"}: (B,T,K,Dh) dense ring
+    or {"kp","vp"}: (nb,bs,K,Dh) paged pool (then ``block_tables`` (B,mb)
+    maps rows to blocks); pos: scalar or (B,) absolute position(s) of the
+    new token — per-row positions are the continuous-batching path.
+    Returns (out, new_cache)."""
     if cfg.mla is not None:
-        return _mla_decode(x, p, cfg, cache, pos, compute=compute)
+        return _mla_decode(x, p, cfg, cache, pos, block_tables=block_tables,
+                           compute=compute)
     theta = rope_theta if rope_theta is not None else cfg.rope_theta
     B = x.shape[0]
     pos = _row_positions(pos, B)
@@ -378,6 +425,21 @@ def attention_decode(x, p, cfg, cache, pos, *, rope_theta=None,
     cos, sin = rope_table(pos[:, None], cfg.head_dim, theta)   # (B,1,dim/2)
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
+    if "kp" in cache:                       # paged block pool
+        k_pool = _paged_write_rows(cache["kp"], k, block_tables, pos)
+        v_pool = _paged_write_rows(cache["vp"], v, block_tables, pos)
+        T = block_tables.shape[1] * k_pool.shape[1]
+        cache_len = jnp.minimum(pos + 1, T)
+        if cfg.attn_impl == "pallas":
+            from repro.kernels.paged_attention.ops import paged_decode_attention
+            out = paged_decode_attention(q[:, 0], k_pool, v_pool,
+                                         block_tables, cache_len)[:, None]
+        else:
+            out = decode_attend(q, _paged_gather(k_pool, block_tables),
+                                _paged_gather(v_pool, block_tables),
+                                cache_len, window=window)
+        out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(compute))
+        return out, {"kp": k_pool, "vp": v_pool}
     T = cache["k"].shape[1]
     # per-row ring-buffer write (rolling for SWA; plain append when T >= max)
     slot = jnp.mod(pos, T)
@@ -407,6 +469,28 @@ def init_kv_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
     return {
         "k": jnp.zeros((batch, T, K, Dh), dtype),
         "v": jnp.zeros((batch, T, K, Dh), dtype),
+    }
+
+
+def init_kv_cache_paged(cfg, batch: int, max_len: int, num_blocks: int,
+                        block_size: int, dtype=jnp.bfloat16):
+    """Per-attention-layer PAGED cache: a shared block pool instead of a
+    dense (batch, max_len) slab.  SWA layers keep the dense rolling ring —
+    a window-sized ring is always fully live, so paging it saves nothing,
+    and keeping it preserves bitwise decode parity with the dense path."""
+    if cfg.sliding_window is not None and cfg.mla is None:
+        return init_kv_cache(cfg, batch, max_len, dtype)
+    if cfg.mla is not None:
+        s = cfg.mla
+        return {
+            "ckvp": jnp.zeros((num_blocks, block_size, s.kv_lora_rank), dtype),
+            "kropep": jnp.zeros((num_blocks, block_size, s.qk_rope_head_dim),
+                                dtype),
+        }
+    K, Dh = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "kp": jnp.zeros((num_blocks, block_size, K, Dh), dtype),
+        "vp": jnp.zeros((num_blocks, block_size, K, Dh), dtype),
     }
 
 
@@ -454,12 +538,14 @@ def _mla_forward(x, p, cfg, *, rope_cos, rope_sin, compute):
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(compute))
 
 
-def _mla_decode(x, p, cfg, cache, pos, *, compute):
+def _mla_decode(x, p, cfg, cache, pos, *, block_tables=None, compute):
     """Absorbed-weight MLA decode over the compressed latent cache.
 
     Caches only (kv_lora + rope_dim) per token — the MLA memory win.  The
     score is computed directly in latent space:
         score = q_nope·W_kv_b^K·ckv + q_rope·k_rope
+    The latent cache pages like any other: {"ckvp","kropep"} pools plus the
+    shared block table replace the dense (B, T) slabs.
     """
     s = cfg.mla
     B = x.shape[0]
@@ -473,10 +559,19 @@ def _mla_decode(x, p, cfg, cache, pos, *, compute):
     ckv_new = rmsnorm(kv_a[..., : s.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
     kr_new = apply_rope(kv_a[:, :, None, s.kv_lora_rank:], cos, sin)[:, :, 0]
 
-    T = cache["ckv"].shape[1]
-    slot = jnp.mod(pos, T)
-    ckv = _ring_write_rows(cache["ckv"], ckv_new, slot)
-    krope = _ring_write_rows(cache["krope"], kr_new, slot)
+    if "ckvp" in cache:                     # paged latent pool
+        ckv_pool = _paged_write_rows(cache["ckvp"], ckv_new, block_tables, pos)
+        kr_pool = _paged_write_rows(cache["kropep"], kr_new, block_tables, pos)
+        ckv = _paged_gather(ckv_pool, block_tables)
+        krope = _paged_gather(kr_pool, block_tables)
+        T = ckv.shape[1]
+        new_cache = {"ckvp": ckv_pool, "kropep": kr_pool}
+    else:
+        T = cache["ckv"].shape[1]
+        slot = jnp.mod(pos, T)
+        ckv = _ring_write_rows(cache["ckv"], ckv_new, slot)
+        krope = _ring_write_rows(cache["krope"], kr_new, slot)
+        new_cache = None                    # filled below (dense returns full)
 
     wkv_b = p["wkv_b"].astype(compute)                           # (r,H,n+v)
     wk = wkv_b[..., : s.qk_nope_head_dim]                        # (r,H,n)
@@ -497,4 +592,156 @@ def _mla_decode(x, p, cfg, cache, pos, *, compute):
                          preferred_element_type=jnp.float32)     # (B,H,r)
     out = jnp.einsum("bhr,rhv->bhv", out_lat.astype(compute), wv)
     out = jnp.einsum("bhv,hvd->bd", out, p["wo"].astype(compute))[:, None]
-    return out, {"ckv": ckv, "krope": krope}
+    return out, (new_cache if new_cache is not None
+                 else {"ckv": ckv, "krope": krope})
+
+
+# ==========================================================================
+# Chunked prefill (paged serve path)
+# ==========================================================================
+#
+# Admission prefill split into fixed-size chunks so running slots never see
+# a stop-the-world prefill: each chunk writes its KV into the admitted
+# row's blocks, then attends against everything cached so far (earlier
+# chunks included) with a causal mask on absolute positions.  One batch
+# row at a time — the other rows' decode state is untouched.
+
+
+def _chunk_attend(q, k, v, q_pos, t_pos=None, window=None):
+    """Causal attention of a prefill chunk against gathered cache KV.
+
+    q: (1,C,H,Dh); k,v: (1,T,K,Dh); q_pos: (C,) absolute query positions;
+    t_pos: (T,) absolute key positions (default 0..T-1; negatives are
+    invalid — SWA pre-window slots).  f32 softmax like `decode_attend`.
+    """
+    B, C, H, Dh = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = 1.0 / np.sqrt(Dh)
+    if t_pos is None:
+        t_pos = jnp.arange(T)
+    qg = q.reshape(B, C, K, G, Dh).astype(jnp.bfloat16)
+    s = jnp.einsum("bckgd,btkd->bkgct", qg, k.astype(jnp.bfloat16),
+                   preferred_element_type=jnp.float32) * scale
+    valid = (t_pos[None, :] <= q_pos[:, None]) & (t_pos[None, :] >= 0)
+    if window is not None:
+        valid &= t_pos[None, :] > (q_pos[:, None] - window)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgct,btkd->bckgd", p.astype(jnp.bfloat16),
+                     v.astype(jnp.bfloat16),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, C, H, Dh).astype(q.dtype)
+
+
+def _ring_write_chunk_row(row, chunk, q_offset):
+    """Write a chunk (C, ...) into one ring row (W, ...) keeping, per ring
+    slot, the LATEST position ≤ q_offset+C-1 (deterministic gather-form of
+    the rolling write; safe for any chunk/window ratio)."""
+    W = row.shape[0]
+    C = chunk.shape[0]
+    r = jnp.arange(W)
+    last = q_offset + C - 1
+    p = last - jnp.mod(last - r, W)              # latest pos ≡ r (mod W)
+    take = p >= q_offset
+    src = jnp.take(chunk, jnp.clip(p - q_offset, 0, C - 1), axis=0)
+    return jnp.where(
+        jnp.reshape(take, (W,) + (1,) * (row.ndim - 1)),
+        src.astype(row.dtype), row)
+
+
+def attention_prefill_chunk(x, p, cfg, cache, table_row, slot, q_offset,
+                            *, window=None, compute=jnp.bfloat16):
+    """One prefill chunk of ONE batch row.  x: (1,C,D); cache: the full
+    engine cache leaf (paged pools, or a dense SWA ring); table_row: (mb,)
+    int32 physical block ids of the admitted row (passed explicitly — the
+    engine installs the row into the shared block table only once the
+    LAST chunk lands, so free-slot garbage writes keep hitting the scratch
+    block mid-admission); slot: scalar int32 batch row; q_offset: scalar
+    int32 absolute position of x[:,0].  Returns (out (1,C,D), new_cache)."""
+    if cfg.mla is not None:
+        return _mla_prefill_chunk(x, p, cfg, cache, table_row, slot,
+                                  q_offset, compute=compute)
+    C = x.shape[1]
+    positions = q_offset + jnp.arange(C)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(compute))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(compute))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(compute))
+    cos, sin = rope_table(positions[None], cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if "kp" in cache:                        # full attention: paged pool
+        k_pool = _paged_write_chunk(cache["kp"], k[0], table_row, positions)
+        v_pool = _paged_write_chunk(cache["vp"], v[0], table_row, positions)
+        kg = _paged_gather(k_pool, table_row[None])      # (1,T,K,Dh)
+        vg = _paged_gather(v_pool, table_row[None])
+        out = _chunk_attend(q, kg, vg, positions)
+        new_cache = {"kp": k_pool, "vp": v_pool}
+    else:                                    # SWA: dense rolling ring
+        W = cache["k"].shape[1]
+        k_row = jax.lax.dynamic_index_in_dim(cache["k"], slot, 0, False)
+        v_row = jax.lax.dynamic_index_in_dim(cache["v"], slot, 0, False)
+        # chronological snapshot of the last W cached positions BEFORE the
+        # chunk writes over them (ring slot of position p is p mod W)
+        p_prev = q_offset - W + jnp.arange(W)
+        k_prev = jnp.take(k_row, jnp.mod(p_prev, W), axis=0)
+        v_prev = jnp.take(v_row, jnp.mod(p_prev, W), axis=0)
+        k_all = jnp.concatenate([k_prev[None], k], axis=1)   # (1,W+C,K,Dh)
+        v_all = jnp.concatenate([v_prev[None], v], axis=1)
+        t_pos = jnp.concatenate([p_prev, positions])
+        out = _chunk_attend(q, k_all, v_all, positions, t_pos=t_pos,
+                            window=window)
+        new_k = _ring_write_chunk_row(k_row, k[0], q_offset)
+        new_v = _ring_write_chunk_row(v_row, v[0], q_offset)
+        new_cache = {
+            "k": jax.lax.dynamic_update_index_in_dim(
+                cache["k"], new_k.astype(cache["k"].dtype), slot, 0),
+            "v": jax.lax.dynamic_update_index_in_dim(
+                cache["v"], new_v.astype(cache["v"].dtype), slot, 0),
+        }
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(compute))
+    return out, new_cache
+
+
+def _mla_prefill_chunk(x, p, cfg, cache, table_row, slot, q_offset, *,
+                       compute):
+    """Chunked MLA prefill via the absorbed-weight latent score (same math
+    as `_mla_decode`, vectorized over the chunk's C query positions)."""
+    s = cfg.mla
+    B, C, _ = x.shape
+    positions = q_offset + jnp.arange(C)
+    q_nope, q_rope = _mla_project_q(x, p, cfg, compute)      # (1,C,H,*)
+    cos, sin = rope_table(positions[None], s.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(compute))
+    ckv_new = rmsnorm(kv_a[..., : s.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    kr_new = apply_rope(kv_a[:, :, None, s.kv_lora_rank:], cos, sin)[:, :, 0]
+
+    ckv_pool = _paged_write_chunk(cache["ckvp"], ckv_new[0], table_row,
+                                  positions)
+    kr_pool = _paged_write_chunk(cache["kropep"], kr_new[0], table_row,
+                                 positions)
+    ckv = _paged_gather(ckv_pool, table_row[None])           # (1,T,r)
+    krope = _paged_gather(kr_pool, table_row[None])
+    T = ckv.shape[1]
+
+    wkv_b = p["wkv_b"].astype(compute)                       # (r,H,n+v)
+    wk = wkv_b[..., : s.qk_nope_head_dim]
+    wv = wkv_b[..., s.qk_nope_head_dim:]
+    q_lat = jnp.einsum("bchn,rhn->bchr", q_nope, wk)
+    scale = 1.0 / np.sqrt(s.qk_head_dim)
+    scores = (
+        jnp.einsum("bchr,btr->bhct", q_lat, ckv.astype(compute),
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bchk,btk->bhct", q_rope, krope.astype(compute),
+                     preferred_element_type=jnp.float32)
+    ) * scale
+    valid = jnp.arange(T)[None, :] <= positions[:, None]     # (C,T)
+    scores = jnp.where(valid[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhct,btr->bchr", probs.astype(compute),
+                         ckv.astype(compute),
+                         preferred_element_type=jnp.float32)
+    out = jnp.einsum("bchr,rhv->bchv", out_lat.astype(compute), wv)
+    out = jnp.einsum("bchv,hvd->bcd", out, p["wo"].astype(compute))
+    return out, {"ckvp": ckv_pool, "kropep": kr_pool}

@@ -191,6 +191,26 @@ def init_ssm_cache(cfg, batch: int, dtype=jnp.bfloat16):
     }
 
 
+def ssm_prefill_chunk_row(x, p, cfg, cache, slot, compute=jnp.bfloat16):
+    """Chunked-prefill step for ONE batch row of an SSM layer: scan the
+    chunk's tokens through `ssm_decode` starting from row `slot`'s cached
+    state (zeroed by the engine before the first chunk), then write the
+    row state back.  x: (1,C,D); cache: full-batch {conv, ssd}.
+    Returns (out (1,C,D), new_cache)."""
+    row = jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, slot, 0, True), cache)
+
+    def body(c, xt):
+        out, c2 = ssm_decode(xt[None, None, :], p, cfg, c, compute=compute)
+        return c2, out[0, 0]
+
+    row_new, outs = jax.lax.scan(body, row, x[0])
+    new_cache = jax.tree.map(
+        lambda full, r: jax.lax.dynamic_update_slice_in_dim(full, r, slot, 0),
+        cache, row_new)
+    return outs[None], new_cache
+
+
 def ssm_decode(x, p, cfg, cache, compute=jnp.bfloat16):
     """One token.  x: (B,1,D) -> (out (B,1,D), new cache)."""
     s, d_inner, nheads, conv_dim = _dims(cfg)

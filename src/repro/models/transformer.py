@@ -208,6 +208,28 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
     return [one(s) for s in slots]
 
 
+def init_cache_paged(cfg, batch: int, max_len: int, num_blocks: int,
+                     block_size: int, dtype=jnp.bfloat16):
+    """Paged variant of `init_cache`: attention layers allocate a shared
+    block pool (n_groups, num_blocks, block_size, ...) instead of a dense
+    (n_groups, batch, max_len, ...) slab; SSM state and SWA rings stay
+    per-row (they are O(1) / always-live respectively)."""
+    period = group_period(cfg)
+    n_groups = cfg.num_layers // period
+    slots = layer_slots(cfg)
+
+    def one(slot):
+        if slot["mixer"] == "attn":
+            c = attn.init_kv_cache_paged(cfg, batch, max_len, num_blocks,
+                                         block_size, dtype)
+        else:
+            c = ssm_mod.init_ssm_cache(cfg, batch, dtype)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_groups,) + a.shape), c)
+
+    return [one(s) for s in slots]
+
+
 def _slot_prefill(x, p, cfg, slot, rope, old_cache, compute):
     """One layer over the full sequence, also producing its decode cache."""
     h = apply_norm(x, p["mixer_norm"], cfg)
@@ -255,10 +277,13 @@ def lm_prefill(params, cfg, tokens, cache, *, extra_embeds=None,
     return logits, new_cache
 
 
-def lm_decode(params, cfg, token, cache, pos, *, compute=jnp.bfloat16):
+def lm_decode(params, cfg, token, cache, pos, *, block_tables=None,
+              compute=jnp.bfloat16):
     """One decode step.  token: (B,1) int32; pos: scalar or (B,) int32
     absolute position(s) of the new token — per-row positions are the
-    continuous-batching serve path.  Returns (logits (B,1,V), new cache)."""
+    continuous-batching serve path.  ``block_tables`` (B, mb) routes paged
+    cache leaves; one table serves every layer (all pools share physical
+    block ids).  Returns (logits (B,1,V), new cache)."""
     slots = layer_slots(cfg)
     x = embed_lookup(token, params["embed"], compute)
 
@@ -272,7 +297,8 @@ def lm_decode(params, cfg, token, cache, pos, *, compute=jnp.bfloat16):
             if slot["mixer"] == "attn":
                 h, nc = attn.attention_decode(
                     h, p["mixer"], cfg, gcache[i], pos,
-                    window=cfg.sliding_window, compute=compute)
+                    window=cfg.sliding_window, block_tables=block_tables,
+                    compute=compute)
             else:
                 h, nc = ssm_mod.ssm_decode(h, p["mixer"], cfg, gcache[i],
                                            compute=compute)
@@ -291,3 +317,46 @@ def lm_decode(params, cfg, token, cache, pos, *, compute=jnp.bfloat16):
     x = apply_norm(x, params["final_norm"], cfg)
     logits = lm_logits(x, head_matrix(params, cfg), cfg.logit_softcap)
     return logits, new_cache
+
+
+def lm_prefill_chunk(params, cfg, tokens, cache, table_row, slot,
+                     q_offset, *, compute=jnp.bfloat16):
+    """One CHUNK of an admission prefill, into ONE batch row of the shared
+    (paged) decode cache.  tokens: (1,C) int32; table_row: (mb,) int32 the
+    admitted row's physical block ids; slot: scalar int32 batch row;
+    q_offset: scalar int32 absolute position of tokens[:,0].  Only row
+    `slot`'s state (its blocks / ring row / ssm row) is written — the
+    other rows keep decoding bit-identically in between chunks.  Returns
+    (last-position logits (1,V), new cache)."""
+    slots = layer_slots(cfg)
+    x = embed_lookup(tokens, params["embed"], compute)
+
+    def group_body(x, inp):
+        gparams, gcache = inp
+        x = constrain(x, "b..")
+        new_gcache = []
+        for i, slot_s in enumerate(slots):
+            p = gparams[i]
+            h = apply_norm(x, p["mixer_norm"], cfg)
+            if slot_s["mixer"] == "attn":
+                h, nc = attn.attention_prefill_chunk(
+                    h, p["mixer"], cfg, gcache[i], table_row, slot,
+                    q_offset, window=cfg.sliding_window, compute=compute)
+            else:
+                h, nc = ssm_mod.ssm_prefill_chunk_row(
+                    h, p["mixer"], cfg, gcache[i], slot, compute=compute)
+            new_gcache.append(nc)
+            x = x + h
+            if slot_s["ffn"] != "none":
+                h = apply_norm(x, p["ffn_norm"], cfg)
+                if slot_s["ffn"] == "dense":
+                    h = apply_mlp(h, p["ffn"], cfg, compute)
+                else:
+                    h, _ = moe_mod.apply_moe_dense(h, p["ffn"], cfg, compute)
+                x = x + h
+        return x, new_gcache
+
+    x, new_cache = jax.lax.scan(group_body, x, (params["layers"], cache))
+    x = apply_norm(x, params["final_norm"], cfg)
+    logits = lm_logits(x[:, -1:], head_matrix(params, cfg), cfg.logit_softcap)
+    return logits[:, 0], new_cache

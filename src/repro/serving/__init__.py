@@ -1,1 +1,2 @@
+from repro.serving.blockpool import BlockAllocator, PrefixCache  # noqa: F401
 from repro.serving.engine import Request, ServeEngine  # noqa: F401

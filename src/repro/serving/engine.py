@@ -1,40 +1,66 @@
-"""Batched serving engine: continuous batching over static slots.
+"""Batched serving engine: continuous batching over a PAGED KV cache.
 
-The engine owns a fixed (slots, max_len) KV-cache block compiled ONCE into
-a single decode executable; admission never recompiles.  ``pos`` is a
-per-slot ``(slots,)`` vector threaded through the whole decode path
-(models/api.py -> attention per-row ring writes and ragged KV lengths), so
-every slot decodes at its own absolute position.  A slot whose request
-finishes is refilled IMMEDIATELY: the next queued request is prefilled into
-just that batch row (`_install_slot`) while the other slots keep decoding —
-no wave barrier, no decode-state reallocation, no idle slots while work is
-queued.
+The engine owns a device-resident block pool per attention layer —
+``(num_blocks, block_size, heads, dh)`` — plus a per-slot block table
+``(slots, max_len // block_size)`` mapping logical position ``p`` of slot
+``s`` to ``pool[table[s, p // bs], p % bs]``.  A host-side
+:class:`~repro.serving.blockpool.BlockAllocator` (free list + refcounts)
+hands out physical blocks at ADMISSION granularity: a request maps
+exactly the blocks its prompt bucket + token budget can reach (not the
+engine-wide ``max_len`` row a dense slab burns), and eviction returns
+them all.  Allocating the whole row up front keeps the decode loop free
+of host→device table maintenance — the block table is written once per
+admission.  ``kv="dense"`` keeps the old (slots, max_len) slab as an
+ablation — paged decode is bitwise-equal to it (same shapes, same masks,
+same reduction order), which the CI smoke asserts.
 
-Per-slot ``pos`` invariants:
+On top of paging:
+
+* **prefix reuse** — admission hashes the padded prompt per full block
+  (chain hash, so a hit guarantees bit-identical KV); matching leading
+  blocks are mapped into the slot's table copy-free with a refcount bump.
+  One-shot admission still recomputes the whole prefill (reuse saves pool
+  MEMORY); chunked admission additionally starts at the hit frontier and
+  skips the shared blocks' compute.
+  Shared blocks are copy-on-write safe by construction: only FULL blocks
+  strictly below the write frontier are shared and nothing ever writes
+  below the frontier, so the "copy" branch of COW is unreachable.
+* **chunked prefill** (``prefill="chunked"``) — admission prefill is
+  split into fixed-size chunks, at most ONE of which runs per engine
+  tick, interleaved with the running slots' decode step: no decode step
+  is ever delayed by more than one chunk (the stop-the-world admission
+  of ``prefill="oneshot"`` is the ablation).  Mid-admission, the slot's
+  device-side table row still points at the scratch block — the chunk
+  executable carries the real row as an argument — so free-slot garbage
+  writes cannot corrupt the half-prefilled request.
+
+Per-slot ``pos`` invariants (unchanged from the dense engine):
 
 * after admission into slot ``s`` with prompt bucket ``plen``,
-  ``pos[s] == plen`` and cache rows ``0..plen-1`` of row ``s`` hold the
+  ``pos[s] == plen`` and logical rows ``0..plen-1`` hold the
   (left-padded) prompt KV;
 * each decode step writes row ``s``'s KV at ``pos[s]`` and advances
-  ``pos[s] += 1`` — rows never interact, so admitting a request mid-decode
-  leaves every other slot's token stream bitwise identical to a solo run;
-* a slot is evicted when ``pos[s]`` reaches ``max_len`` (its cache row is
-  full) or its token budget is spent — both checked ON DEVICE;
-* free slots keep stepping over garbage in their own row (cheaper than
-  masking the batched matmuls); admission overwrites the row wholesale.
+  ``pos[s] += 1`` — rows never interact, so admitting a request
+  mid-decode leaves every other slot's token stream bitwise identical
+  to a solo run;
+* a slot is evicted when ``pos[s]`` reaches ``max_len`` or its token
+  budget is spent — both checked ON DEVICE; eviction returns every
+  block the slot owned to the free list (refcount-decrement for shared
+  prefix blocks);
+* free slots keep stepping over garbage (cheaper than masking the
+  batched matmuls); their paged writes land in the reserved scratch
+  block 0, never in a live request's blocks.
 
-One-transfer-per-step rule: the decode loop is device-resident.  A single
-jitted step (donated state) decodes, argmaxes, debits the per-slot token
-budget and computes the done mask on device, returning one packed
-``(2, slots)`` int32 array — tokens and done flags — which is the ONLY
-device→host transfer of the step (``d2h_transfers`` counts them; tests
-assert ``d2h_transfers == steps``).  The wave-era engine pulled ``pos``
-once per live slot plus an argmax round-trip per request.
+One-transfer-per-step rule: the decode loop is device-resident; the
+packed ``(2, slots)`` tokens/done array is the ONLY device→host transfer
+per decode step (``d2h_transfers == steps``, asserted in tests).  Block-
+table maintenance is host→device only.
 
 In the pilot system this engine is a first-class *payload*: ``serve``
 tasks late-bind it onto an already-held slice and drive it from a request
-trace in the startup spec (core/images.py + core/wrapper.py) — the paper's
-multi-payload pilot, applied to inference.
+trace in the startup spec (core/images.py + core/wrapper.py); the serve
+heartbeat telemetry now carries ``kv_memory_utilization`` and
+``prefix_hit_rate`` so pilots report cache pressure upstream.
 """
 
 from __future__ import annotations
@@ -48,6 +74,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.api import build_model, init_decode_state
+from repro.serving.blockpool import BlockAllocator, PrefixCache
 
 
 @dataclasses.dataclass
@@ -65,27 +92,70 @@ class Request:
 @dataclasses.dataclass
 class SlotState:
     rid: int = -1                      # -1 == free
+    active: bool = False               # decoding (False mid-admission)
+
+
+@dataclasses.dataclass
+class _PrefillJob:
+    """A chunked admission in flight: slot is claimed, blocks are mapped,
+    ``off`` tracks the next chunk's absolute start position."""
+    si: int
+    req: Request
+    padded: np.ndarray                 # (plen,) int32 left-padded prompt
+    plen: int
+    off: int                           # == prefix-hit tokens at creation
+    row: list                          # physical block ids (prefix + fresh)
+    keys: list                         # full-block chain-hash keys
 
 
 def admit_length(prompt_len: int, max_len: int) -> int:
     """Round a prompt length up to its power-of-two bucket, rejecting
-    prompts that cannot decode a single token inside the (slots, max_len)
-    cache block.  Raises ValueError instead of silently cropping.
+    prompts that cannot decode a single token inside the engine's KV
+    budget.  Raises ValueError instead of silently cropping.
 
     The bucket is capped at ``max_len - 1``: prefill occupies ``plen``
     positions and decode starts writing KV at ``pos == plen``, so a bucket
     equal to ``max_len`` would leave zero decode room (the first decode
-    write clamps onto the last prompt position and corrupts its cache row).
+    write would clamp onto the last prompt position and corrupt it).
     """
     if prompt_len >= max_len:
         raise ValueError(
-            f"prompt length {prompt_len} does not fit engine max_len "
-            f"{max_len} (needs prompt + >=1 generated token); truncate the "
-            f"prompt or build the engine with a larger max_len")
+            f"prompt length {prompt_len} exceeds the admission cap "
+            f"{max_len - 1} (= max_len {max_len} minus the >=1 KV row "
+            f"decode needs); truncate the prompt to <= {max_len - 1} "
+            f"tokens or build the engine with a larger max_len")
     b = 16
     while b < prompt_len:
         b *= 2
     return min(b, max_len - 1)
+
+
+def admit_buckets(max_len: int) -> list[int]:
+    """Every prompt bucket `admit_length` can produce for this ``max_len``
+    (powers of two below the cap, plus the ``max_len - 1`` cap itself).
+    `ExecutableRegistry.prefetch` stages a jitted prefill trace for each,
+    so no first-request-of-a-bucket ever pays a retrace spike."""
+    out = []
+    b = 16
+    while b < max_len - 1:
+        out.append(b)
+        b *= 2
+    out.append(max_len - 1)
+    return out
+
+
+def prefill_chunk_shapes(max_len: int, block_size: int,
+                         chunk: int) -> list[int]:
+    """Every chunk length chunked admission can produce: chunk boundaries
+    are aligned to absolute multiples of ``chunk``, and a prefix hit can
+    start a job at any block boundary, so the set is {min(chunk - off %
+    chunk, plen - off)} over all buckets and block-aligned offsets.  Small
+    and static — warmable ahead of the first request."""
+    shapes = set()
+    for plen in admit_buckets(max_len):
+        for off in range(0, plen, block_size):
+            shapes.add(min(chunk - off % chunk, plen - off))
+    return sorted(shapes)
 
 
 def make_engine_step(bundle, max_len: int):
@@ -94,7 +164,8 @@ def make_engine_step(bundle, max_len: int):
     array.  Module-level so engines built over the SAME bundle/max_len (a
     serve image's factory) share one jit wrapper — which is what lets
     ``ExecutableRegistry.prefetch`` stage the XLA compile before the
-    payload's first tick."""
+    payload's first tick.  The same wrapper serves dense AND paged states
+    (different pytree structures trace separately)."""
     def step(params, state, active, budget):
         logits, new_state = bundle.decode(params, state)       # argmax inside
         tok = new_state["token"][:, 0]
@@ -107,49 +178,137 @@ def make_engine_step(bundle, max_len: int):
 
 
 class ServeEngine:
-    """Continuous-batching engine.  ``admission="wave"`` restores the old
-    wave-scheduled baseline (refill only when every slot has drained) so
-    benchmarks can quantify the win on identical workloads.
+    """Continuous-batching engine over a paged KV cache.
 
-    ``bundle``/``step_fn``/``prefill_fn`` let a serve image's factory share
-    one model bundle and its jitted step/prefill wrappers across engine
+    * ``kv`` — "paged" (default for decoder LMs) or "dense" (the seed
+      slab layout, kept as the benchmark ablation; forced for enc-dec).
+    * ``prefill`` — "oneshot" (whole-bucket prefill at admission) or
+      "chunked" (``prefill_chunk``-token chunks interleaved with decode).
+    * ``num_blocks`` — pool size; default matches the dense slab's token
+      capacity (benchmarks shrink it to measure effective capacity).
+    * ``prefix_sharing`` — hash-keyed prompt-prefix block reuse; enabled
+      automatically only for architectures whose per-token state lives
+      entirely in paged blocks (no SWA ring rows, no SSM state rows).
+    * ``admission="wave"`` restores wave-scheduled refills (baseline).
+
+    ``bundle``/``step_fn``/``prefill_fn``/``chunk_fn`` let a serve image's
+    factory share one model bundle and its jitted wrappers across engine
     instances (jit caches are per wrapper, so sharing the wrapper is what
     makes a prefetched compile reusable)."""
 
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256,
-                 admission: str = "continuous", bundle=None, step_fn=None,
-                 prefill_fn=None):
+                 admission: str = "continuous", kv: str | None = None,
+                 block_size: int = 16, num_blocks: int | None = None,
+                 prefill: str = "oneshot", prefill_chunk: int = 32,
+                 prefix_sharing: bool = True, bundle=None, step_fn=None,
+                 prefill_fn=None, chunk_fn=None):
         assert admission in ("continuous", "wave"), admission
+        assert prefill in ("oneshot", "chunked"), prefill
+        # an arch only pages if some attention layer's per-token state can
+        # live in blocks: all-SWA models are pure rolling rings and
+        # attention-free models pure SSM state — a pool there would be
+        # phantom memory (bookkeeping, telemetry and admission gating over
+        # bytes that don't exist), so they fall back to the dense layout
+        pages = (not cfg.is_encdec and not cfg.is_attention_free
+                 and (cfg.mla is not None or cfg.sliding_window is None))
+        if kv is None:
+            kv = "paged" if pages else "dense"
+        assert kv in ("paged", "dense"), kv
+        if kv == "paged" and not pages:
+            kv = "dense"
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.admission = admission
+        self.kv = kv
+        self.block_size = block_size
         self.bundle = bundle or build_model(cfg)
-        self.state = init_decode_state(cfg, slots, max_len)   # pos: (slots,)
+        # chunked admission works on both layouts (dense rings append like
+        # a T == max_len rolling window) EXCEPT dense MLA, whose chunk
+        # path only speaks the paged latent pools
+        self.prefill_mode = (
+            prefill if (self.bundle.prefill_chunk is not None
+                        and (kv == "paged" or cfg.mla is None))
+            else "oneshot")
+        self.prefill_chunk = prefill_chunk
+
+        if kv == "paged":
+            assert prefill_chunk % block_size == 0, (prefill_chunk,
+                                                     block_size)
+            nb = num_blocks or (slots * (max_len // block_size) + 1)
+            self.allocator = BlockAllocator(nb, block_size)
+            # prefix reuse needs ALL per-token state inside paged blocks:
+            # SWA ring rows and SSM state rows are per-slot and cannot be
+            # remapped by block id, so those archs admit without sharing
+            prefix_ok = (prefix_sharing and cfg.sliding_window is None
+                         and cfg.ssm is None)
+            self.prefix = PrefixCache(self.allocator) if prefix_ok else None
+            self.state = init_decode_state(
+                cfg, slots, max_len, kv="paged", num_blocks=nb,
+                block_size=block_size)
+            self.max_blocks_per_slot = max_len // block_size
+        else:
+            self.allocator = None
+            self.prefix = None
+            self.state = init_decode_state(cfg, slots, max_len)
+            self.max_blocks_per_slot = 0
         self.budget = jnp.zeros((slots,), jnp.int32)          # device-side
         self.active = jnp.zeros((slots,), bool)               # device-side
         self.slot_meta = [SlotState() for _ in range(slots)]
         self.queue: deque[Request] = deque()
+        self._jobs: deque[_PrefillJob] = deque()
         self.done: dict[int, Request] = {}
         self._live: dict[int, Request] = {}
+        # host mirrors (paged bookkeeping + cache-pressure stats)
+        self._host_pos = [0] * slots
+        self._slot_blocks: list[list[int]] = [[] for _ in range(slots)]
+        self._tick_times: list[float] = []     # wall time of decode ticks
         self.steps = 0
         self.idle_slot_steps = 0       # slots with no request during a step
         self.d2h_transfers = 0         # must equal `steps` (one per step)
+        self.prefill_chunks = 0
+        self.blocked_admissions = 0    # admissions deferred on pool pressure
+        self.prompt_tokens_total = 0
+        self.prefix_hit_tokens = 0
+        self._kv_util_sum = 0.0
+        self.kv_peak_live_tokens = 0
 
         # one compiled decode step for the whole engine lifetime; engine
         # state (decode state + budget + active) is donated every step
         self._step_fn = step_fn or make_engine_step(self.bundle, max_len)
         # one jitted prefill wrapper; jax re-traces per prompt bucket shape
         self._prefill = prefill_fn or jax.jit(self.bundle.prefill)
+        self._chunk_fn = chunk_fn or (
+            jax.jit(self.bundle.prefill_chunk, donate_argnums=1)
+            if self.bundle.prefill_chunk is not None else None)
 
     # ------------------------------------------------------------------
 
+    @property
+    def kv_capacity_tokens(self) -> int:
+        """Total KV token capacity the engine's cache memory can hold."""
+        if self.kv == "paged":
+            return self.allocator.capacity_tokens
+        return self.slots * self.max_len
+
     def submit(self, req: Request):
-        """Admit a request.  A prompt that cannot fit the engine's KV block
-        (prompt + at least one generated token within ``max_len``) is
-        rejected here, explicitly — never silently cropped."""
-        admit_length(len(req.prompt), self.max_len)
+        """Admit a request.  A prompt that cannot fit the engine's KV
+        budget (prompt + at least one generated token within ``max_len``,
+        and — paged — a worst-case block reach within the pool) is
+        rejected here, explicitly — never silently cropped or deferred
+        forever."""
+        plen = admit_length(len(req.prompt), self.max_len)
+        if self.kv == "paged":
+            end_max = min(plen + req.max_new_tokens, self.max_len)
+            need = -(-end_max // self.block_size)
+            if need > self.allocator.capacity_blocks:
+                raise ValueError(
+                    f"request needs {need} KV blocks (prompt bucket {plen} "
+                    f"+ budget {req.max_new_tokens}) but the pool holds "
+                    f"{self.allocator.capacity_blocks}; admission could "
+                    f"never succeed — shrink the request or grow "
+                    f"num_blocks")
         self.queue.append(req)
 
     def _bucket(self, n: int) -> int:
@@ -162,7 +321,8 @@ class ServeEngine:
     def _admit(self):
         """Fill free slots from the queue.  Continuous mode refills any free
         slot immediately; wave mode (baseline) only refills once ALL slots
-        have drained."""
+        have drained.  Paged admission can defer on pool pressure (the
+        request stays queued; `blocked_admissions` counts the stall)."""
         free = [i for i, m in enumerate(self.slot_meta) if m.rid == -1]
         if not free or not self.queue:
             return
@@ -171,61 +331,289 @@ class ServeEngine:
         for si in free:
             if not self.queue:
                 break
-            self._admit_into(si, self.queue.popleft())
+            if not self._admit_into(si, self.queue[0]):
+                break                              # pool pressure: retry later
+            self.queue.popleft()
 
-    def _admit_into(self, si: int, req: Request):
-        """Prefill one request into batch row `si` while the other slots'
-        decode state stays untouched."""
+    def _admit_into(self, si: int, req: Request) -> bool:
+        """Begin admission of one request into batch row `si` while the
+        other slots' decode state stays untouched.  Returns False when the
+        paged pool cannot hold the request yet."""
         plen = self._bucket(len(req.prompt))
-        toks = np.zeros((1, plen), np.int32)
-        toks[0, -len(req.prompt):] = req.prompt               # left-pad
+        bs = self.block_size
+        padded = np.zeros((plen,), np.int32)
+        padded[-len(req.prompt):] = req.prompt                # left-pad
+        row, keys, hit, shareable = [], [], [], 0
+        if self.kv == "paged":
+            end_max = min(plen + req.max_new_tokens, self.max_len)
+            total_blocks = -(-end_max // bs)
+            n_full = plen // bs
+            # cap sharing below the last prompt position so admission
+            # always has >= 1 chunk/prefill position to produce logits
+            shareable = min(n_full, (plen - 1) // bs)
+            keys = (PrefixCache.block_keys(padded, bs, n_full)
+                    if self.prefix is not None else [])
+            hit = self.prefix.match(keys[:shareable]) if self.prefix else []
+            need = total_blocks - len(hit)
+            if self.allocator.available_blocks < need:
+                if self.prefix is not None:
+                    self.prefix.evict_unreferenced(
+                        need - self.allocator.available_blocks)
+                if self.allocator.available_blocks < need:
+                    for bid in hit:                # undo the match refs
+                        self.allocator.free(bid)
+                    self.blocked_admissions += 1
+                    return False
+            # map the request's WHOLE reach (prompt bucket + budget,
+            # capped at max_len) now: the block table is then written once
+            # per admission and the decode loop never touches it
+            row = hit + [self.allocator.alloc() for _ in range(need)]
+            self._slot_blocks[si] = list(row)
+            self.prefix_hit_tokens += len(hit) * bs
+        nhit = len(hit)
+        self.prompt_tokens_total += plen
+        self.slot_meta[si].rid = req.rid
+        self._live[req.rid] = req
+
+        if self.prefill_mode == "chunked":
+            self._zero_ssm_rows(si)
+            self._jobs.append(_PrefillJob(
+                si=si, req=req, padded=padded, plen=plen,
+                off=nhit * bs, row=row, keys=keys))
+            return True
+
         logits, cache = self._prefill(
-            self.params, {"tokens": jnp.asarray(toks)})
+            self.params, {"tokens": jnp.asarray(padded[None])})
         nxt = int(jnp.argmax(logits[0, -1]))                  # admission-time
-        self.state = _install_slot(self.state, cache, si, plen, nxt)
+        if self.kv == "paged":
+            self.state = _install_slot_paged(
+                self.state, cache, si, plen, nxt, row, nhit, bs)
+            self._publish_prefix(keys, row, nhit, shareable)
+        else:
+            self.state = _install_slot(self.state, cache, si, plen, nxt)
+        self._finish_admission(si, req, plen, nxt)
+        return True
+
+    def _finish_admission(self, si: int, req: Request, plen: int, nxt: int):
+        m = self.slot_meta[si]
+        m.rid = req.rid
+        m.active = True
         self.active = self.active.at[si].set(True)
         self.budget = self.budget.at[si].set(req.max_new_tokens)
-        self.slot_meta[si].rid = req.rid
+        self._host_pos[si] = plen
         req.tokens.append(nxt)
         req.first_token_s = time.monotonic() - req.submitted
         self._live[req.rid] = req
 
+    def _publish_prefix(self, keys, row, nhit: int, shareable: int):
+        """Register freshly-filled full blocks, capped at the MATCHABLE
+        range: the block holding the last prompt position can never be
+        returned by `match` (admission must keep >= 1 position to compute
+        logits), so publishing it would only pin pool capacity."""
+        if self.prefix is None:
+            return
+        for j in range(nhit, shareable):
+            self.prefix.publish(keys[j], row[j])
+
+    def _zero_ssm_rows(self, si: int):
+        """Chunked prefill scans SSM layers from the row's cached state, so
+        a new request must start that row from zeros (paged/ring attention
+        rows need no reset: their stale entries are masked or overwritten)."""
+        if self.cfg.ssm is None:
+            return
+        new_cache = []
+        for leaf in self.state["cache"]:
+            if "conv" in leaf:
+                leaf = {k: v.at[:, si].set(jnp.zeros_like(v[:, si]))
+                        for k, v in leaf.items()}
+            new_cache.append(leaf)
+        self.state = {**self.state, "cache": new_cache}
+
+    # ------------------------------------------------------------------
+    # chunked prefill: at most ONE chunk per engine tick
     # ------------------------------------------------------------------
 
+    def _prefill_tick(self):
+        if not self._jobs:
+            return
+        job = self._jobs[0]
+        # chunk boundaries are aligned to absolute multiples of the chunk
+        # size, so the set of chunk shapes stays closed under prefix-hit
+        # offsets (see `prefill_chunk_shapes`) — no mid-serve retraces
+        C = min(self.prefill_chunk - job.off % self.prefill_chunk,
+                job.plen - job.off)
+        toks = jnp.asarray(job.padded[None, job.off:job.off + C])
+        # dense chunked admission (all-SWA / SSM archs) has no blocks: the
+        # table-row arg is a 1-wide dummy no cache leaf ever indexes
+        row_arr = np.zeros((max(self.max_blocks_per_slot, 1),), np.int32)
+        row_arr[:len(job.row)] = job.row
+        logits, self.state = self._chunk_fn(
+            self.params, self.state, toks, jnp.asarray(row_arr),
+            jnp.int32(job.si), jnp.int32(job.off))
+        self.prefill_chunks += 1
+        job.off += C
+        if job.off < job.plen:
+            return
+        # last chunk landed: install the block-table row on device and
+        # flip the slot to decoding
+        nxt = int(jnp.argmax(logits[0]))
+        if self.kv == "paged":
+            self.state["block_tables"] = (
+                self.state["block_tables"].at[job.si].set(
+                    jnp.asarray(row_arr)))
+        self.state["token"] = self.state["token"].at[job.si, 0].set(nxt)
+        self.state["pos"] = self.state["pos"].at[job.si].set(job.plen)
+        self._publish_prefix(
+            job.keys, job.row, 0,
+            min(job.plen // self.block_size,
+                (job.plen - 1) // self.block_size))
+        self._finish_admission(job.si, job.req, job.plen, nxt)
+        self._jobs.popleft()
+
+    # ------------------------------------------------------------------
+
+    _PAGED_KEYS = ("kp", "vp", "ckvp", "kropep")
+
+    def _guard_rows(self):
+        """Snapshot the PER-ROW (non-paged) cache leaves — SSM state rows,
+        SWA ring rows — of every mid-admission slot.  The scratch block
+        only protects paged pools from free-slot garbage writes; the
+        batched decode step advances per-row state unconditionally, which
+        would corrupt a half-prefilled request between chunks.  Restored
+        right after the step (`_restore_rows`)."""
+        sis = sorted({job.si for job in self._jobs})
+        if not sis:
+            return None
+        idx = jnp.asarray(sis)
+        snap = [(li, k, v[:, idx])
+                for li, leaf in enumerate(self.state["cache"])
+                for k, v in leaf.items() if k not in self._PAGED_KEYS]
+        return (idx, snap) if snap else None
+
+    def _restore_rows(self, guard):
+        idx, snap = guard
+        cache = [dict(leaf) for leaf in self.state["cache"]]
+        for li, k, v in snap:
+            cache[li][k] = cache[li][k].at[:, idx].set(v)
+        self.state = {**self.state, "cache": cache}
+
+    def _evict_slot(self, si: int):
+        m = self.slot_meta[si]
+        if self.kv == "paged":
+            for bid in self._slot_blocks[si]:
+                self.allocator.free(bid)
+            self._slot_blocks[si] = []
+            self.state["block_tables"] = (
+                self.state["block_tables"].at[si].set(0))
+        m.rid = -1
+        m.active = False
+        self._host_pos[si] = 0
+
     def step(self) -> int:
-        """One engine iteration: admit into free slots, then one batched
-        decode step.  Returns the number of live slots decoded (0 when the
-        engine is idle — an idle tick is not a decode step)."""
+        """One engine iteration: admit into free slots, advance at most one
+        prefill chunk, then one batched decode step.  Returns the number of
+        live slots decoded (0 when no slot is decoding — an idle or
+        admission-only tick is not a decode step)."""
+        t_tick = time.monotonic()
         self._admit()
-        n_live = sum(1 for m in self.slot_meta if m.rid != -1)
-        if n_live == 0:
+        self._prefill_tick()
+        actives = [si for si, m in enumerate(self.slot_meta) if m.active]
+        if not actives:
             return 0
+        guard = self._guard_rows() if self._jobs else None
         packed, self.state, self.active, self.budget = self._step_fn(
             self.params, self.state, self.active, self.budget)
+        if guard is not None:
+            self._restore_rows(guard)
         self.steps += 1
-        self.idle_slot_steps += self.slots - n_live
+        self.idle_slot_steps += self.slots - len(actives)
+        for si in actives:
+            self._host_pos[si] += 1
         out = jax.device_get(packed)       # THE device→host transfer
         self.d2h_transfers += 1
+        self._sample_kv_pressure()
         toks, dones = out[0], out[1]
         now = time.monotonic()
-        for si, meta in enumerate(self.slot_meta):
-            if meta.rid == -1:
-                continue
+        for si in actives:
+            meta = self.slot_meta[si]
             req = self._live[meta.rid]
             req.tokens.append(int(toks[si]))
             if dones[si]:
                 req.done_s = now - req.submitted
                 self.done[req.rid] = req
                 del self._live[meta.rid]
-                meta.rid = -1
-        return n_live
+                self._evict_slot(si)
+        # the latency every decoding slot experienced this tick — admission
+        # work included, which is exactly what the chunked-prefill
+        # interleave rule bounds (<= one chunk per tick)
+        self._tick_times.append(time.monotonic() - t_tick)
+        return len(actives)
+
+    def warm_admission(self):
+        """Stage every admission executable ahead of the first request:
+        one jitted prefill trace per admit-length bucket, and (chunked
+        mode) one chunk trace per possible chunk shape.  Chunk warming
+        targets an all-scratch block-table row, so its writes land in the
+        garbage block and no live state is disturbed.  Engines built by a
+        serve image's factory share these jit wrappers, so a registry
+        prefetch pays this once for every engine the image ever builds."""
+        assert not self._live and not self._jobs, "warm on an idle engine"
+        for pb in admit_buckets(self.max_len):
+            logits, _ = self._prefill(
+                self.params, {"tokens": jnp.zeros((1, pb), jnp.int32)})
+            jax.block_until_ready(logits)
+        if self.prefill_mode == "chunked" and self._chunk_fn is not None:
+            row = jnp.zeros((max(self.max_blocks_per_slot, 1),), jnp.int32)
+            for C in prefill_chunk_shapes(self.max_len, self.block_size,
+                                          self.prefill_chunk):
+                logits, self.state = self._chunk_fn(
+                    self.params, self.state,
+                    jnp.zeros((1, C), jnp.int32), row,
+                    jnp.int32(0), jnp.int32(0))
+                jax.block_until_ready(logits)
+            if self.cfg.ssm is not None:
+                self._zero_ssm_rows(0)         # undo the warm's row scribble
+
+    def kv_pressure(self) -> dict:
+        """Instantaneous cache-pressure sample for heartbeat telemetry:
+        live/allocated RIGHT NOW (the `_stats` dict reports the mean over
+        decode steps instead), so a pilot monitor sees a late-run pressure
+        spike the moment it happens."""
+        live = sum(self._host_pos[si]
+                   for si, m in enumerate(self.slot_meta) if m.active)
+        if self.kv == "paged":
+            allocated = self.allocator.allocated_blocks * self.block_size
+        else:
+            allocated = self.slots * self.max_len
+        return {
+            "kv": self.kv,
+            "kv_memory_utilization": live / allocated if allocated else 0.0,
+            "kv_live_tokens": live,
+            "kv_peak_live_tokens": self.kv_peak_live_tokens,
+            "kv_capacity_tokens": self.kv_capacity_tokens,
+            "prefix_hit_rate": (self.prefix_hit_tokens
+                                / self.prompt_tokens_total
+                                if self.prompt_tokens_total else 0.0),
+        }
+
+    def _sample_kv_pressure(self):
+        live = sum(self._host_pos[si]
+                   for si, m in enumerate(self.slot_meta) if m.active)
+        if self.kv == "paged":
+            allocated = self.allocator.allocated_blocks * self.block_size
+        else:
+            allocated = self.slots * self.max_len
+        if allocated:
+            self._kv_util_sum += live / allocated
+        self.kv_peak_live_tokens = max(self.kv_peak_live_tokens, live)
 
     # ------------------------------------------------------------------
 
     def run(self, *, max_steps: int = 10_000) -> dict:
         t0 = time.monotonic()
         decoded = 0
-        while (self.queue or self._live) and self.steps < max_steps:
+        while ((self.queue or self._live or self._jobs)
+               and self.steps < max_steps):
             decoded += self.step()
         return self._stats(decoded, time.monotonic() - t0)
 
@@ -247,7 +635,7 @@ class ServeEngine:
                          key=lambda ie: int(ie[1].get("at_step", 0)))
         t0 = time.monotonic()
         decoded, tick, i = 0, 0, 0
-        while i < len(pending) or self.queue or self._live:
+        while i < len(pending) or self.queue or self._live or self._jobs:
             while i < len(pending) and int(pending[i][1].get("at_step", 0)) <= tick:
                 idx, e = pending[i]
                 i += 1
@@ -288,15 +676,43 @@ class ServeEngine:
             "ttft_p99_s": pct(ttfts, 99),
             "tpot_p50_s": pct(tpots, 50),
             "tpot_p99_s": pct(tpots, 99),
+            # inter-token latency: wall time of each decode TICK (admission
+            # work included) — the stall a running slot actually observes;
+            # stop-the-world prefill shows up in the p99
+            "itl_p50_s": pct(self._tick_times, 50),
+            "itl_p99_s": pct(self._tick_times, 99),
+            # cache pressure (live tokens / allocated cache tokens, mean
+            # over decode steps) + prefix-cache effectiveness
+            "kv": self.kv,
+            "kv_memory_utilization": (self._kv_util_sum / self.steps
+                                      if self.steps else 0.0),
+            "kv_peak_live_tokens": self.kv_peak_live_tokens,
+            "kv_capacity_tokens": self.kv_capacity_tokens,
+            "prefix_hit_rate": (self.prefix_hit_tokens
+                                / self.prompt_tokens_total
+                                if self.prompt_tokens_total else 0.0),
+            "prefill_chunks": self.prefill_chunks,
+            "blocked_admissions": self.blocked_admissions,
         }
 
     def reset_metrics(self):
         """Zero the counters/results between benchmark phases (e.g. after a
         jit-warmup run) without touching compiled functions or slot state."""
-        assert not self._live and not self.queue, "engine still has work"
+        assert not self._live and not self.queue and not self._jobs, \
+            "engine still has work"
         self.steps = 0
         self.idle_slot_steps = 0
         self.d2h_transfers = 0
+        self.prefill_chunks = 0
+        self.blocked_admissions = 0
+        self.prompt_tokens_total = 0
+        self.prefix_hit_tokens = 0
+        self._kv_util_sum = 0.0
+        self.kv_peak_live_tokens = 0
+        self._tick_times = []
+        if self.prefix is not None:
+            self.prefix.lookups = 0
+            self.prefix.hits = 0
         self.done.clear()
 
 
@@ -305,20 +721,74 @@ class ServeEngine:
 
 def _install_slot(state, prefill_cache, slot: int, plen: int, next_token: int):
     """Copy one prefilled request's cache rows into batch row `slot` of the
-    engine's shared decode state and reset that row's position to `plen`.
-    All LM cache leaves are stacked (n_groups/L, B, ...), so the batch dim
-    is 1 everywhere."""
-    def merge(dst, src):
-        src_b = jnp.moveaxis(src, 1, 0)[0]           # drop batch (=1)
-        dst_b = jnp.moveaxis(dst, 1, 0)              # (B, groups, ...)
-        dst_b = dst_b.at[slot].set(
-            _fit_rows(src_b, dst_b.shape[1:]).astype(dst.dtype))
-        return jnp.moveaxis(dst_b, 0, 1)
-
-    new_cache = jax.tree.map(merge, state["cache"], prefill_cache)
+    engine's shared DENSE decode state and reset that row's position to
+    `plen`.  All LM cache leaves are stacked (n_groups/L, B, ...), so the
+    batch dim is 1 everywhere."""
+    new_cache = jax.tree.map(
+        lambda dst, src: _merge_row(dst, src, slot),
+        state["cache"], prefill_cache)
     token = state["token"].at[slot, 0].set(next_token)
     pos = state["pos"].at[slot].set(plen)
     return {"cache": new_cache, "token": token, "pos": pos}
+
+
+def _merge_row(dst, src, slot):
+    """Write prefill leaf `src` (groups, 1, T', ...) into row `slot` of the
+    engine leaf `dst` (groups, B, T, ...)."""
+    src_b = jnp.moveaxis(src, 1, 0)[0]           # drop batch (=1)
+    dst_b = jnp.moveaxis(dst, 1, 0)              # (B, groups, ...)
+    dst_b = dst_b.at[slot].set(
+        _fit_rows(src_b, dst_b.shape[1:]).astype(dst.dtype))
+    return jnp.moveaxis(dst_b, 0, 1)
+
+
+def _install_slot_paged(state, prefill_cache, slot: int, plen: int,
+                        next_token: int, row: list, nhit: int,
+                        block_size: int):
+    """Install a one-shot prefill into the PAGED decode state: scatter the
+    dense prefill rows into the slot's freshly-allocated blocks (prefix-hit
+    blocks already hold bit-identical content and are NOT written — that is
+    the copy-free part of prefix reuse), write per-row leaves (SWA rings,
+    SSM state) into batch row `slot`, and map the block-table row."""
+    paged_keys = {"kp": "k", "vp": "v", "ckvp": "ckv", "kropep": "krope"}
+    new_cache = []
+    for st_leaf, pf_leaf in zip(state["cache"], prefill_cache):
+        out = {}
+        for key, val in st_leaf.items():
+            if key in paged_keys:
+                out[key] = _scatter_blocks(val, pf_leaf[paged_keys[key]],
+                                           row, nhit, block_size)
+            else:
+                out[key] = _merge_row(val, pf_leaf[key], slot)
+        new_cache.append(out)
+    mb = state["block_tables"].shape[1]
+    row_arr = np.zeros((mb,), np.int32)
+    row_arr[:len(row)] = row
+    return {
+        "cache": new_cache,
+        "token": state["token"].at[slot, 0].set(next_token),
+        "pos": state["pos"].at[slot].set(plen),
+        "block_tables": state["block_tables"].at[slot].set(
+            jnp.asarray(row_arr)),
+    }
+
+
+def _scatter_blocks(pool, src, row: list, nhit: int, block_size: int):
+    """Scatter a dense prefill leaf (groups, 1, T', ...) into pool blocks
+    (groups, nb, bs, ...) `row[nhit:]` (hit blocks are left untouched)."""
+    rows = jnp.moveaxis(src, 1, 0)[0]            # (groups, T', ...)
+    Tp = rows.shape[1]
+    n_pb = -(-Tp // block_size)
+    pad = n_pb * block_size - Tp
+    if pad:
+        spec = [(0, 0)] * rows.ndim
+        spec[1] = (0, pad)
+        rows = jnp.pad(rows, spec)
+    rows = rows.reshape((rows.shape[0], n_pb, block_size) + rows.shape[2:])
+    if nhit >= n_pb:
+        return pool
+    ids = jnp.asarray(np.asarray(row[nhit:n_pb], np.int32))
+    return pool.at[:, ids].set(rows[:, nhit:].astype(pool.dtype))
 
 
 def _fit_rows(src, dst_shape):
