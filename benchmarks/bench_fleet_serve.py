@@ -1,0 +1,156 @@
+"""Fleet-serving benchmark: goodput + tail TTFT under injected pilot death.
+
+One request trace is split into per-request leases in a FleetDispatcher
+pool; N serving pilots pull from it.  Scenarios:
+
+* ``baseline`` — ONE engine with the fleet's aggregate slot count runs the
+  same trace directly (no pool, no pilots): the ceiling a failure-free,
+  dispatch-free deployment reaches.
+* ``f0/f1/f2`` — the fleet with 0, 1 and 2 pilots hard-killed mid-trace
+  (``ClusterSim.fail_node`` on a lease-holding pilot).  A dead pilot's
+  in-flight requests requeue via lease expiry and replay on survivors.
+
+Every scenario must complete 100% of the trace with token streams BITWISE
+equal to the baseline engine's (greedy decode over slot-isolated state is
+deterministic and every server holds identical weights) — the run RAISES on
+a drop or a mismatch, and on the acceptance gate: 1-of-N-pilots death must
+keep p99 TTFT within 3x of the no-failure fleet run.
+
+TTFT here is pool-level: submit-to-first-token, INCLUDING requeue delay
+(the lease TTL a failed request waits out) — the metric the failure story
+actually moves.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import get_smoke_config
+from repro.core.images import ExecutableRegistry
+from repro.launch.serve import make_trace, serve_fleet
+from repro.models.api import build_model
+from repro.serving.engine import Request, ServeEngine
+
+ARCH = "smollm-360m"
+MAX_LEN = 64
+SLOTS_PER_PILOT = 2
+LEASE_TTL = 0.4
+
+
+def _baseline(cfg, trace, slots: int) -> dict:
+    """One pre-warmed engine, the whole trace, no pilots in the way."""
+    import numpy as np
+
+    params = build_model(cfg).init(jax.random.key(0))
+    eng = ServeEngine(cfg, params, slots=slots, max_len=MAX_LEN)
+    eng.warm_admission()
+    eng.warm_install()
+    stats = eng.run_trace([{**e, "at_step": 0} for e in trace])
+    stats["tokens"] = {rid: list(np.asarray(r.tokens).tolist())
+                      for rid, r in eng.done.items()}
+    return stats
+
+
+def _check(label: str, n_requests: int, out: dict, base_tokens: dict):
+    if out["completed"] != n_requests:
+        raise RuntimeError(
+            f"fleet run {label} completed {out['completed']}/{n_requests} "
+            f"requests — requeue-on-failure lost work")
+    for rid, toks in out["results"].items():
+        if list(toks) != list(base_tokens[rid]):
+            raise RuntimeError(
+                f"fleet run {label}: rid {rid} token stream diverged from "
+                f"the single-engine baseline (replay is not deterministic?)")
+
+
+def run(n_requests: int = 24, n_pilots: int = 4) -> list[tuple[str, float, str]]:
+    cfg = get_smoke_config(ARCH)
+    trace = make_trace(cfg.vocab_size, n_requests, max_len=MAX_LEN, seed=0)
+    base = _baseline(cfg, trace, n_pilots * SLOTS_PER_PILOT)
+
+    registry = ExecutableRegistry()       # shared: scenarios reuse compiles
+    outs = {}
+    for f in (0, 1, 2):
+        outs[f] = serve_fleet(
+            ARCH, n_requests, n_pilots, slots=SLOTS_PER_PILOT,
+            max_len=MAX_LEN, fail_at=4 if f else None, fail_count=f,
+            lease_ttl=LEASE_TTL, registry=registry)
+        _check(f"f{f}", n_requests, outs[f], base["tokens"])
+        if len(outs[f]["failed_pilots"]) != f:
+            raise RuntimeError(
+                f"failure injection f{f} killed "
+                f"{len(outs[f]['failed_pilots'])} pilots, wanted {f}")
+
+    ratio1 = (outs[1]["ttft_p99_s"] / outs[0]["ttft_p99_s"]
+              if outs[0]["ttft_p99_s"] else float("inf"))
+    if ratio1 > 3.0:
+        raise RuntimeError(
+            f"1-of-{n_pilots} pilot death pushed p99 TTFT to {ratio1:.2f}x "
+            f"the no-failure run (acceptance gate: <= 3x)")
+
+    detail = (f"{ARCH}, {n_pilots} pilots x {SLOTS_PER_PILOT} slots, "
+              f"{n_requests} reqs, lease_ttl {LEASE_TTL}s")
+    rows = [
+        ("fleet_baseline_tok_per_s", base["tok_per_s"],
+         "single engine, aggregate slots, no pool"),
+        ("fleet_baseline_ttft_p99_s", base["ttft_p99_s"], "single engine"),
+        ("fleet_token_match", 1.0,
+         "every fleet scenario bitwise == baseline tokens (raises otherwise)"),
+    ]
+    for f in (0, 1, 2):
+        o = outs[f]
+        rows += [
+            (f"fleet_goodput_tok_per_s_f{f}", o["goodput_tok_per_s"],
+             f"{detail}, {f} pilot(s) killed"),
+            (f"fleet_completed_f{f}", float(o["completed"]),
+             f"of {n_requests} (must be all)"),
+            (f"fleet_ttft_p99_s_f{f}", o["ttft_p99_s"],
+             "pool-level TTFT incl. requeue delay"),
+            (f"fleet_replays_f{f}", float(o["replays"]),
+             "re-dispatches beyond first (the failures' price)"),
+        ]
+    rows += [
+        ("fleet_ttft_p99_ratio_f1", ratio1,
+         "1-pilot-death p99 TTFT / no-failure p99 TTFT (gate: <= 3)"),
+        ("fleet_goodput_retained_f1",
+         outs[1]["goodput_tok_per_s"] / outs[0]["goodput_tok_per_s"]
+         if outs[0]["goodput_tok_per_s"] else float("inf"),
+         "goodput after losing 1 of 4 pilots mid-trace"),
+        ("fleet_duplicates_f2", float(outs[2]["duplicates"]),
+         "completions dropped by first-wins (duplicates never double-count)"),
+    ]
+    return rows
+
+
+def run_smoke(n_requests: int = 16, n_pilots: int = 4) -> list[tuple[str, float, str]]:
+    """CI smoke: the headline scenario only — kill 1 of 4 serving pilots
+    mid-trace, demand 100% completion, bitwise-baseline tokens and the
+    <= 3x p99 TTFT gate."""
+    cfg = get_smoke_config(ARCH)
+    trace = make_trace(cfg.vocab_size, n_requests, max_len=MAX_LEN, seed=0)
+    base = _baseline(cfg, trace, n_pilots * SLOTS_PER_PILOT)
+    registry = ExecutableRegistry()
+    o0 = serve_fleet(ARCH, n_requests, n_pilots, slots=SLOTS_PER_PILOT,
+                     max_len=MAX_LEN, lease_ttl=LEASE_TTL, registry=registry)
+    _check("f0", n_requests, o0, base["tokens"])
+    o1 = serve_fleet(ARCH, n_requests, n_pilots, slots=SLOTS_PER_PILOT,
+                     max_len=MAX_LEN, fail_at=3, lease_ttl=LEASE_TTL,
+                     registry=registry)
+    _check("f1", n_requests, o1, base["tokens"])
+    if not o1["failed_pilots"]:
+        raise RuntimeError("failure injection did not kill a pilot")
+    ratio = (o1["ttft_p99_s"] / o0["ttft_p99_s"]
+             if o0["ttft_p99_s"] else float("inf"))
+    if ratio > 3.0:
+        raise RuntimeError(
+            f"p99 TTFT {ratio:.2f}x the no-failure run (gate: <= 3x)")
+    return [
+        ("fleet_smoke_completed_f1", float(o1["completed"]),
+         f"of {n_requests}, 1 of {n_pilots} pilots killed mid-trace"),
+        ("fleet_smoke_token_match", 1.0,
+         "failure-run tokens bitwise == single-engine baseline"),
+        ("fleet_smoke_replays", float(o1["replays"]),
+         "dead pilot's in-flight requests replayed on survivors"),
+        ("fleet_smoke_ttft_p99_ratio", ratio,
+         "p99 TTFT vs no-failure fleet (gate: <= 3)"),
+    ]

@@ -12,9 +12,9 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_bind, bench_lifecycle, bench_monitor,
-                        bench_scheduler, bench_serving, bench_train,
-                        roofline)
+from benchmarks import (bench_bind, bench_fleet_serve, bench_lifecycle,
+                        bench_monitor, bench_scheduler, bench_serving,
+                        bench_train, roofline)
 
 SUITES = {
     "bind": bench_bind.run,            # paper Fig. 4: late-binding cost
@@ -23,6 +23,8 @@ SUITES = {
     "monitor": bench_monitor.run,      # paper §3.4 monitor overhead
     "serving": bench_serving.run,      # payload-side serving numbers
     "serving_paged": bench_serving.run_smoke,  # paged-vs-dense CI smoke
+    "fleet_serve": bench_fleet_serve.run,      # requeue-on-pilot-failure
+    "fleet_serve_smoke": bench_fleet_serve.run_smoke,  # CI failure smoke
     "train": bench_train.run,          # payload-side training numbers
     "roofline": roofline.run,          # dry-run roofline aggregates
 }

@@ -9,6 +9,21 @@ already records per-leaf paths so that extension is additive).  Writes go to
 a tmp dir first and are renamed into place, so a pilot killed mid-write can
 never corrupt the latest checkpoint — the fault-tolerance contract the
 pilot's checkpoint/restart story depends on.
+
+Overwriting an existing ``step_N`` never deletes before the replacement is
+in place: the old dir is renamed aside (``.retired_step_N_*``), the tmp dir
+renamed in, and only then is the retired dir removed.  A crash anywhere in
+that window leaves either the new or the OLD data recoverable —
+``_sweep_retired`` (run by ``save``/``latest_step``/``all_steps``) renames
+an orphaned retired dir back into place, so ``latest_step`` always resolves
+to a restorable checkpoint.  (The previous rmtree-then-rename order had a
+window where a crash destroyed ``step_N`` while ``LATEST`` still pointed at
+it.)
+
+``restore`` validates leaf dtypes as well as shapes: a float64 ``.npy``
+silently loading into a bf16-typed state would poison every downstream
+compilation cache keyed on the state's dtypes.  Pass ``cast=True`` to
+convert explicitly.
 """
 
 from __future__ import annotations
@@ -28,6 +43,9 @@ def _flatten(tree):
     return leaves, treedef
 
 
+_RETIRED_PREFIX = ".retired_step_"
+
+
 def save(ckpt_dir: str, step: int, tree, *, keep: int = 3) -> str:
     """Blocking save.  Returns the checkpoint path."""
     leaves, treedef = _flatten(tree)
@@ -42,11 +60,62 @@ def save(ckpt_dir: str, step: int, tree, *, keep: int = 3) -> str:
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
+        # never a moment without a complete step_N on disk: retire the old
+        # dir aside, move the new one in, THEN delete.  A crash between the
+        # renames leaves the retired dir for _sweep_retired to reinstate.
+        # The retire TIME rides in the name — os.rename preserves mtime, so
+        # the dir's own timestamps say when the checkpoint was written, not
+        # when it was retired, and the sweep's live-writer grace window
+        # needs the latter.
+        retired = os.path.join(
+            ckpt_dir,
+            f"{_RETIRED_PREFIX}{step}_{int(time.time() * 1000)}"
+            f"_{os.getpid()}_{threading.get_ident()}")
+        os.rename(final, retired)
+        os.rename(tmp, final)
+        shutil.rmtree(retired, ignore_errors=True)
+    else:
+        os.rename(tmp, final)
     _point_latest(ckpt_dir, step)
-    _gc(ckpt_dir, keep)
+    _gc(ckpt_dir, keep)        # its all_steps() listing also runs the sweep
     return final
+
+
+def _sweep_retired(ckpt_dir: str, *, min_age_s: float = 2.0):
+    """Crash recovery for the overwrite window: a ``.retired_step_N_*`` dir
+    whose ``step_N`` is missing means the writer died between the two
+    renames — put the old (complete, valid) checkpoint back.  If ``step_N``
+    exists, the crash happened after the replacement landed and the retired
+    dir is garbage.
+
+    The reinstate branch only fires for dirs RETIRED more than ``min_age_s``
+    ago (the retire time is parsed from the dir name — rename preserves
+    mtime, so the filesystem timestamps are useless here): a HEALTHY
+    writer's retire→rename window is microseconds, so a fresh retired dir
+    most likely belongs to a live save on another thread or process —
+    renaming it back mid-window would make that writer's
+    ``os.rename(tmp, final)`` hit an existing directory and fail."""
+    if not os.path.isdir(ckpt_dir):
+        return
+    for d in os.listdir(ckpt_dir):
+        if not d.startswith(_RETIRED_PREFIX):
+            continue
+        parts = d[len(_RETIRED_PREFIX):].split("_")
+        try:
+            step = int(parts[0])
+            retired_at = int(parts[1]) / 1000.0
+        except (ValueError, IndexError):
+            continue
+        path = os.path.join(ckpt_dir, d)
+        final = os.path.join(ckpt_dir, f"step_{step}")
+        try:
+            if os.path.isdir(final):
+                shutil.rmtree(path, ignore_errors=True)
+            elif time.time() - retired_at >= min_age_s:
+                os.rename(path, final)
+        except OSError:
+            continue                       # a concurrent sweeper (or the
+                                           # writer itself) won the rename
 
 
 def _point_latest(ckpt_dir: str, step: int):
@@ -65,6 +134,7 @@ def _gc(ckpt_dir: str, keep: int):
 def all_steps(ckpt_dir: str) -> list[int]:
     if not os.path.isdir(ckpt_dir):
         return []
+    _sweep_retired(ckpt_dir)
     out = []
     for d in os.listdir(ckpt_dir):
         if d.startswith("step_") and not d.startswith(".tmp"):
@@ -76,6 +146,7 @@ def all_steps(ckpt_dir: str) -> list[int]:
 
 
 def latest_step(ckpt_dir: str) -> int | None:
+    _sweep_retired(ckpt_dir)
     p = os.path.join(ckpt_dir, "LATEST")
     if os.path.exists(p):
         try:
@@ -88,9 +159,14 @@ def latest_step(ckpt_dir: str) -> int | None:
     return max(steps) if steps else None
 
 
-def restore(ckpt_dir: str, step: int, like, shardings=None):
+def restore(ckpt_dir: str, step: int, like, shardings=None, *, cast: bool = False):
     """Restore into the structure of `like` (pytree of arrays or
-    ShapeDtypeStructs).  Optionally device_put with `shardings`."""
+    ShapeDtypeStructs).  Optionally device_put with `shardings`.
+
+    Leaf shapes AND dtypes must match ``like``; a dtype mismatch raises
+    (a float64 ``.npy`` silently loading into a bf16 state would poison
+    downstream compilation caches).  ``cast=True`` opts into an explicit
+    ``astype`` to the reference dtype instead."""
     path = os.path.join(ckpt_dir, f"step_{step}")
     leaves, treedef = _flatten(like)
     out = []
@@ -98,6 +174,14 @@ def restore(ckpt_dir: str, step: int, like, shardings=None):
         arr = np.load(os.path.join(path, f"leaf_{i}.npy"))
         if tuple(arr.shape) != tuple(ref.shape):
             raise ValueError(f"leaf {i}: ckpt shape {arr.shape} != {ref.shape}")
+        ref_dtype = getattr(ref, "dtype", None)
+        if ref_dtype is not None and arr.dtype != np.dtype(ref_dtype):
+            if not cast:
+                raise ValueError(
+                    f"leaf {i}: ckpt dtype {arr.dtype} != expected "
+                    f"{np.dtype(ref_dtype)} (pass cast=True to convert "
+                    f"explicitly)")
+            arr = arr.astype(ref_dtype)
         out.append(arr)
     tree = jax.tree_util.tree_unflatten(treedef, out)
     if shardings is not None:

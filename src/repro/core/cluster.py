@@ -85,7 +85,10 @@ class ClusterSim:
     def fail_node(self, slice_id: int):
         """Hard node loss: the pilot thread aborts without cleanup AND the
         payload processes die with the node; the lease expires and the repo
-        re-queues the task."""
+        re-queues the task.  For a SERVING pilot the same mechanism cascades
+        one level down: the dead server stops renewing its per-request
+        leases, so the fleet pool's reaper requeues its in-flight requests
+        onto surviving servers (the headline fleet-serve scenario)."""
         from repro.core.proctable import PAYLOAD_UID
         with self._lock:
             p = self.pilots.get(slice_id)
@@ -143,12 +146,31 @@ class Fleet:
     # ---- scaling ------------------------------------------------------------
 
     def scale_up(self, n: int) -> list[Pilot]:
-        """Provision n fresh slices and start a pilot on each."""
+        """Provision n fresh slices and start a pilot on each.  During a
+        fleet serve this is the join-mid-trace path: pair it with
+        :meth:`submit_servers` and the new pilots lease into the request
+        pool alongside the survivors."""
         started = []
         for s in self.sim.provision(n, labels=self.labels, mesh=self.mesh):
             started.append(self.sim.spawn_pilot(s, self.config))
         self.members.extend(started)
         return started
+
+    def submit_servers(self, image, pool_name: str, *, n: int | None = None,
+                       n_steps: int = 200_000, max_wall: float = 600.0,
+                       spec: dict | None = None, **task_kw) -> list[int]:
+        """Submit one serve-server task per pilot (default: one per live
+        member).  Each server late-binds an engine onto its pilot's slice
+        and leases requests from the named
+        :class:`~repro.serving.dispatch.FleetDispatcher` pool — the fleet
+        analog of one trace-carrying serve task.  ``spec`` merges extra
+        engine geometry (``slots``/``max_len``/``kv``/...) into the startup
+        spec."""
+        n = n if n is not None else max(1, self.size())
+        return [self.sim.repo.submit(
+            image, n_steps=n_steps, max_wall=max_wall,
+            payload_spec={"dispatch": pool_name, **(spec or {})}, **task_kw)
+            for _ in range(n)]
 
     def scale_down(self, n: int) -> list[Pilot]:
         """Gracefully drain the n most recently started live pilots.

@@ -208,11 +208,17 @@ class ExecutableRegistry:
         elif image.mode == "serve":
             # a serve image is an ENGINE factory: the wrapper builds a
             # continuous-batching ServeEngine over freshly-initialized params
-            # and drives it from the request trace in the startup spec.
+            # and drives it either from the request trace in the startup
+            # spec or — when the spec names a fleet pool ("dispatch") — by
+            # leasing requests out of a FleetDispatcher, where a dead
+            # server's in-flight requests requeue onto survivors.
             # Every engine from this factory shares ONE jitted step (per
             # max_len), ONE jitted prefill wrapper and ONE chunked-prefill
             # wrapper, so warm() can stage the XLA compiles at prefetch time
-            # and the payload's first tick hits the cache.
+            # and the payload's first tick hits the cache; params come from
+            # the image's seed, so every server in a fleet serves IDENTICAL
+            # weights — what makes replay-from-prompt reproduce a dead
+            # server's tokens bitwise.
             from repro.serving.engine import ServeEngine, make_engine_step
 
             step_fns: dict[int, Any] = {}

@@ -310,13 +310,28 @@ class TaskRepo:
                 return True
             return False
 
-    def release(self, task: PayloadTask, *, failed: bool = False):
-        """Give a leased task back (pilot draining, or payload failure)."""
+    def release(self, task: PayloadTask, *, failed: bool = False,
+                pilot_id: str | None = None):
+        """Give a leased task back (pilot draining, or payload failure).
+
+        Racing the lease reaper is safe: if the lease is already gone the
+        reaper requeued the task (or a result landed) and enqueueing it
+        AGAIN here would duplicate it — the release becomes a no-op.  Pass
+        ``pilot_id`` to also guard against the task having been re-leased
+        to someone else in the meantime (their lease must survive)."""
         with self._lock:
-            self._leases.pop(task.task_id, None)
+            lease = self._leases.get(task.task_id)
+            if (pilot_id is not None and lease is not None
+                    and lease.pilot_id != pilot_id):
+                return                     # someone else's lease now
             if task.task_id in self._results:
+                self._leases.pop(task.task_id, None)
                 self._update_drained()
                 return
+            if lease is None:              # expired: the reaper handled it
+                self._update_drained()
+                return
+            del self._leases[task.task_id]
             if failed and task.attempts >= task.max_attempts:
                 self._failed[task.task_id] = task
                 self._update_drained()
@@ -336,7 +351,8 @@ class TaskRepo:
         if self._reap_timer is None or self._reap_timer.deadline > expires:
             if self._reap_timer is not None:
                 self._reap_timer.cancel()
-            self._reap_timer = self._wheel.call_at(expires, self._on_reap_timer)
+            self._reap_timer = self._wheel.call_at(expires, self._on_reap_timer,
+                                                   name="taskrepo-lease-reaper")
 
     def _on_reap_timer(self):
         with self._lock:
@@ -355,7 +371,15 @@ class TaskRepo:
                 del self._leases[tid]
                 expired.append(lease.task)
             for task in expired:
-                if task.task_id not in self._results:
+                if task.task_id in self._results:
+                    continue
+                if task.attempts >= task.max_attempts:
+                    # the dispatch budget is spent: settle as failed instead
+                    # of cycling lease→expire→requeue forever (a release
+                    # (failed=True) that races the expiry would otherwise
+                    # never reach the _failed state)
+                    self._failed[task.task_id] = task
+                else:
                     self._enqueue(task)
             self._update_drained()
             if self._deadlines:                    # re-arm for the next lease
@@ -384,11 +408,21 @@ class TaskRepo:
                 "match_p99_us": 1e6 * lat[min(n - 1, (99 * n) // 100)] if n else 0.0,
                 "idle_wakeups": self.idle_wakeups,
                 "notifies": self.notifies,
+                # timer-callback failures (a crashed lease reaper / monitor
+                # tick shows up here instead of silently disabling expiry)
+                "timer_errors": self._wheel.error_count,
             }
 
     def result(self, task_id: int) -> TaskResult | None:
         with self._lock:
             return self._results.get(task_id)
+
+    def failed_tasks(self) -> list[int]:
+        """Task ids that settled as failed (attempt budget exhausted) —
+        consumers that track work at a higher level (the fleet dispatcher's
+        request records) reconcile against this."""
+        with self._lock:
+            return list(self._failed)
 
     def drain_done(self) -> bool:
         return self._drained.is_set()

@@ -10,6 +10,14 @@ polling loops — control-plane CPU stays flat as the fleet grows.
 
 Callbacks must be short and non-blocking (they share one thread); anything
 heavy should set an event and let the owner's thread do the work.
+
+A raising callback must never be *silent*: the wheel services the lease
+reaper and the payload monitor, so a swallowed exception there would turn
+off lease expiry — the exact failure the fleet's requeue-on-pilot-death
+story depends on never happening.  Every callback error is recorded on the
+wheel's error ledger (``errors`` keeps the most recent ``(timer name,
+exception)`` pairs, ``error_count`` counts them all) and surfaced through
+:meth:`TimerWheel.stats`; a periodic timer that raised stays scheduled.
 """
 
 from __future__ import annotations
@@ -18,6 +26,7 @@ import heapq
 import itertools
 import threading
 import time
+from collections import deque
 from typing import Callable
 
 
@@ -25,14 +34,15 @@ class Timer:
     """Handle for a scheduled callback.  ``cancel()`` is lazy: the wheel
     drops cancelled entries when they surface at the top of the heap."""
 
-    __slots__ = ("fn", "deadline", "interval", "cancelled")
+    __slots__ = ("fn", "deadline", "interval", "cancelled", "name")
 
     def __init__(self, fn: Callable[[], None], deadline: float,
-                 interval: float | None):
+                 interval: float | None, name: str | None = None):
         self.fn = fn
         self.deadline = deadline
         self.interval = interval          # None -> one-shot
         self.cancelled = False
+        self.name = name or getattr(fn, "__qualname__", repr(fn))
 
     def cancel(self):
         self.cancelled = True
@@ -46,19 +56,26 @@ class TimerWheel:
         self._thread: threading.Thread | None = None
         self._name = name
         self.fired = 0                    # observability: callbacks run
+        self.error_count = 0              # callbacks that raised (total)
+        self.errors: deque[tuple[str, Exception]] = deque(maxlen=32)
 
     # ---- scheduling -------------------------------------------------------
 
-    def call_later(self, delay: float, fn: Callable[[], None]) -> Timer:
-        return self._push(Timer(fn, time.monotonic() + max(delay, 0.0), None))
+    def call_later(self, delay: float, fn: Callable[[], None],
+                   name: str | None = None) -> Timer:
+        return self._push(Timer(fn, time.monotonic() + max(delay, 0.0), None,
+                                name))
 
-    def call_at(self, deadline: float, fn: Callable[[], None]) -> Timer:
-        return self._push(Timer(fn, deadline, None))
+    def call_at(self, deadline: float, fn: Callable[[], None],
+                name: str | None = None) -> Timer:
+        return self._push(Timer(fn, deadline, None, name))
 
-    def call_periodic(self, interval: float, fn: Callable[[], None]) -> Timer:
+    def call_periodic(self, interval: float, fn: Callable[[], None],
+                      name: str | None = None) -> Timer:
         if interval <= 0:
             raise ValueError("periodic interval must be > 0")
-        return self._push(Timer(fn, time.monotonic() + interval, interval))
+        return self._push(Timer(fn, time.monotonic() + interval, interval,
+                                name))
 
     def _push(self, t: Timer) -> Timer:
         with self._cond:
@@ -95,12 +112,31 @@ class TimerWheel:
                     self._cond.wait(timeout=wait)
             try:
                 timer.fn()
-            except Exception:             # noqa: BLE001 — timers never kill the wheel
-                pass
+            except Exception as e:        # noqa: BLE001 — timers never kill the
+                # wheel, but they must not die silently either: a crashing
+                # lease reaper would disable lease expiry fleet-wide
+                with self._cond:          # stats() snapshots under the same
+                    self.errors.append((timer.name, e))    # lock
+                    self.error_count += 1
             self.fired += 1
             if timer.interval is not None and not timer.cancelled:
                 timer.deadline = time.monotonic() + timer.interval
                 self._push(timer)
+
+    # ---- observability ----------------------------------------------------
+
+    def stats(self) -> dict:
+        """Fired/error accounting; ``last_errors`` names the timers whose
+        callbacks raised so a disabled lease reaper is visible, not silent."""
+        with self._cond:                  # snapshot vs concurrent appends
+            errors = list(self.errors)
+            count = self.error_count
+        return {
+            "fired": self.fired,
+            "errors": count,
+            "last_errors": [(n, f"{type(e).__name__}: {e}")
+                            for n, e in errors],
+        }
 
 
 _default_wheel: TimerWheel | None = None

@@ -112,15 +112,25 @@ def run_wrapper(arena: SharedArena, proctable: ProcessTable, exe, spec: dict):
 
 def _serve_loop(exe, key, n_steps, entry, proctable, telemetry, spec) -> int:
     """Serve payload: a continuous-batching inference server late-bound onto
-    the slice, driven by the request *trace* in the startup spec.
+    the slice.
 
-    Trace entries are JSON dicts ``{"rid", "prompt": [ints],
-    "max_new_tokens", "at_step"}``; a request is admitted once the engine
-    has ticked ``at_step`` times (staggered arrivals).  ``n_steps`` bounds
-    the tick count — the lease/budget contract serve shares with train.
-    The engine's decode loop is device-resident (one device→host transfer
-    per step); each tick heartbeats the proctable so the pilot's monitor
-    meters serve progress exactly as it meters train steps.
+    Two request sources, selected by the startup spec:
+
+    * ``trace`` — the single-engine path: JSON dicts ``{"rid", "prompt":
+      [ints], "max_new_tokens", "at_step"}``; a request is admitted once the
+      engine has ticked ``at_step`` times (staggered arrivals).
+    * ``dispatch`` — the FLEET path: the spec names a
+      :class:`~repro.serving.dispatch.FleetDispatcher` pool and the server
+      leases requests out of it instead of owning a static trace; per-
+      request progress piggybacks on lease renewal every tick, so a server
+      that dies simply stops renewing and its in-flight requests requeue
+      onto survivors (see ``_fleet_serve_loop``).
+
+    ``n_steps`` bounds the tick count — the lease/budget contract serve
+    shares with train.  The engine's decode loop is device-resident (one
+    device→host transfer per step); each tick heartbeats the proctable so
+    the pilot's monitor meters serve progress exactly as it meters train
+    steps.
     """
     params = exe.make_inputs(key)
     kv_kw = {k: spec[k] for k in ("kv", "prefill", "prefill_chunk",
@@ -129,6 +139,9 @@ def _serve_loop(exe, key, n_steps, entry, proctable, telemetry, spec) -> int:
              if spec.get(k) is not None}
     eng = exe.fn(params, slots=spec.get("slots"),
                  max_len=spec.get("max_len"), **kv_kw)
+    if spec.get("dispatch"):
+        return _fleet_serve_loop(eng, spec, n_steps, entry, proctable,
+                                 telemetry)
 
     def on_tick(tick, dt):
         if entry.stop.is_set():
@@ -145,16 +158,124 @@ def _serve_loop(exe, key, n_steps, entry, proctable, telemetry, spec) -> int:
                           on_tick=on_tick)
     if entry.stop.is_set():
         return 143
-    telemetry["serve"] = {k: stats[k] for k in (
-        "completed", "decode_steps", "tokens_decoded", "slot_utilization",
-        "idle_slot_steps", "d2h_transfers", "tok_per_s",
-        "ttft_p50_s", "ttft_p99_s",
-        # cache pressure: the pilot's heartbeat consumer sees how hot the
-        # slot-sized claim is running (live/allocated KV) and how much the
-        # prefix cache is saving
-        "kv", "kv_memory_utilization", "kv_peak_live_tokens",
-        "kv_capacity_tokens", "prefix_hit_rate", "prefill_chunks",
-        "blocked_admissions")}
+    # cache pressure rides along: the pilot's heartbeat consumer sees how
+    # hot the slot-sized claim is running and what the prefix cache saves
+    telemetry["serve"] = {k: stats[k] for k in _SERVE_STAT_KEYS}
+    telemetry["tokens"] = {str(r.rid): r.tokens for r in eng.done.values()}
+    return 0
+
+
+_SERVE_STAT_KEYS = (
+    "completed", "decode_steps", "tokens_decoded", "slot_utilization",
+    "idle_slot_steps", "d2h_transfers", "tok_per_s",
+    "ttft_p50_s", "ttft_p99_s",
+    "kv", "kv_memory_utilization", "kv_peak_live_tokens",
+    "kv_capacity_tokens", "prefix_hit_rate", "prefill_chunks",
+    "blocked_admissions")
+
+
+def _fleet_serve_loop(eng, spec, n_steps, entry, proctable, telemetry) -> int:
+    """Fleet serve: lease requests from the pool named in the startup spec
+    instead of replaying a static trace.
+
+    Per tick: top up free slots from the pool (the fetch parks on the pool
+    condition when the engine is idle, so a requeued request wakes the
+    server immediately), one engine step, report completions (first
+    completion wins at the pool), then renew every in-flight lease with its
+    progress.  A renewal the pool refuses means the lease expired and moved
+    elsewhere — the slot is cancelled rather than racing a replay it cannot
+    win.
+
+    Death semantics: when the stop event fires (node loss / SIGTERM) the
+    loop returns WITHOUT releasing anything — a dead server cannot clean up,
+    and the pool's lease-expiry reaper requeueing its in-flight requests is
+    exactly the failure path this payload exists to exercise.  Only a
+    graceful end (tick budget, pool closed) hands unfinished requests back
+    early."""
+    from repro.serving import dispatch as fleet_dispatch
+    from repro.serving.engine import Request
+
+    pool = fleet_dispatch.get_pool(spec["dispatch"])
+    if pool is None:
+        raise RuntimeError(f"fleet pool {spec['dispatch']!r} is not "
+                           f"registered in this process")
+    server_id = ((spec.get("env") or {}).get("pilot")
+                 or f"server-{spec.get('task_id', id(eng))}")
+    labels = spec.get("server_labels") or {}
+    # stage every admission bucket AND the whole admit/decode/evict install
+    # path before taking the first lease: a mid-serve compile stalls
+    # renewals past the lease TTL and thrashes requests between servers
+    # that are all compiling.  Factory-shared jit wrappers and the
+    # process-global eager-op cache make this nearly free for every server
+    # after the first on the same image.
+    eng.warm_admission()
+    eng.warm_install()
+    pool.announce(server_id)
+    inflight: dict[int, Request] = {}
+    fetched = completed_here = released = 0
+    decoded = tick = 0
+    t_start = time.monotonic()
+    while tick < n_steps:
+        if entry.stop.is_set():
+            return 143                   # died mid-serve: leases just expire
+        if pool.closed.is_set():
+            break
+        # _live already counts mid-admission (_jobs) requests, so this is
+        # every admitted-or-queued request exactly once
+        want = eng.slots - (len(eng._live) + len(eng.queue))
+        if want > 0 and not pool.finished():
+            idle = not any(m.active for m in eng.slot_meta) and not eng._jobs
+            for e in pool.fetch(server_id, max_n=want,
+                                timeout=0.05 if idle else 0.0,
+                                labels=labels, cancel=entry.stop.is_set):
+                req = Request(
+                    rid=int(e["rid"]),
+                    prompt=np.asarray(e["prompt"], np.int32),
+                    max_new_tokens=int(e.get("max_new_tokens", 16)),
+                    submitted=float(e.get("submitted_s", time.monotonic())))
+                try:
+                    eng.submit(req)
+                except ValueError:
+                    pool.reject(server_id, req.rid)   # can NEVER fit here
+                    continue
+                inflight[req.rid] = req
+                fetched += 1
+        t0 = time.monotonic()
+        decoded += eng.step()
+        dt = time.monotonic() - t0
+        tick += 1
+        proctable.heartbeat(entry.pid, dt)
+        telemetry["steps"] = tick
+        telemetry["step_times"].append(dt)
+        for rid in [r for r in inflight if r in eng.done]:
+            req = inflight.pop(rid)
+            if pool.complete(server_id, rid, req.tokens,
+                             first_token_s=req.first_token_s):
+                completed_here += 1
+        if inflight:
+            lost = pool.renew(server_id, {rid: len(r.tokens)
+                                          for rid, r in inflight.items()})
+            for rid in lost:
+                eng.cancel(rid)          # re-leased elsewhere: free the slot
+                inflight.pop(rid, None)
+        # the heartbeat consumer sees cache pressure AND per-request
+        # progress — renewals piggyback on the same tick
+        telemetry["serve_live"] = {
+            **eng.kv_pressure(),
+            "inflight": {str(rid): len(r.tokens)
+                         for rid, r in inflight.items()}}
+        if pool.finished() and not inflight:
+            break
+    if inflight:                         # graceful end with work leased:
+        drained = eng.drain_requests()   # give it back, don't sit on it
+        pool.release(server_id, [r.rid for r in drained])
+        released = len(drained)
+        inflight.clear()
+    stats = eng._stats(decoded, time.monotonic() - t_start)
+    telemetry["serve"] = {k: stats[k] for k in _SERVE_STAT_KEYS}
+    telemetry["serve"]["fleet"] = {
+        "server_id": server_id, "pool": pool.name, "fetched": fetched,
+        "completed_here": completed_here, "released": released}
     telemetry["tokens"] = {str(r.rid): r.tokens for r in eng.done.values()}
     return 0
 

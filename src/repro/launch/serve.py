@@ -1,7 +1,8 @@
 """Batched-serving driver THROUGH the pilot system.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
-      --requests 16 --slots 4 [--wave] [--via-pilots]
+      --requests 16 --slots 4 [--wave] [--via-pilots] \
+      [--pilots N [--fail-at K]]
 
 Default runs the continuous-batching engine directly on a staggered-arrival
 trace (``--wave`` selects the static wave-batching baseline for comparison);
@@ -10,12 +11,19 @@ engine run — trace and all — is late-bound onto a pilot-held slice, and a
 second model is served by the SAME pilot right after (the multi-payload
 demo).  The first task carries a prefetch hint for the second image, so its
 compile overlaps the first server's run.
+
+``--pilots N`` runs the FLEET serve demo: the trace is split into
+per-request leases in a FleetDispatcher pool and N pilots each run a server
+that pulls from it.  ``--fail-at K`` hard-kills a lease-holding pilot once K
+requests have completed — its in-flight requests requeue onto the survivors
+and the trace still reaches 100% completion.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import time
 
 import jax
 import numpy as np
@@ -25,6 +33,7 @@ from repro.core.cluster import ClusterSim
 from repro.core.images import PayloadImage
 from repro.core.pilot import PilotConfig
 from repro.models.api import build_model
+from repro.serving.dispatch import FleetDispatcher
 from repro.serving.engine import ServeEngine
 
 
@@ -107,6 +116,91 @@ def serve_via_pilots(archs: list[str], n_requests: int = 8,
                   f"(bind cached={pilot.history[i].get('bind_cached')})")
 
 
+def serve_fleet(arch: str, n_requests: int, n_pilots: int, *,
+                slots: int = 2, max_len: int = 64, fail_at: int | None = None,
+                fail_count: int = 1, lease_ttl: float = 0.5,
+                registry=None, seed: int = 0) -> dict:
+    """The fleet serve demo/driver: N pilots lease requests from one pool.
+
+    ``fail_at`` hard-kills ``fail_count`` lease-holding pilots (one at
+    ``fail_at`` settled requests, the next one ``fail_at`` later, ...) —
+    the requeue-on-pilot-failure path.  Returns pool + timing stats; the
+    caller owns no threads when this returns (fleet drained, pool closed).
+    """
+    cfg = get_smoke_config(arch)
+    sim = ClusterSim(registry=registry)
+    pool = FleetDispatcher(lease_ttl=lease_ttl)
+    trace = make_trace(cfg.vocab_size, n_requests, max_len=max_len,
+                       seed=seed)
+    fleet = sim.spawn_fleet(n_pilots, PilotConfig(max_payloads=2,
+                                                  idle_grace=0.3))
+    img = PayloadImage(arch=arch, shape="smoke", mode="serve")
+    fleet.submit_servers(img, pool.name, n=n_pilots,
+                         spec={"slots": slots, "max_len": max_len})
+    # submit traffic only once the fleet is up and WARM, so TTFT measures
+    # serving (queue wait + requeue delay), not server cold start
+    if not pool.wait_servers(n_pilots, timeout=300.0):
+        pool.close()
+        fleet.drain_all()
+        fleet.join_all(30.0)
+        raise RuntimeError(
+            f"only {len(pool.servers)}/{n_pilots} servers came up within "
+            f"300s — refusing to serve traffic into a half-started fleet")
+    t0 = time.monotonic()
+    pool.submit_trace(trace)
+    pool.seal()                # the demo trace is the whole workload
+    failed_pilots: list[str] = []
+    try:
+        for k in range(fail_count if fail_at else 0):
+            if not pool.wait_completed(fail_at * (k + 1), timeout=300.0):
+                break
+            victim = _pick_victim(fleet, pool, exclude=failed_pilots)
+            if victim is None:
+                break
+            failed_pilots.append(victim.pilot_id)
+            sim.fail_node(victim.slice.slice_id)
+        ok = pool.wait_all(timeout=600.0)
+    finally:
+        pool.close()
+        fleet.drain_all()
+        fleet.join_all(30.0)
+    wall = time.monotonic() - t0
+    stats = pool.stats()
+    recs = pool.records()
+    ttfts = [r.first_token_s for r in recs.values()
+             if r.first_token_s is not None]
+    goodput = sum(len(r.tokens) for r in recs.values()
+                  if r.tokens is not None) / wall if wall else 0.0
+    # same percentile definition as ServeEngine._stats, so fleet and
+    # single-engine ttft_p*_s rows are directly comparable
+    pct = lambda v, q: float(np.percentile(v, q)) if v else None
+    return {
+        "drained": ok,
+        "wall_s": wall,
+        "goodput_tok_per_s": goodput,
+        "ttft_p50_s": pct(ttfts, 50),
+        "ttft_p99_s": pct(ttfts, 99),
+        "failed_pilots": failed_pilots,
+        "results": pool.results(),
+        **stats,
+    }
+
+
+def _pick_victim(fleet, pool, *, exclude=()):
+    """The live pilot holding the most request leases (never a survivor of
+    a previous kill round that holds none — killing an idle pilot exercises
+    nothing)."""
+    holders = pool.lease_holders()
+    best, best_n = None, -1
+    for p in fleet.live():
+        if p.pilot_id in exclude:
+            continue
+        n = len(holders.get(p.pilot_id, []))
+        if n > best_n:
+            best, best_n = p, n
+    return best if best_n > 0 else None
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
@@ -134,8 +228,21 @@ def main():
     ap.add_argument("--dup-rate", type=float, default=0.0,
                     help="fraction of repeated prompts (prefix-cache hits)")
     ap.add_argument("--via-pilots", action="store_true")
+    ap.add_argument("--pilots", type=int, default=None,
+                    help="fleet serve: N pilots lease requests from one "
+                         "shared pool")
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="fleet serve: hard-kill a lease-holding pilot "
+                         "after K completed requests")
     args = ap.parse_args()
 
+    if args.pilots:
+        out = serve_fleet(args.arch, args.requests, args.pilots,
+                          slots=args.slots or 2, max_len=args.max_len or 64,
+                          fail_at=args.fail_at)
+        out.pop("results")
+        print(json.dumps(out, indent=1))
+        return
     if args.via_pilots:
         archs = (args.archs or f"{args.arch},gemma-2b").split(",")
         serve_via_pilots(archs, n_requests=args.requests, slots=args.slots,

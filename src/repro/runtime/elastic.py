@@ -32,8 +32,22 @@ class ReshardPlan:
     actions: tuple[str, ...]
 
 
+class NoViableMeshError(ValueError):
+    """Fleet membership admits no mesh at all — e.g. every pilot is gone.
+
+    An explicit outcome, not a bogus 1-slice plan: the caller must wait for
+    capacity (or page an operator), never "resume" onto slices that do not
+    exist."""
+
+
 def viable_data_axis(n_live: int, global_batch: int) -> int:
-    """Largest data-parallel degree <= n_live that divides global_batch."""
+    """Largest data-parallel degree <= n_live that divides global_batch.
+    Raises :class:`NoViableMeshError` when there are no live slices — a
+    fleet that lost every pilot has no data axis, not a data axis of 1."""
+    if n_live <= 0:
+        raise NoViableMeshError(
+            f"no viable data axis: {n_live} live slices (the fleet is empty; "
+            f"hold the workload and wait for capacity)")
     for d in range(min(n_live, global_batch), 0, -1):
         if global_batch % d == 0:
             return d
@@ -43,7 +57,10 @@ def viable_data_axis(n_live: int, global_batch: int) -> int:
 def plan_remesh(old: MeshSpec | None, n_live_slices: int, model_parallel: int,
                 global_batch: int, reason: str = "membership-change") -> ReshardPlan:
     if n_live_slices < 1:
-        raise ValueError("no live slices")
+        raise NoViableMeshError(
+            f"no viable mesh: {n_live_slices} live slices "
+            f"(reason={reason!r}); refusing to emit a remesh plan for an "
+            f"empty fleet")
     data = viable_data_axis(n_live_slices, global_batch)
     new = MeshSpec((data, model_parallel), ("data", "model"))
     actions = ["drain-payloads", "checkpoint-if-training"]

@@ -1,2 +1,3 @@
 from repro.serving.blockpool import BlockAllocator, PrefixCache  # noqa: F401
+from repro.serving.dispatch import FleetDispatcher, get_pool  # noqa: F401
 from repro.serving.engine import Request, ServeEngine  # noqa: F401

@@ -1,0 +1,396 @@
+"""FleetDispatcher — a fleet-wide serve request pool (requeue-on-pilot-failure).
+
+The single-engine serve path binds one request *trace* to one engine: if
+that engine's pilot dies, its in-flight requests die with it.  The fleet
+dispatcher is the late-binding analog of task requeue applied to SERVING
+(paper §3.4/§3.6: the slice claim outlives the payload, but resource
+*ownership* churns):
+
+* a request trace is split into per-request entries in a dedicated
+  :class:`~repro.core.taskrepo.TaskRepo` — same leases, same matchmaking
+  index, same deadline-heap reaper that already makes dead pilots harmless
+  for batch tasks;
+* serving pilots LEASE requests (:meth:`fetch`) into free engine slots and
+  piggyback per-request progress on lease renewal (:meth:`renew`) every
+  engine tick;
+* a pilot that dies simply stops renewing: the repo's lease-expiry reaper
+  requeues its in-flight requests and wakes any surviving server parked in
+  ``fetch`` — the survivor replays them from the prompt (greedy decode over
+  slot-isolated state is deterministic, so the replayed tokens are bitwise
+  the tokens the dead pilot would have produced);
+* completion is EXACTLY ONCE per request id: :meth:`complete` routes
+  through ``TaskRepo.complete`` (first completion wins), so a slow original
+  server racing a replayed copy produces one accepted result and one
+  counted duplicate — never two.
+
+Request lease lifecycle::
+
+    submit ──> queued ──> leased(server A) ──renew──> ... ──> completed
+                  ^            │ no renew (A died)                 ^
+                  └── requeued ┘ after lease_ttl                   │
+                  └────────────── leased(server B), replay ────────┘
+
+Pools register under a process-global name (the simulation's stand-in for
+a network endpoint): a serve payload finds its pool with
+:func:`get_pool(spec["dispatch"])` from inside the payload container.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+import uuid
+
+from repro.core.taskrepo import TaskRepo, TaskResult
+
+_POOLS: dict[str, "FleetDispatcher"] = {}
+_POOLS_LOCK = threading.Lock()
+
+
+def get_pool(name: str) -> "FleetDispatcher | None":
+    """Resolve a pool name published in a serve payload's startup spec."""
+    with _POOLS_LOCK:
+        return _POOLS.get(name)
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """Dispatcher-side state of one request across its (re)dispatches."""
+    rid: int
+    task_id: int
+    entry: dict                         # the JSON-able request body
+    submitted_s: float                  # monotonic submit time (TTFT zero)
+    tokens: list | None = None          # accepted completion (first wins)
+    server: str | None = None           # the server whose result won
+    first_token_s: float | None = None  # pool-level TTFT (includes requeue)
+    completed_s: float | None = None
+    attempts: int = 0                   # dispatches (>1 == replayed)
+    progress: int = 0                   # tokens reported via renew()
+    failed: bool = False                # rejected max_attempts times
+    servers_tried: list = dataclasses.field(default_factory=list)
+
+
+class FleetDispatcher:
+    def __init__(self, *, name: str | None = None, lease_ttl: float = 1.0,
+                 max_attempts: int = 8):
+        self.name = name or f"pool-{uuid.uuid4().hex[:8]}"
+        # a DEDICATED repo: request leases expire on their own (short) TTL,
+        # independent of the pilot-level task leases
+        self.repo = TaskRepo(lease_ttl=lease_ttl)
+        self.max_attempts = max_attempts
+        self._lock = threading.Lock()
+        self._done_cond = threading.Condition(self._lock)
+        self._records: dict[int, RequestRecord] = {}
+        self._by_tid: dict[int, int] = {}
+        # (server_id, rid) -> leased PayloadTask (needed for release/renew)
+        self._leased: dict[tuple[str, int], object] = {}
+        self._n_settled = 0               # completed + failed
+        self.duplicates = 0               # completions dropped by first-wins
+        self.lost_leases = 0              # renewals refused (re-leased away)
+        self.servers: set[str] = set()    # servers that announced readiness
+        self.sealed = threading.Event()   # no further submissions coming
+        self.closed = threading.Event()
+        with _POOLS_LOCK:
+            _POOLS[self.name] = self
+
+    # ---- submission -------------------------------------------------------
+
+    def submit(self, entry: dict) -> int:
+        """Queue one request.  ``entry`` is the trace-entry format
+        (``{"rid", "prompt": [ints], "max_new_tokens", ...}``); an optional
+        ``require_labels`` dict rides into the repo's matchmaking index so a
+        request can be pinned to servers advertising matching labels (e.g.
+        one pool feeding several model fleets)."""
+        rid = int(entry["rid"])
+        if self.sealed.is_set():
+            raise RuntimeError(f"pool {self.name} is sealed")
+        # record BEFORE publishing: the repo submit wakes parked fetchers,
+        # which must always find the record.  The tid->rid mapping may lag
+        # by microseconds; fetch falls back to the rid the task itself
+        # carries in its payload_spec.
+        rec = RequestRecord(rid=rid, task_id=-1, entry=dict(entry),
+                            submitted_s=time.monotonic())
+        with self._lock:
+            if rid in self._records:
+                raise ValueError(f"duplicate request id {rid}")
+            self._records[rid] = rec
+        tid = self.repo.submit(
+            "serve-request",
+            require_labels=entry.get("require_labels"),
+            priority=int(entry.get("priority", 0)),
+            max_attempts=self.max_attempts,
+            payload_spec={"rid": rid})
+        with self._lock:
+            rec.task_id = tid
+            self._by_tid[tid] = rid
+        return rid
+
+    def submit_trace(self, trace: list[dict]) -> list[int]:
+        """Split a request trace into per-request pool entries.  Arrival
+        staggering (``at_step``) is an engine-tick concept and is ignored
+        here — fleet arrivals are wall-clock submissions."""
+        return [self.submit(e) for e in trace]
+
+    # ---- the server side (called from serve payloads) ---------------------
+
+    def announce(self, server_id: str):
+        """A server reports it is up and WARM (engine compiled, ready to
+        lease).  Drivers that want cold-start excluded from TTFT wait for
+        the fleet with :meth:`wait_servers` before submitting traffic."""
+        with self._done_cond:
+            self.servers.add(server_id)
+            self._done_cond.notify_all()
+
+    def wait_servers(self, n: int, timeout: float | None = None) -> bool:
+        return self._wait_for(lambda: len(self.servers) >= n, timeout)
+
+    def fetch(self, server_id: str, *, max_n: int = 1, timeout: float = 0.0,
+              labels: dict | None = None, cancel=None) -> list[dict]:
+        """Lease up to ``max_n`` requests for this server.  The first match
+        may block up to ``timeout`` (parked on the repo condition — a
+        requeued request wakes it immediately); the rest are non-blocking.
+        Returned entries carry ``rid``, ``submitted_s`` (the pool-level TTFT
+        zero) and ``attempt``."""
+        ad = {"pilot_id": server_id, "labels": dict(labels or {})}
+        stop = (self.closed.is_set if cancel is None
+                else lambda: self.closed.is_set() or cancel())
+        out: list[dict] = []
+        for i in range(max_n):
+            if i == 0 and timeout > 0:
+                task = self.repo.match_wait(ad, timeout=timeout, cancel=stop)
+            else:
+                task = self.repo.match(ad)
+            if task is None:
+                break
+            with self._lock:
+                # the submitter records the task before publishing but may
+                # not have written the tid mapping yet — the task's own
+                # payload_spec always carries the rid
+                rid = self._by_tid.get(task.task_id)
+                if rid is None:
+                    rid = int(task.payload_spec["rid"])
+                    self._by_tid[task.task_id] = rid
+                rec = self._records[rid]
+                rec.task_id = task.task_id
+                if rec.tokens is not None or rec.failed:
+                    # stale queued copy of an already-settled request (its
+                    # lease expired in the same window the original server
+                    # finished, or it settled as failed).  failed=rec.failed
+                    # routes the failed case into the repo's _failed state
+                    # instead of re-enqueueing a zombie that would win every
+                    # future match (lowest task_id) and starve the queue.
+                    self.repo.release(task, failed=rec.failed,
+                                      pilot_id=server_id)
+                    continue
+                # the previous holder is dead or lost the lease — its stale
+                # lease record must not keep counting it as a holder
+                for k in [k for k in self._leased
+                          if k[1] == rid and k[0] != server_id]:
+                    del self._leased[k]
+                self._leased[(server_id, rid)] = task
+                rec.attempts = task.attempts
+                rec.servers_tried.append(server_id)
+                e = dict(rec.entry)
+                e["rid"] = rid
+                e["submitted_s"] = rec.submitted_s
+                e["attempt"] = task.attempts
+            out.append(e)
+        return out
+
+    def renew(self, server_id: str, progress: dict[int, int]) -> list[int]:
+        """Renew this server's request leases, piggybacking per-request
+        progress (tokens produced so far) on the heartbeat.  Returns the
+        rids whose lease this server NO LONGER holds (expired and re-leased
+        or requeued) — the caller should ``ServeEngine.cancel`` them instead
+        of burning slots on tokens that can never win."""
+        lost: list[int] = []
+        for rid, n_tokens in progress.items():
+            with self._lock:
+                task = self._leased.get((server_id, rid))
+                rec = self._records.get(rid)
+            if task is None or rec is None:
+                # the lease record was already swept (the rid re-leased to
+                # another server, or the pool never knew it) — still a loss
+                # from this server's point of view
+                if rec is not None and rec.tokens is None:
+                    self.lost_leases += 1
+                lost.append(rid)
+                continue
+            if self.repo.renew(task.task_id, server_id):
+                with self._lock:
+                    rec.progress = max(rec.progress, int(n_tokens))
+            else:
+                lost.append(rid)
+                self.lost_leases += 1
+                with self._lock:
+                    self._leased.pop((server_id, rid), None)
+        return lost
+
+    def complete(self, server_id: str, rid: int, tokens: list,
+                 *, first_token_s: float | None = None) -> bool:
+        """Report a finished request.  First completion wins — routed
+        through ``TaskRepo.complete``'s result dedup, so a replayed copy
+        racing the original produces exactly one accepted result."""
+        with self._lock:
+            rec = self._records.get(rid)
+        if rec is None:
+            return False
+        accepted = self.repo.complete(TaskResult(
+            task_id=rec.task_id, pilot_id=server_id, exitcode=0,
+            telemetry={"rid": rid, "n_tokens": len(tokens)}))
+        with self._done_cond:
+            self._leased.pop((server_id, rid), None)
+            # a request settles EXACTLY once: a late result for a request
+            # that already settled as failed (reject path) must not bump
+            # _n_settled a second time — that would let wait_all/finished
+            # fire with other work still in flight
+            if accepted and not rec.failed and rec.tokens is None:
+                rec.tokens = list(tokens)
+                rec.server = server_id
+                rec.first_token_s = first_token_s
+                rec.completed_s = time.monotonic() - rec.submitted_s
+                self._n_settled += 1
+                self._done_cond.notify_all()
+            else:
+                self.duplicates += 1
+                accepted = False
+        return accepted
+
+    def release(self, server_id: str, rids: list[int]):
+        """Hand leased-but-unfinished requests straight back (graceful
+        payload end / drain): they requeue immediately instead of waiting
+        out the lease TTL."""
+        for rid in rids:
+            with self._lock:
+                task = self._leased.pop((server_id, rid), None)
+            if task is not None:
+                # pilot_id guard: if the lease already expired and moved,
+                # the new holder's lease survives and nothing is duplicated
+                self.repo.release(task, pilot_id=server_id)
+
+    def reject(self, server_id: str, rid: int):
+        """This server can never run the request (e.g. the prompt exceeds
+        its engine's max_len).  The request retries elsewhere until the
+        pool's ``max_attempts``, then settles as failed — it must not
+        ping-pong forever between release and fetch."""
+        with self._lock:
+            task = self._leased.pop((server_id, rid), None)
+            rec = self._records.get(rid)
+        if task is None or rec is None:
+            return
+        self.repo.release(task, failed=True, pilot_id=server_id)
+        if task.attempts >= self.max_attempts:
+            with self._done_cond:
+                if not rec.failed and rec.tokens is None:
+                    rec.failed = True
+                    self._n_settled += 1
+                    self._done_cond.notify_all()
+
+    # ---- driver side ------------------------------------------------------
+
+    def seal(self):
+        """Declare that no further requests will be submitted.  Servers
+        keep serving a momentarily-drained pool (elastic traffic!) until it
+        is sealed AND everything has settled — only then does
+        :meth:`finished` let them exit."""
+        self.sealed.set()
+        with self._done_cond:
+            self._done_cond.notify_all()
+
+    def finished(self) -> bool:
+        """True once the pool is sealed and every submitted request has
+        settled (completed or failed).  An unsealed pool is never finished
+        — more traffic may arrive, servers park in fetch."""
+        if not self.sealed.is_set():
+            return False
+        self._absorb_repo_failures()
+        with self._lock:
+            return self._n_settled == len(self._records)
+
+    def wait_all(self, timeout: float | None = None) -> bool:
+        """Block until every submitted request settles."""
+        return self._wait_for(
+            lambda: bool(self._records)
+            and self._n_settled == len(self._records), timeout)
+
+    def wait_completed(self, n: int, timeout: float | None = None) -> bool:
+        """Block until at least ``n`` requests have settled — the hook a
+        failure-injection driver uses to kill a pilot MID-trace."""
+        return self._wait_for(lambda: self._n_settled >= n, timeout)
+
+    def _wait_for(self, pred, timeout: float | None) -> bool:
+        """Condition-wait for ``pred`` (evaluated under the pool lock).
+        The wait is bounded to short slices so repo-level settlements that
+        bypass the pool's notifications (the reaper failing a request whose
+        attempt budget died with a lease) are absorbed promptly."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            self._absorb_repo_failures()
+            with self._done_cond:
+                if pred():
+                    return True
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    return False
+                self._done_cond.wait(
+                    timeout=0.25 if remaining is None
+                    else min(0.25, remaining))
+
+    def _absorb_repo_failures(self):
+        """Settle records whose repo task failed without any server
+        reporting it (attempt budget exhausted at lease expiry): without
+        this, finished()/wait_all would hang on requests nobody owns."""
+        for tid in self.repo.failed_tasks():
+            with self._done_cond:
+                rid = self._by_tid.get(tid)
+                rec = self._records.get(rid) if rid is not None else None
+                if (rec is not None and not rec.failed
+                        and rec.tokens is None):
+                    rec.failed = True
+                    self._n_settled += 1
+                    self._done_cond.notify_all()
+
+    def lease_holders(self) -> dict[str, list[int]]:
+        """server_id -> rids it currently holds leases for (the failure
+        driver picks its victim here)."""
+        out: dict[str, list[int]] = {}
+        with self._lock:
+            for (server, rid) in self._leased:
+                out.setdefault(server, []).append(rid)
+        return out
+
+    def results(self) -> dict[int, list]:
+        """rid -> accepted token list, completed requests only."""
+        with self._lock:
+            return {rid: list(rec.tokens)
+                    for rid, rec in self._records.items()
+                    if rec.tokens is not None}
+
+    def records(self) -> dict[int, RequestRecord]:
+        with self._lock:
+            return dict(self._records)
+
+    def stats(self) -> dict:
+        with self._lock:
+            recs = list(self._records.values())
+            completed = [r for r in recs if r.tokens is not None]
+            return {
+                "requests": len(recs),
+                "completed": len(completed),
+                "failed": sum(1 for r in recs if r.failed),
+                "duplicates": self.duplicates,
+                "lost_leases": self.lost_leases,
+                # replays: extra dispatches beyond the first — the price of
+                # the failures, not of the steady state
+                "replays": sum(max(0, r.attempts - 1) for r in recs),
+                "distinct_servers": len({r.server for r in completed}),
+            }
+
+    def close(self):
+        """Unregister the pool and release any server parked in fetch."""
+        self.closed.set()
+        with _POOLS_LOCK:
+            _POOLS.pop(self.name, None)
+        self.repo.kick()

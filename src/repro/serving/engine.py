@@ -57,10 +57,15 @@ per decode step (``d2h_transfers == steps``, asserted in tests).  Block-
 table maintenance is host→device only.
 
 In the pilot system this engine is a first-class *payload*: ``serve``
-tasks late-bind it onto an already-held slice and drive it from a request
-trace in the startup spec (core/images.py + core/wrapper.py); the serve
+tasks late-bind it onto an already-held slice and drive it either from a
+request trace in the startup spec or by leasing requests from a fleet
+pool (core/images.py + core/wrapper.py + serving/dispatch.py); the serve
 heartbeat telemetry now carries ``kv_memory_utilization`` and
-``prefix_hit_rate`` so pilots report cache pressure upstream.
+``prefix_hit_rate`` so pilots report cache pressure upstream.  For the
+fleet path the engine exposes per-request drain/export — ``cancel(rid)``
+evicts a request wherever it lives and returns it for re-dispatch,
+``drain_requests()`` exports everything — and ``warm_install()`` absorbs
+the admission-install compile storm before a server takes leases.
 """
 
 from __future__ import annotations
@@ -298,6 +303,9 @@ class ServeEngine:
         and — paged — a worst-case block reach within the pool) is
         rejected here, explicitly — never silently cropped or deferred
         forever."""
+        if req.rid == -1:
+            raise ValueError("request id -1 is reserved (the engine's "
+                             "free-slot sentinel)")
         plen = admit_length(len(req.prompt), self.max_len)
         if self.kv == "paged":
             end_max = min(plen + req.max_new_tokens, self.max_len)
@@ -509,6 +517,53 @@ class ServeEngine:
         m.active = False
         self._host_pos[si] = 0
 
+    # ------------------------------------------------------------------
+    # per-request drain/export: the fleet dispatcher's re-dispatch hooks
+    # ------------------------------------------------------------------
+
+    def cancel(self, rid: int) -> Request | None:
+        """Remove request ``rid`` wherever it lives — the submit queue, a
+        mid-admission chunked-prefill job, or a live decode slot — and
+        return it for re-dispatch (tokens produced so far intact).  Evicting
+        a slot returns every KV block it owned; the freed slot refills on
+        the next tick.  Returns None when the engine does not hold ``rid``
+        (already completed or never admitted here)."""
+        for i, r in enumerate(self.queue):
+            if r.rid == rid:
+                del self.queue[i]
+                return r
+        # mid-admission jobs claim a slot + blocks before they decode, and
+        # must be checked BEFORE slot_meta so the job entry dies with them
+        for j, job in enumerate(self._jobs):
+            if job.req.rid == rid:
+                del self._jobs[j]
+                self._live.pop(rid, None)
+                self._evict_slot(job.si)
+                return job.req
+        for si, m in enumerate(self.slot_meta):
+            if m.rid == rid:
+                req = self._live.pop(rid, None)
+                self.active = self.active.at[si].set(False)
+                self._evict_slot(si)
+                return req
+        return None
+
+    def drain_requests(self) -> list[Request]:
+        """Evict EVERY queued / mid-admission / decoding request and return
+        them for re-dispatch on another engine (replay-from-prompt).  Used
+        when a serving payload gives its remaining work back instead of
+        letting the leases expire."""
+        rids = dict.fromkeys(
+            [r.rid for r in self.queue]
+            + [j.req.rid for j in self._jobs]
+            + [m.rid for m in self.slot_meta if m.rid != -1])
+        out = []
+        for rid in rids:
+            req = self.cancel(rid)
+            if req is not None:
+                out.append(req)
+        return out
+
     def step(self) -> int:
         """One engine iteration: admit into free slots, advance at most one
         prefill chunk, then one batched decode step.  Returns the number of
@@ -573,6 +628,37 @@ class ServeEngine:
                 jax.block_until_ready(logits)
             if self.cfg.ssm is not None:
                 self._zero_ssm_rows(0)         # undo the warm's row scribble
+
+    def warm_install(self):
+        """Run one REAL admission + decode + eviction per admit bucket over
+        dummy requests, then reset.  ``warm_admission`` stages the jitted
+        prefill/chunk/step executables, but the admission INSTALL path
+        (cache-row merge, paged block scatter, block-table writes, the
+        packed-step unpack) is eager-dispatched — dozens of first-use op
+        compiles that would otherwise land on the first live request's
+        tick.  A fleet server must absorb that storm before taking leases:
+        one stalled tick longer than the lease TTL makes the pool requeue
+        everything the server just fetched."""
+        assert not self._live and not self.queue and not self._jobs, \
+            "warm on an idle engine"
+        for i, pb in enumerate(admit_buckets(self.max_len)):
+            try:
+                # rid -1 is the free-slot sentinel and rejected by submit;
+                # dummies start at -2
+                self.submit(Request(
+                    rid=-2 - i,
+                    prompt=(np.arange(pb) % self.cfg.vocab_size).astype(
+                        np.int32),
+                    max_new_tokens=1))
+            except ValueError:
+                continue                   # bucket exceeds this pool's reach
+        self.run()
+        if self.prefix is not None:
+            # flush the dummies' published blocks: real prompts never match
+            # the synthetic patterns, so leaving them cached would only pin
+            # pool capacity and skew utilization stats from the first tick
+            self.prefix.evict_unreferenced(self.allocator.capacity_blocks)
+        self.reset_metrics()               # also drops the dummy results
 
     def kv_pressure(self) -> dict:
         """Instantaneous cache-pressure sample for heartbeat telemetry:

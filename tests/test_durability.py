@@ -1,0 +1,141 @@
+"""Durability substrate for the fault-tolerant fleet: checkpoint overwrite
+crash windows, restore dtype validation, and the empty-fleet remesh refusal.
+
+Deliberately hypothesis-free (unlike test_substrate.py, which skips as a
+module when hypothesis is absent): these contracts are what the
+requeue-on-pilot-failure story leans on and must run in every environment.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ck
+from repro.runtime.elastic import (NoViableMeshError, plan_remesh,
+                                   viable_data_axis)
+from repro.runtime.mesh import MeshSpec
+
+
+def _tree(s=0):
+    return {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3) + s,
+            "b": jnp.ones((3,), jnp.float32) * (s + 1)}
+
+
+# ---------------------------------------------------------------------------
+# checkpoint overwrite crash window
+# ---------------------------------------------------------------------------
+
+def test_ckpt_overwrite_crash_window_recovers(tmp_path, monkeypatch):
+    """A crash between 'retire the old step_N aside' and 'rename tmp into
+    place' must leave the latest checkpoint restorable: the sweep puts the
+    retired (old, complete) dir back, so latest_step never dangles."""
+    d = str(tmp_path)
+    ck.save(d, 1, _tree(1))
+    ck.save(d, 2, _tree(2))
+    old = ck.restore(d, 2, jax.eval_shape(lambda: _tree(2)))
+
+    real_rename = os.rename
+
+    def crash_after_retire(src, dst):
+        real_rename(src, dst)
+        if ck._RETIRED_PREFIX in os.path.basename(dst):
+            raise RuntimeError("injected crash mid-overwrite")
+
+    monkeypatch.setattr(os, "rename", crash_after_retire)
+    with pytest.raises(RuntimeError, match="injected crash"):
+        ck.save(d, 2, _tree(99))          # overwrite dies between renames
+    monkeypatch.setattr(os, "rename", real_rename)
+    # age the retired dir past the live-writer grace window (the sweep
+    # refuses to reinstate a fresh dir that may belong to an in-flight
+    # save).  The retire time rides in the NAME — rename preserves mtime,
+    # so aging means rewriting the embedded timestamp.
+    (retired,) = [f for f in os.listdir(d)
+                  if f.startswith(ck._RETIRED_PREFIX)]
+    parts = retired[len(ck._RETIRED_PREFIX):].split("_")
+    parts[1] = str(int(parts[1]) - 60_000)
+    aged = ck._RETIRED_PREFIX + "_".join(parts)
+    os.rename(os.path.join(d, retired), os.path.join(d, aged))
+    # LATEST still points at step 2 and step 2 still restores — with the
+    # OLD (complete, valid) content, not a half-written replacement
+    assert ck.latest_step(d) == 2
+    got = ck.restore(d, 2, jax.eval_shape(lambda: _tree(2)))
+    for a, b in zip(jax.tree.leaves(old), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not [f for f in os.listdir(d) if f.startswith(ck._RETIRED_PREFIX)]
+    # the recovered tree saves over cleanly afterwards
+    ck.save(d, 2, _tree(7))
+    assert ck.latest_step(d) == 2
+
+
+def test_ckpt_fresh_retired_dir_is_left_for_its_writer(tmp_path, monkeypatch):
+    """A retired dir YOUNGER than the grace window may belong to a live
+    writer mid-overwrite: the sweep must not reinstate it (that would make
+    the writer's rename(tmp, final) collide)."""
+    d = str(tmp_path)
+    ck.save(d, 1, _tree(1))
+    ck.save(d, 2, _tree(2))
+    real_rename = os.rename
+
+    def crash_after_retire(src, dst):
+        real_rename(src, dst)
+        if ck._RETIRED_PREFIX in os.path.basename(dst):
+            raise RuntimeError("injected crash mid-overwrite")
+
+    monkeypatch.setattr(os, "rename", crash_after_retire)
+    with pytest.raises(RuntimeError):
+        ck.save(d, 2, _tree(99))
+    monkeypatch.setattr(os, "rename", real_rename)
+    # fresh retired dir: step_2 is gone and NOT reinstated yet, so the
+    # latest restorable checkpoint is step 1 — stale but valid, never a
+    # dangling pointer or a half-written dir
+    assert ck.latest_step(d) == 1
+    ck.restore(d, 1, jax.eval_shape(lambda: _tree(1)))
+
+
+def test_ckpt_retired_leftover_is_garbage_collected(tmp_path):
+    """Crash AFTER the replacement landed: the retired dir is stale garbage
+    and the next sweep removes it without touching the new step."""
+    d = str(tmp_path)
+    ck.save(d, 3, _tree(3))
+    os.makedirs(os.path.join(d, f"{ck._RETIRED_PREFIX}3_999_999"))
+    assert ck.latest_step(d) == 3                  # sweep ran
+    assert not [f for f in os.listdir(d) if f.startswith(ck._RETIRED_PREFIX)]
+
+
+def test_ckpt_restore_dtype_mismatch_raises(tmp_path):
+    d = str(tmp_path)
+    ck.save(d, 1, {"w": jnp.ones((2, 2), jnp.float32)})
+    like = {"w": jax.ShapeDtypeStruct((2, 2), jnp.bfloat16)}
+    with pytest.raises(ValueError, match="dtype"):
+        ck.restore(d, 1, like)
+    got = ck.restore(d, 1, like, cast=True)        # the explicit opt-in
+    assert np.dtype(got["w"].dtype) == np.dtype(jnp.bfloat16)
+    np.testing.assert_array_equal(np.asarray(got["w"], np.float32),
+                                  np.ones((2, 2), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# empty-fleet remesh refusal
+# ---------------------------------------------------------------------------
+
+def test_empty_fleet_is_an_explicit_no_viable_mesh():
+    """A fleet that lost every pilot must surface NoViableMeshError — not a
+    bogus 1-slice plan from viable_data_axis(0, ...) == 1."""
+    with pytest.raises(NoViableMeshError):
+        viable_data_axis(0, 256)
+    with pytest.raises(NoViableMeshError):
+        viable_data_axis(-3, 256)
+    with pytest.raises(NoViableMeshError):
+        plan_remesh(MeshSpec((4, 4), ("data", "model")), 0, 4, 256)
+    # NoViableMeshError is a ValueError: existing callers' handling holds
+    with pytest.raises(ValueError):
+        plan_remesh(None, 0, 16, 256)
+    # the boundary above the refusal: one live slice still plans
+    plan = plan_remesh(None, 1, 4, 256)
+    assert plan.new_mesh.shape == (1, 4)
+    assert viable_data_axis(1, 256) == 1

@@ -289,6 +289,50 @@ def test_timerwheel_periodic():
     t.cancel()
 
 
+def test_timerwheel_callback_errors_are_visible_not_swallowed():
+    """A raising callback must land on the wheel's error ledger (a silently
+    dead lease reaper would disable lease expiry fleet-wide), a raising
+    PERIODIC timer stays scheduled, and other timers keep being serviced."""
+    wheel = TimerWheel("test-wheel-err")
+    hits = threading.Semaphore(0)
+
+    def boom():
+        raise RuntimeError("kaboom")
+
+    wheel.call_later(0.0, boom, name="bad-oneshot")
+    bad = wheel.call_periodic(0.01, boom, name="bad-periodic")
+    good = wheel.call_periodic(0.01, hits.release)
+    for _ in range(3):
+        assert hits.acquire(timeout=5.0)     # wheel survived the raisers
+    bad.cancel()
+    good.cancel()
+    assert wheel.error_count >= 2            # one-shot + >=1 periodic firing
+    stats = wheel.stats()
+    assert stats["errors"] == wheel.error_count
+    names = [n for n, _ in stats["last_errors"]]
+    assert "bad-oneshot" in names and "bad-periodic" in names
+    assert any("kaboom" in msg for _, msg in stats["last_errors"])
+
+
+def test_scheduler_metrics_expose_timer_errors():
+    wheel = TimerWheel("test-wheel-metrics")
+    repo = TaskRepo(wheel=wheel)
+    assert repo.scheduler_metrics()["timer_errors"] == 0
+    fired = threading.Event()
+
+    def boom():
+        fired.set()
+        raise RuntimeError("reaper crash")
+
+    wheel.call_later(0.0, boom, name="crashing-reaper")
+    assert fired.wait(5.0)
+    deadline = time.monotonic() + 5.0
+    while (repo.scheduler_metrics()["timer_errors"] == 0
+           and time.monotonic() < deadline):
+        time.sleep(0.005)
+    assert repo.scheduler_metrics()["timer_errors"] == 1
+
+
 # ---------------------------------------------------------------------------
 # monitor EWMA eviction (leak fix)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,271 @@
+"""Fleet serve pool: per-request leases, requeue-on-pilot-failure,
+exactly-once completion, and the engine's per-request drain/cancel hooks.
+
+The dispatcher unit tests are pure threading (fast lane); everything that
+builds a model engine or spawns pilots carries @pytest.mark.slow.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.serving.dispatch import FleetDispatcher, get_pool
+
+
+def _entries(n, plen=3):
+    return [{"rid": i, "prompt": list(range(1, 1 + plen)),
+             "max_new_tokens": 4} for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# dispatcher contracts (fast lane)
+# ---------------------------------------------------------------------------
+
+def test_pool_registry_and_close():
+    pool = FleetDispatcher(name="test-pool-reg")
+    assert get_pool("test-pool-reg") is pool
+    pool.close()
+    assert get_pool("test-pool-reg") is None
+
+
+def test_requeue_on_silent_server_death():
+    """A server that stops renewing (died) loses its leases to the repo's
+    reaper; a survivor parked in fetch is handed the requeued requests and
+    completes every one exactly once."""
+    pool = FleetDispatcher(lease_ttl=0.15)
+    try:
+        pool.submit_trace(_entries(3))
+        got_a = pool.fetch("A", max_n=2)
+        assert [e["rid"] for e in got_a] == [0, 1]
+        assert pool.complete("A", 0, [7, 8])
+        # A dies silently.  B picks up the remainder, including A's
+        # expired rid 1, without anyone polling.
+        done = set()
+        deadline = time.monotonic() + 10.0
+        while len(done) < 2 and time.monotonic() < deadline:
+            for e in pool.fetch("B", max_n=2, timeout=5.0):
+                pool.complete("B", e["rid"], [e["rid"]])
+                done.add(e["rid"])
+        assert done == {1, 2}
+        assert pool.wait_all(timeout=5.0)
+        s = pool.stats()
+        assert s["completed"] == 3 and s["replays"] >= 1
+        assert pool.records()[1].server == "B"      # replayed on the survivor
+    finally:
+        pool.close()
+
+
+def test_first_completion_wins_drops_duplicates():
+    """The original server racing a replayed copy: one accepted result, one
+    counted duplicate — never two completions for a request id."""
+    pool = FleetDispatcher(lease_ttl=0.1)
+    try:
+        pool.submit_trace(_entries(1))
+        (a,) = pool.fetch("A", max_n=1)
+        time.sleep(0.3)                       # A's lease expires
+        (b,) = pool.fetch("B", max_n=1, timeout=5.0)
+        assert b["rid"] == a["rid"] == 0 and b["attempt"] == 2
+        assert pool.complete("B", 0, [1, 2, 3]) is True
+        assert pool.complete("A", 0, [1, 2, 3]) is False
+        assert pool.results() == {0: [1, 2, 3]}
+        assert pool.records()[0].server == "B"
+        assert pool.stats()["duplicates"] == 1
+    finally:
+        pool.close()
+
+
+def test_renew_piggybacks_progress_and_reports_lost_leases():
+    pool = FleetDispatcher(lease_ttl=0.1)
+    try:
+        pool.submit_trace(_entries(1))
+        pool.fetch("A", max_n=1)
+        assert pool.renew("A", {0: 2}) == []          # still held
+        assert pool.records()[0].progress == 2
+        time.sleep(0.3)                               # expire
+        pool.fetch("B", max_n=1, timeout=5.0)         # re-leased elsewhere
+        assert pool.renew("A", {0: 5}) == [0]         # A must cancel rid 0
+        assert pool.stats()["lost_leases"] == 1
+        assert pool.renew("B", {0: 1}) == []
+    finally:
+        pool.close()
+
+
+def test_release_requeues_immediately():
+    """A graceful hand-back does not wait out the lease TTL."""
+    pool = FleetDispatcher(lease_ttl=60.0)            # TTL can't be the path
+    try:
+        pool.submit_trace(_entries(1))
+        pool.fetch("A", max_n=1)
+        assert pool.fetch("B", max_n=1) == []         # leased away
+        pool.release("A", [0])
+        got = pool.fetch("B", max_n=1, timeout=5.0)
+        assert [e["rid"] for e in got] == [0]
+    finally:
+        pool.close()
+
+
+def test_reject_settles_as_failed_after_max_attempts():
+    """An unservable request (e.g. prompt beyond every engine's max_len)
+    must not ping-pong forever — it retries max_attempts times and then
+    settles as failed, so wait_all still returns."""
+    pool = FleetDispatcher(lease_ttl=60.0, max_attempts=2)
+    try:
+        pool.submit_trace(_entries(1))
+        for _ in range(2):
+            (e,) = pool.fetch("A", max_n=1, timeout=5.0)
+            pool.reject("A", e["rid"])
+        assert pool.fetch("A", max_n=1) == []
+        assert pool.wait_all(timeout=5.0)
+        s = pool.stats()
+        assert s["failed"] == 1 and s["completed"] == 0
+    finally:
+        pool.close()
+
+
+def test_wait_servers_barrier():
+    pool = FleetDispatcher()
+    try:
+        assert pool.wait_servers(1, timeout=0.05) is False
+        pool.announce("A")
+        assert pool.wait_servers(1, timeout=5.0)
+    finally:
+        pool.close()
+
+
+# ---------------------------------------------------------------------------
+# engine per-request drain/cancel (model-level, slow lane)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_engine_cancel_returns_request_and_frees_blocks():
+    import jax
+    from repro.configs.base import get_smoke_config
+    from repro.models.api import build_model
+    from repro.serving.engine import Request, ServeEngine
+
+    cfg = get_smoke_config("smollm-360m")
+    params = build_model(cfg).init(jax.random.key(0))
+
+    def req(rid, plen, mnt):
+        rng = np.random.default_rng(rid)
+        return Request(rid=rid, max_new_tokens=mnt,
+                       prompt=rng.integers(0, cfg.vocab_size,
+                                           size=plen).astype(np.int32))
+
+    solo = ServeEngine(cfg, params, slots=2, max_len=64)
+    solo.submit(req(1, 9, 8))
+    solo.run()
+    solo_tokens = tuple(solo.done[1].tokens)
+
+    eng = ServeEngine(cfg, params, slots=2, max_len=64)
+    free0 = eng.allocator.available_blocks
+    eng.submit(req(0, 7, 30))
+    eng.submit(req(1, 9, 8))
+    eng.submit(req(2, 5, 4))                      # queued behind the slots
+    for _ in range(3):
+        eng.step()
+    # cancel a QUEUED request: no slot was touched
+    assert eng.cancel(2).rid == 2
+    # cancel a LIVE slot mid-decode: request comes back with its tokens,
+    # its blocks return to the pool, and the neighbor's stream is untouched
+    got = eng.cancel(0)
+    assert got is not None and len(got.tokens) >= 1
+    assert eng.cancel(0) is None                  # already gone
+    eng.run()
+    assert tuple(eng.done[1].tokens) == solo_tokens
+    assert 1 in eng.done and 0 not in eng.done and 2 not in eng.done
+    assert eng.allocator.available_blocks == free0   # every block returned
+
+
+@pytest.mark.slow
+def test_engine_drain_requests_exports_everything():
+    import jax
+    from repro.configs.base import get_smoke_config
+    from repro.models.api import build_model
+    from repro.serving.engine import Request, ServeEngine
+
+    cfg = get_smoke_config("smollm-360m")
+    params = build_model(cfg).init(jax.random.key(0))
+    eng = ServeEngine(cfg, params, slots=2, max_len=64)
+    for rid in range(3):
+        rng = np.random.default_rng(rid)
+        eng.submit(Request(rid=rid, max_new_tokens=20,
+                           prompt=rng.integers(0, cfg.vocab_size,
+                                               size=6).astype(np.int32)))
+    for _ in range(2):
+        eng.step()
+    out = eng.drain_requests()
+    assert sorted(r.rid for r in out) == [0, 1, 2]
+    assert not eng._live and not eng.queue and not eng._jobs
+    assert all(m.rid == -1 for m in eng.slot_meta)
+    assert eng.allocator.available_blocks == eng.allocator.capacity_blocks
+
+
+# ---------------------------------------------------------------------------
+# the headline scenario: kill a serving pilot mid-trace (slow lane)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_fleet_requeue_on_pilot_failure():
+    """Kill 1 of 3 serving pilots mid-trace: every request completes exactly
+    once on a survivor, and the completed tokens match a no-failure run
+    bitwise (replay-from-prompt over identical weights is deterministic)."""
+    from repro.core.images import ExecutableRegistry
+    from repro.launch.serve import serve_fleet
+
+    registry = ExecutableRegistry()
+    ok = serve_fleet("smollm-360m", 10, 3, slots=2, max_len=64,
+                     fail_at=None, lease_ttl=0.5, registry=registry)
+    failed = serve_fleet("smollm-360m", 10, 3, slots=2, max_len=64,
+                         fail_at=2, lease_ttl=0.5, registry=registry)
+    assert ok["completed"] == 10 and ok["replays"] == 0
+    assert failed["completed"] == 10
+    assert len(failed["failed_pilots"]) == 1
+    # exactly once: 10 accepted results, every duplicate dropped visibly
+    assert sorted(failed["results"]) == list(range(10))
+    assert failed["results"] == ok["results"]
+    assert failed["replays"] >= 1            # the dead pilot's in-flight work
+
+
+@pytest.mark.slow
+def test_fleet_scale_up_joins_mid_trace():
+    """A pilot provisioned AFTER serving started leases into the same pool
+    and completes part of the trace — late-binding capacity growth without
+    touching running requests."""
+    from repro.core.cluster import ClusterSim
+    from repro.core.images import PayloadImage
+    from repro.core.pilot import PilotConfig
+    from repro.launch.serve import make_trace
+    from repro.configs.base import get_smoke_config
+
+    cfg = get_smoke_config("smollm-360m")
+    sim = ClusterSim()
+    pool = FleetDispatcher(lease_ttl=1.0)
+    try:
+        img = PayloadImage("smollm-360m", "smoke", "serve")
+        fleet = sim.spawn_fleet(1, PilotConfig(max_payloads=2, idle_grace=0.5))
+        fleet.submit_servers(img, pool.name, n=1,
+                             spec={"slots": 2, "max_len": 64})
+        assert pool.wait_servers(1, timeout=300.0)
+        trace = make_trace(cfg.vocab_size, 16, max_len=64, seed=1)
+        pool.submit_trace(trace[:4])
+        assert pool.wait_completed(2, timeout=120.0)
+        fleet.scale_up(1)
+        fleet.submit_servers(img, pool.name, n=1,
+                             spec={"slots": 2, "max_len": 64})
+        # feed the bulk of the trace only once the joiner is up, so both
+        # servers demonstrably hold leases side by side
+        assert pool.wait_servers(2, timeout=300.0)
+        pool.submit_trace(trace[4:])
+        pool.seal()
+        assert pool.wait_all(timeout=300.0)
+        stats = pool.stats()
+        assert stats["completed"] == 16
+        assert stats["distinct_servers"] == 2     # the joiner did real work
+    finally:
+        pool.close()
+        fleet.drain_all()
+        fleet.join_all(30.0)

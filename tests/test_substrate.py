@@ -69,6 +69,11 @@ def test_ckpt_no_tmp_leftovers(tmp_path):
     assert not [f for f in os.listdir(d) if f.startswith(".tmp")]
 
 
+# checkpoint crash-window + dtype-validation tests live in
+# tests/test_durability.py (hypothesis-free, so they run even where this
+# module skips)
+
+
 # ---------------------------------------------------------------------------
 # int8 error-feedback compression
 # ---------------------------------------------------------------------------
@@ -130,6 +135,10 @@ def test_plan_remesh_shrink_and_noop():
 def test_plan_remesh_no_slices_raises():
     with pytest.raises(ValueError):
         plan_remesh(None, 0, 16, 256)
+
+
+# the empty-fleet NoViableMeshError boundary tests live in
+# tests/test_durability.py (hypothesis-free)
 
 
 # ---------------------------------------------------------------------------
