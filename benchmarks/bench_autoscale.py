@@ -1,0 +1,206 @@
+"""Autoscaling benchmark: bursty demand vs a peak-sized static fleet.
+
+One request trace is replayed as a WALL-CLOCK arrival schedule — a square
+wave (bursts of Poisson arrivals separated by quiet gaps) — against two
+fleets serving the same FleetDispatcher pool machinery:
+
+* ``static`` — n_peak pilots provisioned up front and held for the whole
+  run: the fleet a peak-sizing capacity plan pays for;
+* ``autoscaled`` — the demand-driven control loop (``core/autoscaler.py``)
+  starts small, grows from queue pressure (prefetching the image so new
+  pilots bind warm), and drains idle pilots in the gaps.
+
+Acceptance gates (the run RAISES on violation):
+
+* zero lost or duplicated requests — 100% completion and every token
+  stream BITWISE equal to a single-engine baseline (greedy decode over
+  identical weights is deterministic, so requeue/drain churn must not
+  change a single token);
+* the autoscaled fleet consumes <= 60% of the static fleet's
+  pilot-seconds (slice-holding wall time, the resource bill);
+* autoscaled p99 pool-level TTFT <= 3x the static fleet's (elasticity
+  must not wreck the tail);
+* zero scale-flapping: no consecutive opposite-direction decisions inside
+  one cooldown window (``FleetAutoscaler.flaps()``).
+
+``run_smoke`` is the CI lane: a single burst into a 1-pilot fleet must
+ramp to the policy target within the cooldown budget, and after the trace
+settles the loop must reclaim EVERY pilot (scale-to-zero on an empty
+trace) — plus the completion/token gates above.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import get_smoke_config
+from repro.core.autoscaler import AutoscalePolicy
+from repro.core.images import ExecutableRegistry
+from repro.launch.serve import (make_bursty_schedule, make_trace,
+                                serve_fleet_schedule)
+from repro.models.api import build_model
+from repro.serving.engine import ServeEngine
+
+ARCH = "smollm-360m"
+MAX_LEN = 64
+SLOTS = 2
+LEASE_TTL = 0.5
+
+
+def _baseline_tokens(cfg, trace, slots: int) -> dict:
+    """One pre-warmed engine, the whole trace at once — the bitwise token
+    reference every fleet scenario must reproduce."""
+    params = build_model(cfg).init(jax.random.key(0))
+    eng = ServeEngine(cfg, params, slots=slots, max_len=MAX_LEN)
+    eng.warm_admission()
+    eng.warm_install()
+    eng.run_trace([{**e, "at_step": 0} for e in trace])
+    return {rid: list(r.tokens) for rid, r in eng.done.items()}
+
+
+def _check_tokens(label: str, n_requests: int, out: dict, base: dict):
+    if out["completed"] != n_requests or out["failed"]:
+        raise RuntimeError(
+            f"{label}: completed {out['completed']}/{n_requests} "
+            f"(failed {out['failed']}) — scaling churn lost requests")
+    for rid, toks in out["results"].items():
+        if list(toks) != list(base[rid]):
+            raise RuntimeError(
+                f"{label}: rid {rid} token stream diverged from the "
+                f"single-engine baseline (scaling churn corrupted a "
+                f"request)")
+
+
+def _check_no_flaps(out: dict):
+    flaps = out["autoscale"]["flaps"]
+    if flaps:
+        raise RuntimeError(
+            f"autoscaler flapped: {flaps} consecutive opposite-direction "
+            f"decisions inside one cooldown window (gate: 0)")
+
+
+def run(n_peak: int = 4, bursts: int = 3, burst_n: int = 16
+        ) -> list[tuple[str, float, str]]:
+    cfg = get_smoke_config(ARCH)
+    n_requests = bursts * burst_n
+    trace = make_trace(cfg.vocab_size, n_requests, max_len=MAX_LEN, seed=0)
+    base = _baseline_tokens(cfg, trace, n_peak * SLOTS)
+    schedule = make_bursty_schedule(trace, bursts=bursts, burst_s=0.6,
+                                    gap_s=6.0, seed=0)
+    registry = ExecutableRegistry()      # shared: both fleets reuse compiles
+
+    static = serve_fleet_schedule(
+        ARCH, schedule, slots=SLOTS, max_len=MAX_LEN, n_pilots=n_peak,
+        lease_ttl=LEASE_TTL, registry=registry)
+    _check_tokens("static", n_requests, static, base)
+
+    policy = AutoscalePolicy(
+        min_pilots=1, max_pilots=n_peak, slots_per_pilot=SLOTS,
+        interval=0.15, up_cooldown=0.4, down_cooldown=1.5,
+        down_stable_ticks=4)
+    auto = serve_fleet_schedule(
+        ARCH, schedule, slots=SLOTS, max_len=MAX_LEN, policy=policy,
+        initial_pilots=1, lease_ttl=LEASE_TTL, registry=registry,
+        settle_to_zero=False)
+    _check_tokens("autoscaled", n_requests, auto, base)
+    _check_no_flaps(auto)
+
+    ps_ratio = (auto["pilot_seconds"] / static["pilot_seconds"]
+                if static["pilot_seconds"] else float("inf"))
+    if ps_ratio > 0.6:
+        raise RuntimeError(
+            f"autoscaled fleet consumed {ps_ratio:.2f}x the static fleet's "
+            f"pilot-seconds (gate: <= 0.6 — scaling saved too little)")
+    ttft_ratio = (auto["ttft_p99_s"] / static["ttft_p99_s"]
+                  if static["ttft_p99_s"] else float("inf"))
+    if ttft_ratio > 3.0:
+        raise RuntimeError(
+            f"autoscaled p99 TTFT is {ttft_ratio:.2f}x the static fleet's "
+            f"(gate: <= 3x — ramps landed on the latency path)")
+
+    a = auto["autoscale"]
+    detail = (f"{ARCH}, {bursts}x{burst_n} reqs burst/gap 0.6s/6s, peak "
+              f"{n_peak} pilots x {SLOTS} slots")
+    return [
+        ("autoscale_completed", float(auto["completed"]),
+         f"of {n_requests} (token streams bitwise == single-engine "
+         f"baseline; raises otherwise)"),
+        ("autoscale_pilot_seconds", auto["pilot_seconds"], detail),
+        ("autoscale_static_pilot_seconds", static["pilot_seconds"],
+         f"peak-sized static fleet, same schedule"),
+        ("autoscale_pilot_seconds_ratio", ps_ratio,
+         "autoscaled / static slice-holding cost (gate: <= 0.6)"),
+        ("autoscale_ttft_p99_s", auto["ttft_p99_s"],
+         "pool-level TTFT incl. ramp delay"),
+        ("autoscale_static_ttft_p99_s", static["ttft_p99_s"],
+         "peak-sized static fleet"),
+        ("autoscale_ttft_p99_ratio", ttft_ratio,
+         "autoscaled / static p99 TTFT (gate: <= 3)"),
+        ("autoscale_scale_ups", float(a["scale_ups"]),
+         f"{a['pilots_added']} pilots added across ramps"),
+        ("autoscale_scale_downs", float(a["scale_downs"]),
+         f"{a['pilots_drained']} pilots drained in the gaps"),
+        ("autoscale_peak_pilots", float(a["peak_live"]),
+         f"of {n_peak} allowed"),
+        ("autoscale_flaps", float(a["flaps"]),
+         "opposite-direction decisions inside one cooldown (gate: 0)"),
+        ("autoscale_duplicates", float(auto["duplicates"]),
+         "completions dropped by first-wins (drain churn never "
+         "double-delivers)"),
+        ("autoscale_replays", float(auto["replays"]),
+         "re-dispatches: drained pilots' released requests"),
+    ]
+
+
+def run_smoke(n_requests: int = 16, n_peak: int = 3
+              ) -> list[tuple[str, float, str]]:
+    """CI smoke: one burst at t=0 into a 1-pilot fleet.  Gates: the ramp
+    1->target completes within the cooldown budget, every request
+    completes with bitwise-baseline tokens, no flapping, and after the
+    trace drains the loop scales to ZERO (all pilots reclaimed, members
+    and ClusterSim registries pruned)."""
+    cfg = get_smoke_config(ARCH)
+    trace = make_trace(cfg.vocab_size, n_requests, max_len=MAX_LEN, seed=0)
+    base = _baseline_tokens(cfg, trace, n_peak * SLOTS)
+    registry = ExecutableRegistry()
+    policy = AutoscalePolicy(
+        min_pilots=0, max_pilots=n_peak, slots_per_pilot=SLOTS,
+        interval=0.1, up_cooldown=0.3, down_cooldown=0.8,
+        down_stable_ticks=3)
+    schedule = [(0.0, e) for e in trace]      # the whole burst at once
+    out = serve_fleet_schedule(
+        ARCH, schedule, slots=SLOTS, max_len=MAX_LEN, policy=policy,
+        initial_pilots=1, lease_ttl=LEASE_TTL, registry=registry,
+        settle_to_zero=True)
+    _check_tokens("autoscale_smoke", n_requests, out, base)
+    _check_no_flaps(out)
+
+    ups = [d for d in out["decisions"] if d["direction"] == "up"]
+    if not ups:
+        raise RuntimeError(
+            "a burst into a 1-pilot fleet produced no scale-up decision")
+    ramp_s = ups[-1]["t"] - out["t_start"]
+    budget = len(ups) * policy.up_cooldown + 2.0
+    if ramp_s > budget:
+        raise RuntimeError(
+            f"ramp to steady state took {ramp_s:.2f}s — outside the "
+            f"cooldown budget ({len(ups)} up decisions x "
+            f"{policy.up_cooldown}s + 2s slack = {budget:.2f}s)")
+    if not out.get("scaled_to_zero"):
+        raise RuntimeError(
+            "scale-to-zero failed: pilots were not reclaimed after the "
+            "trace drained")
+    return [
+        ("autoscale_smoke_completed", float(out["completed"]),
+         f"of {n_requests}, tokens bitwise == single-engine baseline"),
+        ("autoscale_smoke_ramp_s", ramp_s,
+         f"burst -> last scale-up decision (budget {budget:.1f}s)"),
+        ("autoscale_smoke_pilots_added", float(
+            out["autoscale"]["pilots_added"]),
+         f"1 -> up to {n_peak} pilots on queue pressure"),
+        ("autoscale_smoke_scaled_to_zero", 1.0,
+         f"all pilots reclaimed {out['scale_to_zero_s']:.2f}s after the "
+         f"trace drained (raises otherwise)"),
+        ("autoscale_smoke_flaps", float(out["autoscale"]["flaps"]),
+         "gate: 0"),
+    ]

@@ -12,9 +12,9 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_bind, bench_fleet_serve, bench_lifecycle,
-                        bench_monitor, bench_scheduler, bench_serving,
-                        bench_train, roofline)
+from benchmarks import (bench_autoscale, bench_bind, bench_fleet_serve,
+                        bench_lifecycle, bench_monitor, bench_scheduler,
+                        bench_serving, bench_train, roofline)
 
 SUITES = {
     "bind": bench_bind.run,            # paper Fig. 4: late-binding cost
@@ -25,6 +25,8 @@ SUITES = {
     "serving_paged": bench_serving.run_smoke,  # paged-vs-dense CI smoke
     "fleet_serve": bench_fleet_serve.run,      # requeue-on-pilot-failure
     "fleet_serve_smoke": bench_fleet_serve.run_smoke,  # CI failure smoke
+    "autoscale": bench_autoscale.run,  # bursty demand vs peak-sized fleet
+    "autoscale_smoke": bench_autoscale.run_smoke,  # ramp + scale-to-zero CI
     "train": bench_train.run,          # payload-side training numbers
     "roofline": roofline.run,          # dry-run roofline aggregates
 }

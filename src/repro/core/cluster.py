@@ -17,6 +17,8 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import threading
+import time
+from collections import deque
 from typing import Optional
 
 import jax
@@ -26,6 +28,20 @@ from repro.core.pilot import Pilot, PilotConfig, TERMINAL_STATES
 from repro.core.taskrepo import TaskRepo
 from repro.runtime.elastic import plan_remesh
 from repro.runtime.mesh import MeshSpec
+
+
+def _pilot_record(p: "Pilot") -> dict:
+    """What survives a reaped pilot: identity, the full state-machine path,
+    and the accounting the autoscaler benchmarks charge against."""
+    return {
+        "pilot_id": p.pilot_id,
+        "slice_id": p.slice.slice_id,
+        "state": p.state,
+        "state_log": list(p.state_log),
+        "payloads_run": p.payloads_run,
+        "error": p.error,
+        "pilot_seconds": p.pilot_seconds(),
+    }
 
 
 @dataclasses.dataclass
@@ -49,6 +65,8 @@ class ClusterSim:
         self._lock = threading.Lock()
         self.slices: dict[int, PilotSlice] = {}
         self.pilots: dict[int, Pilot] = {}
+        # reaped (terminal, thread-joined) pilots: bounded, state_log kept
+        self.pilot_history: deque[dict] = deque(maxlen=512)
 
     # ---- provisioning -------------------------------------------------------
 
@@ -104,7 +122,21 @@ class ClusterSim:
 
     # ---- elasticity ------------------------------------------------------------
 
+    def reap_pilots(self) -> int:
+        """Prune pilots that reached a terminal state AND whose thread has
+        exited.  Without reaping, ``pilots`` (and every ``live_pilots``
+        scan) grows without bound across scale_up/scale_down cycles; the
+        reaped pilots' ``state_log`` survives in the bounded
+        ``pilot_history``."""
+        with self._lock:
+            dead = [(sid, p) for sid, p in self.pilots.items() if p.done()]
+            for sid, p in dead:
+                del self.pilots[sid]
+                self.pilot_history.append(_pilot_record(p))
+        return len(dead)
+
     def live_pilots(self) -> list[Pilot]:
+        self.reap_pilots()
         with self._lock:
             return [p for p in self.pilots.values()
                     if p.state not in TERMINAL_STATES]
@@ -141,7 +173,10 @@ class Fleet:
         self.config = config
         self.labels = labels
         self.mesh = mesh
-        self.members: list[Pilot] = []
+        self._lock = threading.Lock()     # members churns from autoscaler
+        self.members: list[Pilot] = []    # and driver threads concurrently
+        self.history: deque[dict] = deque(maxlen=512)   # reaped members
+        self._retired_seconds = 0.0
 
     # ---- scaling ------------------------------------------------------------
 
@@ -153,7 +188,8 @@ class Fleet:
         started = []
         for s in self.sim.provision(n, labels=self.labels, mesh=self.mesh):
             started.append(self.sim.spawn_pilot(s, self.config))
-        self.members.extend(started)
+        with self._lock:
+            self.members.extend(started)
         return started
 
     def submit_servers(self, image, pool_name: str, *, n: int | None = None,
@@ -175,19 +211,59 @@ class Fleet:
     def scale_down(self, n: int) -> list[Pilot]:
         """Gracefully drain the n most recently started live pilots.
         Pilots already draining don't count — back-to-back calls shed
-        distinct pilots."""
-        victims = [p for p in reversed(self.members)
+        distinct pilots.  A draining SERVING pilot releases its leased
+        requests back to the pool before exit (no lease-TTL wait): see
+        ``Pilot.drain`` / ``wrapper._fleet_serve_loop``."""
+        with self._lock:
+            members = list(self.members)
+        victims = [p for p in reversed(members)
                    if p.state not in TERMINAL_STATES
                    and not p.drain_flag.is_set()][:n]
         for p in victims:
             p.drain()
         return victims
 
+    def reap(self) -> int:
+        """Move terminal, thread-joined members into the bounded history
+        (state_log preserved) and prune the ClusterSim registry too.  Runs
+        implicitly on every ``live()``/``size()`` scan, so scale churn never
+        grows the member list without bound."""
+        with self._lock:
+            done = [p for p in self.members if p.done()]
+            for p in done:
+                self.members.remove(p)
+                self.history.append(_pilot_record(p))
+                self._retired_seconds += p.pilot_seconds()
+        self.sim.reap_pilots()
+        return len(done)
+
     def live(self) -> list[Pilot]:
-        return [p for p in self.members if p.state not in TERMINAL_STATES]
+        self.reap()
+        with self._lock:
+            return [p for p in self.members if p.state not in TERMINAL_STATES]
 
     def size(self) -> int:
         return len(self.live())
+
+    def draining(self) -> int:
+        """Live members already asked to drain — capacity that is still
+        counted by ``size()`` but is on its way out.  The autoscaler sizes
+        against ``size() - draining()`` so a mid-drain victim is never
+        double-counted (back-to-back scale_downs would overshoot)."""
+        with self._lock:
+            return sum(1 for p in self.members
+                       if p.drain_flag.is_set()
+                       and p.state not in TERMINAL_STATES)
+
+    def pilot_seconds(self, now: float | None = None) -> float:
+        """Total slice-holding wall time across the fleet's whole life —
+        the resource-consumption metric autoscaling is judged on (reaped
+        members included)."""
+        now = time.monotonic() if now is None else now
+        with self._lock:
+            total = self._retired_seconds
+            members = list(self.members)
+        return total + sum(p.pilot_seconds(now) for p in members)
 
     # ---- lifecycle ----------------------------------------------------------
 
@@ -196,9 +272,13 @@ class Fleet:
         return self.sim.repo.wait_drained(timeout)
 
     def drain_all(self):
-        for p in self.members:
+        with self._lock:
+            members = list(self.members)
+        for p in members:
             p.drain()
 
     def join_all(self, timeout: float = 10.0):
-        for p in self.members:
+        with self._lock:
+            members = list(self.members)
+        for p in members:
             p.join(timeout)

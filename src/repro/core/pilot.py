@@ -110,6 +110,9 @@ class Pilot:
         self.payloads_run = 0
         self.history: list[dict] = []
         self._thread: threading.Thread | None = None
+        # wall-clock accounting for the autoscaler's pilot-seconds metric
+        self.t_started: float | None = None
+        self.t_ended: float | None = None
 
     # ---- state machine -------------------------------------------------
 
@@ -143,9 +146,29 @@ class Pilot:
         self.repo.kick()                 # parked in match_wait
 
     def drain(self):
-        """Graceful drain: finish the current payload, then stop fetching."""
+        """Graceful drain: stop fetching new work, and ask the CURRENT
+        payload to wind down.  Batch payloads ignore the drain event and
+        finish normally; a fleet-serve payload honors it by releasing its
+        leased requests back to the pool (immediate requeue, no lease-TTL
+        wait) and exiting — the scale-down path."""
         self.drain_flag.set()
+        self.proctable.drain_uid(PAYLOAD_UID)
         self.repo.kick()                 # wake an idle pilot immediately
+
+    def done(self) -> bool:
+        """Terminal state reached AND the pilot thread has exited — the
+        condition under which Fleet/ClusterSim may reap this pilot."""
+        return (self.state in TERMINAL_STATES
+                and (self._thread is None or not self._thread.is_alive()))
+
+    def pilot_seconds(self, now: float | None = None) -> float:
+        """Wall-clock seconds this pilot has held (or held) its slice."""
+        if self.t_started is None:
+            return 0.0
+        end = self.t_ended
+        if end is None:
+            end = now if now is not None else time.monotonic()
+        return max(0.0, end - self.t_started)
 
     def _check_fail(self):
         if self.fail_flag.is_set():
@@ -157,6 +180,7 @@ class Pilot:
     # ------------------------------------------------------------------
 
     def run(self):
+        self.t_started = time.monotonic()
         try:
             self._step_a_start()
             while self.payloads_run < self.config.max_payloads:
@@ -183,6 +207,7 @@ class Pilot:
         finally:
             if self.state != "failed":
                 self._step_h_terminate()
+            self.t_ended = time.monotonic()
 
     # ---- (a) ----------------------------------------------------------
 
@@ -345,6 +370,9 @@ class Pilot:
     # ---- (h) ----------------------------------------------------------
 
     def _step_h_terminate(self):
+        # drop liveness/telemetry state at the repo: a terminated pilot must
+        # not linger in the heartbeat map (or the straggler median) forever
+        self.repo.evict_pilot(self.pilot_id)
         self.proctable.unsubscribe(self._on_proc_event)
         if self.executor is not None:
             self.executor.close()        # stop the container-runtime thread

@@ -31,6 +31,11 @@ class ProcEntry:
     name: str
     started: float
     stop: threading.Event
+    # graceful wind-down request (SIGTERM-with-grace analogue): a payload
+    # that honors it stops taking NEW work, hands leased work back, and
+    # exits cleanly — unlike `stop`, which is the hard kill
+    drain: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
     state: str = "running"            # running | exited | killed
     exitcode: int | None = None
     last_step_time: float | None = None
@@ -51,6 +56,7 @@ class ProcessTable:
         self._next_pid = 1
         self._entries: dict[int, ProcEntry] = {}
         self._listeners: list = []        # callables (kind, entry)
+        self._drained_uids: set[int] = set()   # sticky drain (see drain_uid)
 
     def subscribe(self, fn) -> None:
         """fn(kind, entry) with kind in {"exit", "step"}."""
@@ -77,7 +83,9 @@ class ProcessTable:
             self._next_pid += 1
             e = ProcEntry(pid=pid, uid=uid, name=name, started=time.monotonic(),
                           stop=threading.Event())
-            self._entries[pid] = e
+            if uid in self._drained_uids:    # the uid is winding down: a
+                e.drain.set()                # late-registering process starts
+            self._entries[pid] = e           # pre-drained (no race window)
             return e
 
     def mark_exited(self, pid: int, exitcode: int):
@@ -126,6 +134,22 @@ class ProcessTable:
             if e.state == "running":
                 e.state = "killed"
             return True
+
+    def drain_uid(self, uid: int, *, signaller_uid: int = PILOT_UID) -> int:
+        """Graceful wind-down for every process of a uid (the pilot's
+        scale-down path): sets each entry's ``drain`` event and remembers
+        the uid, so a payload that registers AFTER the drain request (the
+        pilot was draining while its container booted) still starts
+        drained.  Unlike :meth:`kill_uid`, nothing is marked killed — the
+        payload exits on its own, releasing leased work first."""
+        if signaller_uid != PILOT_UID:
+            return 0                       # EPERM — pilot-only control
+        with self._lock:
+            self._drained_uids.add(uid)
+            entries = [e for e in self._entries.values() if e.uid == uid]
+        for e in entries:
+            e.drain.set()
+        return len(entries)
 
     def kill_uid(self, uid: int, *, signaller_uid: int = PILOT_UID) -> int:
         """Kill every process of a uid (the pilot's orphan sweep, step (f))."""

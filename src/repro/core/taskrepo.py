@@ -24,6 +24,11 @@ Event-driven control plane (this module is its hub):
   side effect piggybacked on every ``match`` call.
 * ``wait_drained(timeout)`` blocks on a drain event that flips whenever
   queued == leased == 0 — ``ClusterSim.run_until_drained`` no longer polls.
+  A bursty submitter calls ``open_submissions()`` before its first submit
+  and ``seal()`` after its last: while open, a momentary
+  queued == leased == 0 window between staggered submissions does NOT flip
+  the drain event (the same latch semantics as the fleet pool's ``seal``).
+  A repo that never opens behaves exactly as before (sealed from birth).
 """
 
 from __future__ import annotations
@@ -107,7 +112,8 @@ class _TaskHeap:
 
 
 class TaskRepo:
-    def __init__(self, *, lease_ttl: float = 10.0, wheel: TimerWheel | None = None):
+    def __init__(self, *, lease_ttl: float = 10.0, wheel: TimerWheel | None = None,
+                 pilot_ttl: float | None = None):
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
         self._ids = itertools.count(1)
@@ -122,7 +128,12 @@ class TaskRepo:
         self._pilot_heartbeats: dict[str, float] = {}
         self._step_times: dict[str, float] = {}     # pilot_id -> EWMA
         self.lease_ttl = lease_ttl
+        # a pilot whose heartbeat is older than this is presumed gone; its
+        # entry is evicted instead of accumulating forever under scale churn
+        self.pilot_ttl = (pilot_ttl if pilot_ttl is not None
+                          else max(3.0 * lease_ttl, 3.0))
         self._wheel = wheel or shared_wheel()
+        self._sealed = True          # legacy behavior: drain flips on empty
         self._drained = threading.Event()
         self._drained.set()                           # empty repo is drained
         # observability for benchmarks: match cost + scheduler wakeups
@@ -151,10 +162,32 @@ class TaskRepo:
 
     def _update_drained(self):
         """Caller holds the lock."""
-        if self._n_queued() == 0 and not self._leases:
+        if self._sealed and self._n_queued() == 0 and not self._leases:
             self._drained.set()
         else:
             self._drained.clear()
+
+    # ---- submissions-open latch ----------------------------------------------
+
+    def open_submissions(self):
+        """Declare that more submissions are coming: ``wait_drained`` must
+        not return during a momentary queued == leased == 0 window between
+        staggered submissions (bursty arrivals).  Pair with :meth:`seal`."""
+        with self._lock:
+            self._sealed = False
+            self._drained.clear()
+
+    def seal(self):
+        """The submitter is done: drain completes the instant the repo is
+        empty (and immediately, if it already is)."""
+        with self._lock:
+            self._sealed = True
+            self._update_drained()
+
+    @property
+    def sealed(self) -> bool:
+        with self._lock:
+            return self._sealed
 
     # ---- submission ---------------------------------------------------------
 
@@ -284,6 +317,24 @@ class TaskRepo:
                 prev = self._step_times.get(pilot_id, step_time)
                 self._step_times[pilot_id] = 0.7 * prev + 0.3 * step_time
 
+    def evict_pilot(self, pilot_id: str):
+        """Forget a pilot's liveness/telemetry state.  Called by a pilot on
+        its own terminate path and by the lease reaper when a lease expires
+        (no renewals == the pilot is gone); without eviction the heartbeat
+        map grows one entry per pilot EVER seen across scale churn."""
+        with self._lock:
+            self._pilot_heartbeats.pop(pilot_id, None)
+            self._step_times.pop(pilot_id, None)
+
+    def _prune_stale_pilots(self, now: float):
+        """Caller holds the lock.  Drops pilots silent for > pilot_ttl —
+        the backstop for pilots that die without a lease to reap."""
+        cutoff = now - self.pilot_ttl
+        for pid in [p for p, t in self._pilot_heartbeats.items()
+                    if t < cutoff]:
+            del self._pilot_heartbeats[pid]
+            self._step_times.pop(pid, None)
+
     def fleet_median_step_time(self) -> float | None:
         with self._lock:
             vals = sorted(self._step_times.values())
@@ -332,6 +383,7 @@ class TaskRepo:
                 self._update_drained()
                 return
             del self._leases[task.task_id]
+            self._prune_stale_pilots(time.monotonic())
             if failed and task.attempts >= task.max_attempts:
                 self._failed[task.task_id] = task
                 self._update_drained()
@@ -370,6 +422,12 @@ class TaskRepo:
                     continue                       # stale entry (renewed/done)
                 del self._leases[tid]
                 expired.append(lease.task)
+                # no renewals for a whole TTL: the holder is presumed dead —
+                # evict its heartbeat so the live-pilot signal and the
+                # straggler median never count a ghost
+                self._pilot_heartbeats.pop(lease.pilot_id, None)
+                self._step_times.pop(lease.pilot_id, None)
+            self._prune_stale_pilots(now)
             for task in expired:
                 if task.task_id in self._results:
                     continue
@@ -390,11 +448,14 @@ class TaskRepo:
 
     def stats(self) -> dict:
         with self._lock:
+            self._prune_stale_pilots(time.monotonic())
             return {
                 "queued": self._n_queued(),
                 "leased": len(self._leases),
                 "done": len(self._results),
                 "failed": len(self._failed),
+                # fresh-heartbeat pilots: the autoscaler's supply-side signal
+                "pilots": len(self._pilot_heartbeats),
             }
 
     def scheduler_metrics(self) -> dict:

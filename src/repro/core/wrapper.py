@@ -189,9 +189,15 @@ def _fleet_serve_loop(eng, spec, n_steps, entry, proctable, telemetry) -> int:
     Death semantics: when the stop event fires (node loss / SIGTERM) the
     loop returns WITHOUT releasing anything — a dead server cannot clean up,
     and the pool's lease-expiry reaper requeueing its in-flight requests is
-    exactly the failure path this payload exists to exercise.  Only a
-    graceful end (tick budget, pool closed) hands unfinished requests back
-    early."""
+    exactly the failure path this payload exists to exercise.  A graceful
+    end (tick budget, pool closed, or the pilot's DRAIN event — the
+    autoscaler's scale-down path) hands unfinished requests straight back
+    instead: survivors requeue them immediately, no lease-TTL wait.
+
+    Each tick also reports the engine's KV-pressure sample to the pool
+    (``report_telemetry``), which the autoscaler reads via
+    ``pool_pressure`` — kv_memory_utilization / blocked_admissions are
+    scale-up signals a queue-depth-only policy would miss."""
     from repro.serving import dispatch as fleet_dispatch
     from repro.serving.engine import Request
 
@@ -220,6 +226,9 @@ def _fleet_serve_loop(eng, spec, n_steps, entry, proctable, telemetry) -> int:
             return 143                   # died mid-serve: leases just expire
         if pool.closed.is_set():
             break
+        if entry.drain.is_set():
+            break        # scale-down: wind down NOW — leased work is
+                         # released below, not left to wait out its TTL
         # _live already counts mid-admission (_jobs) requests, so this is
         # every admitted-or-queued request exactly once
         want = eng.slots - (len(eng._live) + len(eng.queue))
@@ -259,9 +268,16 @@ def _fleet_serve_loop(eng, spec, n_steps, entry, proctable, telemetry) -> int:
                 eng.cancel(rid)          # re-leased elsewhere: free the slot
                 inflight.pop(rid, None)
         # the heartbeat consumer sees cache pressure AND per-request
-        # progress — renewals piggyback on the same tick
-        telemetry["serve_live"] = {
+        # progress — renewals piggyback on the same tick; the same sample
+        # goes to the pool, where the autoscaler reads it as a demand signal
+        live_sample = {
             **eng.kv_pressure(),
+            "blocked_admissions": eng.blocked_admissions,
+            "free_slots": eng.slots - (len(eng._live) + len(eng.queue)),
+        }
+        pool.report_telemetry(server_id, live_sample)
+        telemetry["serve_live"] = {
+            **live_sample,
             "inflight": {str(rid): len(r.tokens)
                          for rid, r in inflight.items()}}
         if pool.finished() and not inflight:
@@ -271,11 +287,13 @@ def _fleet_serve_loop(eng, spec, n_steps, entry, proctable, telemetry) -> int:
         pool.release(server_id, [r.rid for r in drained])
         released = len(drained)
         inflight.clear()
+    pool.retire(server_id)               # gone capacity must not look live
     stats = eng._stats(decoded, time.monotonic() - t_start)
     telemetry["serve"] = {k: stats[k] for k in _SERVE_STAT_KEYS}
     telemetry["serve"]["fleet"] = {
         "server_id": server_id, "pool": pool.name, "fetched": fetched,
-        "completed_here": completed_here, "released": released}
+        "completed_here": completed_here, "released": released,
+        "drained": entry.drain.is_set()}
     telemetry["tokens"] = {str(r.rid): r.tokens for r in eng.done.values()}
     return 0
 

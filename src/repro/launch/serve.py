@@ -17,11 +17,17 @@ per-request leases in a FleetDispatcher pool and N pilots each run a server
 that pulls from it.  ``--fail-at K`` hard-kills a lease-holding pilot once K
 requests have completed — its in-flight requests requeue onto the survivors
 and the trace still reaches 100% completion.
+
+``--autoscale`` replays the trace as a bursty square-wave arrival schedule
+under the demand-driven autoscaler (``core/autoscaler.py``): the fleet
+grows from queue pressure, shrinks to zero in the gaps, and re-provisions
+on the next burst.
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -165,6 +171,7 @@ def serve_fleet(arch: str, n_requests: int, n_pilots: int, *,
         fleet.drain_all()
         fleet.join_all(30.0)
     wall = time.monotonic() - t0
+    fleet.reap()
     stats = pool.stats()
     recs = pool.records()
     ttfts = [r.first_token_s for r in recs.values()
@@ -181,9 +188,124 @@ def serve_fleet(arch: str, n_requests: int, n_pilots: int, *,
         "ttft_p50_s": pct(ttfts, 50),
         "ttft_p99_s": pct(ttfts, 99),
         "failed_pilots": failed_pilots,
+        "pilot_seconds": fleet.pilot_seconds(),
         "results": pool.results(),
         **stats,
     }
+
+
+def make_bursty_schedule(trace: list[dict], *, bursts: int, burst_s: float,
+                         gap_s: float, seed: int = 0) -> list[tuple[float, dict]]:
+    """Square-wave arrival schedule with Poisson arrivals inside each high
+    phase: the trace is split evenly across ``bursts`` bursts; within a
+    burst, inter-arrival gaps are exponential (rate = burst size /
+    burst_s, clipped to the burst window), and between bursts the pool
+    goes quiet for ``gap_s`` — the demand shape an autoscaler must track
+    without flapping."""
+    rng = np.random.default_rng(seed)
+    per = (len(trace) + bursts - 1) // bursts
+    out: list[tuple[float, dict]] = []
+    for b in range(bursts):
+        chunk = trace[b * per:(b + 1) * per]
+        if not chunk:
+            break
+        t = b * (burst_s + gap_s)
+        rate = len(chunk) / burst_s
+        offs = np.minimum(np.cumsum(rng.exponential(1.0 / rate,
+                                                    size=len(chunk))),
+                          burst_s)
+        for off, e in zip(offs, chunk):
+            out.append((t + float(off), e))
+    return out
+
+
+def serve_fleet_schedule(arch: str, schedule: list[tuple[float, dict]], *,
+                         slots: int = 2, max_len: int = 64,
+                         policy=None, n_pilots: int | None = None,
+                         initial_pilots: int = 1, lease_ttl: float = 0.5,
+                         idle_grace: float = 0.5, registry=None,
+                         settle_to_zero: bool = True) -> dict:
+    """Drive a serving fleet through a WALL-CLOCK arrival schedule
+    (``[(t_offset_s, entry), ...]``, sorted by offset).
+
+    ``policy`` (an :class:`~repro.core.autoscaler.AutoscalePolicy`) runs
+    the fleet under the demand-driven autoscaler starting from
+    ``initial_pilots``; ``policy=None`` runs a STATIC fleet of
+    ``n_pilots`` — the peak-sized baseline the autoscaler is judged
+    against.  Returns pool stats + pool-level TTFT percentiles +
+    ``pilot_seconds`` (fleet-lifetime slice holding, the cost metric) and,
+    when autoscaled, the decision ledger / flap count / scale-to-zero
+    outcome."""
+    from repro.core.autoscaler import FleetAutoscaler
+
+    sim = ClusterSim(registry=registry)
+    pool = FleetDispatcher(lease_ttl=lease_ttl)
+    img = PayloadImage(arch=arch, shape="smoke", mode="serve")
+    spec = {"slots": slots, "max_len": max_len}
+    n_start = n_pilots if policy is None else max(policy.min_pilots,
+                                                 initial_pilots)
+    if policy is None and n_pilots is None:
+        raise ValueError("static mode needs n_pilots")
+    fleet = sim.spawn_fleet(n_start, PilotConfig(max_payloads=4,
+                                                 idle_grace=idle_grace))
+    scaler = None
+    out: dict = {}
+    try:
+        if n_start:
+            fleet.submit_servers(img, pool.name, n=n_start, spec=spec)
+            if not pool.wait_servers(n_start, timeout=300.0):
+                raise RuntimeError(
+                    f"only {len(pool.servers)}/{n_start} servers warm "
+                    f"within 300s")
+        if policy is not None:
+            scaler = FleetAutoscaler(fleet, img, pool=pool, policy=policy,
+                                     spec=spec)
+            scaler.start()
+        t0 = time.monotonic()
+        for dt, entry in schedule:
+            lag = dt - (time.monotonic() - t0)
+            if lag > 0:
+                time.sleep(lag)
+            pool.submit(entry)
+        pool.seal()
+        ok = pool.wait_all(timeout=600.0)
+        wall = time.monotonic() - t0
+        out["drained"] = ok
+        out["wall_s"] = wall
+        if scaler is not None and policy.min_pilots == 0 and settle_to_zero:
+            # the empty-trace epilogue: demand is 0, so the loop must shed
+            # every pilot (victims exit via drain/idle_grace) — the
+            # scale-to-zero half of the (g)->(h) lifecycle
+            budget = (policy.down_cooldown
+                      + policy.down_stable_ticks * policy.interval + 30.0)
+            deadline = time.monotonic() + budget
+            while fleet.size() > 0 and time.monotonic() < deadline:
+                time.sleep(0.05)
+            out["scaled_to_zero"] = fleet.size() == 0
+            out["scale_to_zero_s"] = time.monotonic() - t0 - wall
+    finally:
+        if scaler is not None:
+            scaler.stop()
+        pool.close()
+        fleet.drain_all()
+        fleet.join_all(30.0)
+        fleet.reap()
+    recs = pool.records()
+    ttfts = [r.first_token_s for r in recs.values()
+             if r.first_token_s is not None]
+    pct = lambda v, q: float(np.percentile(v, q)) if v else None
+    out.update({
+        "ttft_p50_s": pct(ttfts, 50),
+        "ttft_p99_s": pct(ttfts, 99),
+        "pilot_seconds": fleet.pilot_seconds(),
+        "results": pool.results(),
+        **pool.stats(),
+    })
+    if scaler is not None:
+        out["autoscale"] = scaler.stats()
+        out["decisions"] = [dataclasses.asdict(d) for d in scaler.decisions]
+        out["t_start"] = t0
+    return out
 
 
 def _pick_victim(fleet, pool, *, exclude=()):
@@ -234,8 +356,29 @@ def main():
     ap.add_argument("--fail-at", type=int, default=None,
                     help="fleet serve: hard-kill a lease-holding pilot "
                          "after K completed requests")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="fleet serve on a bursty square-wave trace with "
+                         "the demand-driven autoscaler (--pilots caps the "
+                         "fleet; starts at 1, scales to zero in the gaps)")
     args = ap.parse_args()
 
+    if args.autoscale:
+        from repro.core.autoscaler import AutoscalePolicy
+        cfg = get_smoke_config(args.arch)
+        max_len = args.max_len or 64
+        slots = args.slots or 2
+        n_peak = args.pilots or 4
+        trace = make_trace(cfg.vocab_size, args.requests, max_len=max_len)
+        schedule = make_bursty_schedule(trace, bursts=3, burst_s=1.0,
+                                        gap_s=5.0)
+        out = serve_fleet_schedule(
+            args.arch, schedule, slots=slots, max_len=max_len,
+            policy=AutoscalePolicy(min_pilots=0, max_pilots=n_peak,
+                                   slots_per_pilot=slots))
+        out.pop("results")
+        out.pop("t_start", None)
+        print(json.dumps(out, indent=1))
+        return
     if args.pilots:
         out = serve_fleet(args.arch, args.requests, args.pilots,
                           slots=args.slots or 2, max_len=args.max_len or 64,

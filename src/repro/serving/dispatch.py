@@ -41,6 +41,7 @@ import dataclasses
 import threading
 import time
 import uuid
+from collections import deque
 
 from repro.core.taskrepo import TaskRepo, TaskResult
 
@@ -89,6 +90,14 @@ class FleetDispatcher:
         self.duplicates = 0               # completions dropped by first-wins
         self.lost_leases = 0              # renewals refused (re-leased away)
         self.servers: set[str] = set()    # servers that announced readiness
+        # server_id -> (monotonic stamp, engine telemetry sample): the
+        # per-tick KV-pressure heartbeat the autoscaler reads; entries
+        # go stale after telemetry_ttl (a dead server stops reporting)
+        self._telemetry: dict[str, tuple[float, dict]] = {}
+        self.telemetry_ttl = max(5.0 * lease_ttl, 2.0)
+        # bounded recent-TTFT window so pool_pressure (called every
+        # autoscaler tick) never sorts the pool's full request history
+        self._recent_ttfts: deque[float] = deque(maxlen=2048)
         self.sealed = threading.Event()   # no further submissions coming
         self.closed = threading.Event()
         with _POOLS_LOCK:
@@ -144,6 +153,22 @@ class FleetDispatcher:
 
     def wait_servers(self, n: int, timeout: float | None = None) -> bool:
         return self._wait_for(lambda: len(self.servers) >= n, timeout)
+
+    def retire(self, server_id: str):
+        """A server's graceful exit (scale-down drain, tick budget, pool
+        finished): drop it from the announced set and forget its telemetry,
+        so pool pressure never counts capacity that is gone."""
+        with self._done_cond:
+            self.servers.discard(server_id)
+            self._telemetry.pop(server_id, None)
+            self._done_cond.notify_all()
+
+    def report_telemetry(self, server_id: str, sample: dict):
+        """Per-tick engine telemetry heartbeat (kv_memory_utilization,
+        blocked_admissions, free_slots, ...) — the demand-side signal the
+        autoscaler folds into its scale decisions."""
+        with self._lock:
+            self._telemetry[server_id] = (time.monotonic(), dict(sample))
 
     def fetch(self, server_id: str, *, max_n: int = 1, timeout: float = 0.0,
               labels: dict | None = None, cancel=None) -> list[dict]:
@@ -249,6 +274,8 @@ class FleetDispatcher:
                 rec.tokens = list(tokens)
                 rec.server = server_id
                 rec.first_token_s = first_token_s
+                if first_token_s is not None:
+                    self._recent_ttfts.append(first_token_s)
                 rec.completed_s = time.monotonic() - rec.submitted_s
                 self._n_settled += 1
                 self._done_cond.notify_all()
@@ -351,6 +378,46 @@ class FleetDispatcher:
                     rec.failed = True
                     self._n_settled += 1
                     self._done_cond.notify_all()
+
+    def pool_pressure(self) -> dict:
+        """One-shot demand/supply snapshot for the autoscaler control loop:
+        repo backlog (queued requests waiting for a server + leased
+        in-flight), unsettled total, announced servers, pool-level TTFT
+        percentiles over a bounded recent window (this runs every control
+        tick — it must not sort the pool's full history), and the worst KV
+        pressure / per-server blocked-admission counters across fresh
+        server telemetry (stale entries — a dead server's last sample —
+        are pruned here).  ``blocked_by_server`` carries the cumulative
+        per-server counters so the autoscaler can diff per server: server
+        churn (retire, TTL prune) must never fabricate or mask a delta in
+        a fleet-wide sum."""
+        now = time.monotonic()
+        rs = self.repo.stats()
+        with self._lock:
+            pending = len(self._records) - self._n_settled
+            for sid in [s for s, (t, _) in self._telemetry.items()
+                        if now - t > self.telemetry_ttl]:
+                del self._telemetry[sid]
+            tele = {s: d for s, (_, d) in self._telemetry.items()}
+            n_servers = len(self.servers)
+            ttfts = sorted(self._recent_ttfts)
+        n = len(ttfts)
+        blocked = {s: int(d.get("blocked_admissions", 0))
+                   for s, d in tele.items()}
+        return {
+            "queued": rs["queued"],
+            "leased": rs["leased"],
+            "pending": pending,
+            "servers": n_servers,
+            "sealed": self.sealed.is_set(),
+            "ttft_p50_s": ttfts[n // 2] if n else None,
+            "ttft_p99_s": ttfts[min(n - 1, (99 * n) // 100)] if n else None,
+            "kv_memory_utilization": max(
+                (d.get("kv_memory_utilization", 0.0)
+                 for d in tele.values()), default=0.0),
+            "blocked_admissions": sum(blocked.values()),
+            "blocked_by_server": blocked,
+        }
 
     def lease_holders(self) -> dict[str, list[int]]:
         """server_id -> rids it currently holds leases for (the failure

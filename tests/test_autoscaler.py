@@ -1,0 +1,388 @@
+"""Autoscaler policy contracts + churn-hygiene fixes in the fleet/repo
+substrate.
+
+Policy tests drive ``FleetAutoscaler.tick`` directly with a stub fleet, an
+injected demand stream and a fake clock — hysteresis, cooldowns, bounds,
+scale-to-zero and the no-flap guarantee are all deterministic.  Everything
+that spawns real pilots uses noop images (fast lane); the busy-serving
+scale-down test builds model engines and carries @pytest.mark.slow.
+"""
+
+from __future__ import annotations
+
+import time
+
+import pytest
+
+from repro.core.autoscaler import AutoscalePolicy, FleetAutoscaler
+from repro.core.cluster import ClusterSim
+from repro.core.images import PayloadImage
+from repro.core.pilot import PilotConfig
+from repro.core.proctable import PAYLOAD_UID, PILOT_UID, ProcessTable
+from repro.core.taskrepo import TaskRepo, TaskResult
+
+NOOP = PayloadImage(arch="placeholder", shape="none", mode="noop")
+
+
+# ---------------------------------------------------------------------------
+# policy (stub fleet, fake clock, injected demand)
+# ---------------------------------------------------------------------------
+
+class _StubFleet:
+    def __init__(self, n: int = 0):
+        self.n = n
+        self.draining_n = 0
+        self.ups: list[int] = []
+        self.downs: list[int] = []
+
+    def size(self):
+        return self.n
+
+    def draining(self):
+        return self.draining_n
+
+    def scale_up(self, n):
+        self.n += n
+        self.ups.append(n)
+        return [object()] * n
+
+    def scale_down(self, n):
+        self.n -= n
+        self.downs.append(n)
+        return []
+
+
+def _scaler(fleet, policy, sig, clk):
+    return FleetAutoscaler(fleet, None, policy=policy,
+                           signals_fn=lambda: dict(sig),
+                           clock=lambda: clk[0])
+
+
+def test_hysteresis_band_holds_and_edges_scale():
+    p = AutoscalePolicy(min_pilots=0, max_pilots=8, slots_per_pilot=2,
+                        high_water=1.25, low_water=0.5,
+                        up_cooldown=1.0, down_cooldown=2.0,
+                        down_stable_ticks=3)
+    fleet = _StubFleet(2)
+    sig = {"demand": 4}                   # util = 4 / (2*2) = 1.0: in band
+    clk = [100.0]
+    a = _scaler(fleet, p, sig, clk)
+    for _ in range(5):
+        assert a.tick() is None           # the band absorbs the wiggle
+        clk[0] += 1.0
+    sig["demand"] = 6                     # util 1.5 > 1.25: grow to fit
+    d = a.tick()
+    assert d.direction == "up" and d.n == 1 and fleet.n == 3
+    assert d.target == 3                  # ceil(6 / 2) — demand-proportional
+
+
+def test_cooldowns_bound_decision_rate_and_forbid_flaps():
+    p = AutoscalePolicy(min_pilots=0, max_pilots=8, slots_per_pilot=1,
+                        up_cooldown=1.0, down_cooldown=2.0,
+                        down_stable_ticks=1)
+    fleet = _StubFleet(1)
+    sig = {"demand": 4}
+    clk = [10.0]
+    a = _scaler(fleet, p, sig, clk)
+    assert a.tick().direction == "up"     # 1 -> 4
+    sig["demand"] = 8
+    assert a.tick() is None               # inside up_cooldown: held
+    clk[0] += 0.5
+    assert a.tick() is None
+    # demand collapses right after the up — a flap candidate.  The down
+    # must wait out down_cooldown FROM THE UP, not fire immediately.
+    sig["demand"] = 0
+    clk[0] += 0.6                         # 1.1s after the up
+    assert a.tick() is None
+    clk[0] += 1.0                         # 2.1s after the up: now allowed
+    d = a.tick()
+    assert d.direction == "down" and fleet.n == 0
+    assert a.flaps() == 0
+
+
+def test_oscillating_demand_never_flaps():
+    p = AutoscalePolicy(min_pilots=0, max_pilots=4, slots_per_pilot=1,
+                        up_cooldown=0.5, down_cooldown=1.0,
+                        down_stable_ticks=2)
+    fleet = _StubFleet(1)
+    sig = {"demand": 0}
+    clk = [0.0]
+    a = _scaler(fleet, p, sig, clk)
+    for i in range(200):                  # demand square-waves every 8 ticks
+        sig["demand"] = 4 if (i // 8) % 2 else 0
+        a.tick()
+        clk[0] += 0.1
+    assert a.flaps() == 0
+    assert len(a.decisions) >= 2          # it DID scale — just never thrashed
+
+
+def test_bounds_scale_to_zero_and_burst_from_zero():
+    p = AutoscalePolicy(min_pilots=0, max_pilots=3, slots_per_pilot=2,
+                        up_cooldown=0.1, down_cooldown=0.1,
+                        down_stable_ticks=2)
+    fleet = _StubFleet(1)
+    sig = {"demand": 100}
+    clk = [0.0]
+    a = _scaler(fleet, p, sig, clk)
+    d = a.tick()
+    assert d.target == 3 and fleet.n == 3     # clamped at max_pilots
+    # idle: shed everything, but only after down_stable_ticks of low util
+    sig["demand"] = 0
+    clk[0] += 1.0
+    assert a.tick() is None                   # first low tick: hold
+    clk[0] += 1.0
+    d = a.tick()
+    assert d.direction == "down" and d.n == 3 and fleet.n == 0
+    # a burst into the empty fleet re-provisions in one jump
+    sig["demand"] = 5
+    clk[0] += 1.0
+    d = a.tick()
+    assert d.direction == "up" and d.target == 3 and fleet.n == 3
+    assert d.reason.startswith("burst-from-zero")
+    assert a.flaps() == 0
+
+
+def test_kv_pressure_scales_up_inside_the_band():
+    p = AutoscalePolicy(min_pilots=0, max_pilots=8, slots_per_pilot=2,
+                        up_cooldown=0.1, down_cooldown=0.1,
+                        kv_high_water=0.92)
+    fleet = _StubFleet(2)
+    # util 1.0 — inside the band — but the engines report KV pool pressure
+    sig = {"demand": 4, "kv_memory_utilization": 0.97,
+           "blocked_admissions": 0}
+    clk = [50.0]
+    a = _scaler(fleet, p, sig, clk)
+    d = a.tick()
+    assert d.direction == "up" and d.n == 1 and "kv pressure" in d.reason
+    # blocked-admission growth is the other in-band up trigger
+    fleet2 = _StubFleet(2)
+    sig2 = {"demand": 4, "kv_memory_utilization": 0.5,
+            "blocked_admissions": 0}
+    b = _scaler(fleet2, p, sig2, clk)
+    assert b.tick() is None
+    sig2["blocked_admissions"] = 3
+    clk[0] += 1.0
+    d = b.tick()
+    assert d.direction == "up" and "blocked" in d.reason
+
+
+def test_up_bounded_by_live_pilots_not_effective():
+    """A burst while victims are mid-drain: sizing uses effective (live
+    minus draining), but the max_pilots bound is on LIVE slices held — the
+    fleet must never transiently overdraw the provider quota."""
+    p = AutoscalePolicy(min_pilots=0, max_pilots=4, slots_per_pilot=1,
+                        up_cooldown=0.1, down_cooldown=0.1)
+    fleet = _StubFleet(4)
+    fleet.draining_n = 4                  # all four are mid-drain
+    sig = {"demand": 8}
+    clk = [0.0]
+    a = _scaler(fleet, p, sig, clk)
+    assert a.tick() is None               # 4 slices still held: no headroom
+    assert fleet.ups == []
+    fleet.n = 1                           # three victims exited
+    fleet.draining_n = 1
+    clk[0] += 1.0
+    d = a.tick()                          # headroom is max(4) - live(1) = 3
+    assert d.direction == "up" and d.n == 3 and fleet.n == 4
+
+
+def test_blocked_admission_delta_is_per_server():
+    """Cumulative per-server counters: server churn (retire / telemetry
+    TTL prune / re-announce) must neither fabricate nor mask a delta."""
+    p = AutoscalePolicy(min_pilots=0, max_pilots=8, slots_per_pilot=2,
+                        up_cooldown=0.1, down_cooldown=0.1)
+    fleet = _StubFleet(2)
+    sig = {"demand": 4, "kv_memory_utilization": 0.5,   # util 1.0: in band
+           "blocked_admissions": 7, "blocked_by_server": {"a": 7}}
+    clk = [0.0]
+    a = _scaler(fleet, p, sig, clk)
+    assert a.tick() is None               # first sight of "a": history
+    clk[0] += 1.0                         # unknown, no delta
+    sig["blocked_by_server"] = {}         # "a" pruned (stalled server)
+    sig["blocked_admissions"] = 0
+    assert a.tick() is None               # sum dropped 7: NOT a trigger
+    clk[0] += 1.0
+    sig["blocked_by_server"] = {"a": 7}   # "a" resumes reporting
+    sig["blocked_admissions"] = 7
+    assert a.tick() is None               # sum jumped +7 with zero new
+    clk[0] += 1.0                         # pressure: still not a trigger
+    sig["blocked_by_server"] = {"a": 9}   # genuinely new blocks
+    sig["blocked_admissions"] = 9
+    d = a.tick()
+    assert d is not None and d.direction == "up" and "blocked" in d.reason
+
+
+def test_min_pilots_floor_is_respected():
+    p = AutoscalePolicy(min_pilots=2, max_pilots=6, slots_per_pilot=1,
+                        up_cooldown=0.1, down_cooldown=0.1,
+                        down_stable_ticks=1)
+    fleet = _StubFleet(4)
+    sig = {"demand": 0}
+    clk = [0.0]
+    a = _scaler(fleet, p, sig, clk)
+    d = a.tick()
+    assert d.direction == "down" and fleet.n == 2     # never below the floor
+    clk[0] += 1.0
+    assert a.tick() is None
+
+
+# ---------------------------------------------------------------------------
+# churn hygiene: member/registry reaping, heartbeat eviction, drain latch
+# ---------------------------------------------------------------------------
+
+def test_fleet_reaps_terminal_pilots_into_bounded_history():
+    sim = ClusterSim()
+    fleet = sim.spawn_fleet(2, PilotConfig(max_payloads=1, idle_grace=0.2))
+    for _ in range(2):
+        sim.repo.submit(NOOP, n_steps=1)
+    assert sim.run_until_drained(timeout=60.0)
+    fleet.join_all(timeout=30.0)
+    deadline = time.monotonic() + 10.0
+    while fleet.size() > 0 and time.monotonic() < deadline:
+        time.sleep(0.02)                  # live() reaps as threads finish
+    assert fleet.size() == 0
+    assert fleet.members == []            # reaped, not merely terminal
+    assert sim.pilots == {}               # ClusterSim registry pruned too
+    assert len(fleet.history) == 2 and len(sim.pilot_history) == 2
+    for rec in fleet.history:             # state_log survives the reap
+        assert rec["state_log"][0] == "created"
+        assert rec["state"] in ("terminated", "drained")
+        assert rec["payloads_run"] == 1
+        assert rec["pilot_seconds"] > 0.0
+
+
+def test_scale_down_sheds_distinct_idle_victims():
+    sim = ClusterSim()
+    fleet = sim.spawn_fleet(3, PilotConfig(idle_grace=30.0))
+    try:
+        v1 = fleet.scale_down(1)
+        v2 = fleet.scale_down(1)          # the first victim is mid-drain:
+        assert len(v1) == len(v2) == 1    # it must not be picked again
+        assert v1[0].pilot_id != v2[0].pilot_id
+        v3 = fleet.scale_down(5)          # only one non-draining pilot left
+        assert len(v3) == 1
+        assert len({p.pilot_id for p in v1 + v2 + v3}) == 3
+    finally:
+        fleet.drain_all()
+        fleet.join_all(30.0)
+
+
+def test_heartbeat_eviction_on_lease_reap_and_terminate():
+    repo = TaskRepo(lease_ttl=0.1, pilot_ttl=60.0)
+    repo.heartbeat_pilot("A", 0.01)
+    assert repo.stats()["pilots"] == 1
+    repo.submit(NOOP)
+    task = repo.match({"pilot_id": "A", "labels": {}})
+    assert task is not None
+    deadline = time.monotonic() + 10.0    # A dies: never renews
+    while repo.stats()["leased"] and time.monotonic() < deadline:
+        time.sleep(0.02)
+    s = repo.stats()
+    assert s["queued"] == 1 and s["leased"] == 0
+    assert s["pilots"] == 0               # the reaper evicted the ghost
+    assert repo.fleet_median_step_time() is None
+    # explicit eviction (the pilot terminate path)
+    repo.heartbeat_pilot("B", 0.02)
+    repo.evict_pilot("B")
+    assert repo.stats()["pilots"] == 0
+
+
+def test_heartbeat_ttl_prunes_silent_pilots():
+    repo = TaskRepo(pilot_ttl=0.05)
+    repo.heartbeat_pilot("ghost")
+    assert repo.stats()["pilots"] == 1
+    time.sleep(0.1)
+    assert repo.stats()["pilots"] == 0
+
+
+def test_drain_latch_survives_momentary_empty_window():
+    """Bursty arrivals: between staggered submissions the repo is briefly
+    queued == leased == 0 — with submissions open, wait_drained must NOT
+    return until the submitter seals."""
+    repo = TaskRepo()
+    assert repo.wait_drained(timeout=0.01)     # legacy: born sealed+empty
+    repo.open_submissions()
+    assert not repo.wait_drained(timeout=0.05)
+    tid = repo.submit(NOOP)
+    task = repo.match({"pilot_id": "p", "labels": {}})
+    repo.complete(TaskResult(task_id=tid, pilot_id="p", exitcode=0,
+                             telemetry={}))
+    # empty again — but the submitter has not sealed: this is exactly the
+    # early-flip window the latch closes
+    assert not repo.wait_drained(timeout=0.05)
+    tid2 = repo.submit(NOOP)               # the second burst arrives
+    repo.seal()
+    assert not repo.wait_drained(timeout=0.05)   # sealed but not empty
+    task2 = repo.match({"pilot_id": "p", "labels": {}})
+    repo.complete(TaskResult(task_id=tid2, pilot_id="p", exitcode=0,
+                             telemetry={}))
+    assert repo.wait_drained(timeout=5.0)        # sealed AND empty: drained
+
+
+def test_proctable_drain_uid_is_sticky_and_uid_scoped():
+    table = ProcessTable()
+    e1 = table.register(PAYLOAD_UID, "payload:a")
+    pe = table.register(PILOT_UID, "pilot")
+    assert table.drain_uid(PAYLOAD_UID) == 1
+    assert e1.drain.is_set()
+    assert not pe.drain.is_set()          # other uids untouched
+    assert e1.state == "running"          # drain is graceful, not a kill
+    # a payload that registers AFTER the drain request starts drained
+    e2 = table.register(PAYLOAD_UID, "payload:b")
+    assert e2.drain.is_set()
+    # non-pilot signallers get EPERM semantics
+    assert table.drain_uid(PAYLOAD_UID, signaller_uid=PAYLOAD_UID) == 0
+
+
+# ---------------------------------------------------------------------------
+# scale-down of a BUSY serving pilot (slow lane: real engines)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_scale_down_busy_serving_pilot_releases_leases():
+    """A drained serving pilot must hand its leased requests straight back
+    to the pool (release path) — with lease_ttl=600 the TTL can never be
+    the requeue mechanism, so completion of the whole trace proves it.
+    Back-to-back scale_downs must shed distinct pilots even while the
+    first victim is mid-drain."""
+    import numpy as np
+    from repro.configs.base import get_smoke_config
+    from repro.serving.dispatch import FleetDispatcher
+
+    cfg = get_smoke_config("smollm-360m")
+    sim = ClusterSim()
+    pool = FleetDispatcher(lease_ttl=600.0)
+    fleet = sim.spawn_fleet(3, PilotConfig(max_payloads=2, idle_grace=0.3))
+    img = PayloadImage("smollm-360m", "smoke", "serve")
+    try:
+        fleet.submit_servers(img, pool.name, n=3,
+                             spec={"slots": 2, "max_len": 64})
+        assert pool.wait_servers(3, timeout=300.0)
+        rng = np.random.default_rng(0)
+        for rid in range(24):
+            pool.submit({"rid": rid,
+                         "prompt": rng.integers(
+                             0, cfg.vocab_size, size=8).tolist(),
+                         "max_new_tokens": 40})
+        assert pool.wait_completed(3, timeout=120.0)
+        (v1,) = fleet.scale_down(1)
+        (v2,) = fleet.scale_down(1)       # v1 is mid-drain: must differ
+        assert v1.pilot_id != v2.pilot_id
+        held = (pool.lease_holders().get(v1.pilot_id, [])
+                + pool.lease_holders().get(v2.pilot_id, []))
+        pool.seal()
+        # the survivor can only finish if the victims RELEASED their leases
+        # (immediate requeue) — a lease-TTL wait would blow the timeout
+        assert pool.wait_all(timeout=120.0)
+        stats = pool.stats()
+        assert stats["completed"] == 24 and stats["failed"] == 0
+        assert stats["duplicates"] == 0
+        if held:                          # victims were busy when drained
+            assert stats["replays"] >= 1
+        for v in (v1, v2):
+            v.join(30.0)
+            assert v.state == "drained"
+    finally:
+        pool.close()
+        fleet.drain_all()
+        fleet.join_all(30.0)

@@ -156,7 +156,8 @@ def test_explicit_reap_still_works():
         repo._leases[task.task_id].expires = time.monotonic() - 1.0
         repo._push_deadline(task.task_id, repo._leases[task.task_id].expires)
     repo.reap_leases()
-    assert repo.stats() == {"queued": 1, "leased": 0, "done": 0, "failed": 0}
+    assert repo.stats() == {"queued": 1, "leased": 0, "done": 0,
+                             "failed": 0, "pilots": 0}
 
 
 # ---------------------------------------------------------------------------

@@ -195,7 +195,8 @@ def test_lease_expiry_requeues():
     got = repo.match_wait({"pilot_id": "p2", "labels": {}}, timeout=10.0)
     assert got is not None and got.task_id == tid and got.attempts == 2
     repo.release(got)
-    assert repo.stats() == {"queued": 1, "leased": 0, "done": 0, "failed": 0}
+    assert repo.stats() == {"queued": 1, "leased": 0, "done": 0,
+                             "failed": 0, "pilots": 0}
 
 
 def test_first_completion_wins():
