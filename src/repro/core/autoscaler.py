@@ -175,6 +175,13 @@ class FleetAutoscaler:
         effective = max(0, live - self.fleet.draining())
         self.peak_live = max(self.peak_live, live)
         cap = max(1, p.slots_per_pilot)
+        # speculative decoding makes capacity EFFECTIVE, not nominal: a
+        # fleet whose servers commit tokens_per_step above the per-pilot
+        # slot count drains the same backlog with fewer pilots.  Without
+        # speculation tokens_per_step never exceeds the slot count, so the
+        # max() leaves every non-speculative sizing decision unchanged.
+        tps = float(sig.get("pool_tokens_per_step") or 0.0)
+        cap = max(cap, tps)
         demand = int(sig.get("demand", 0))
         need = math.ceil(demand / cap) if demand > 0 else 0
         kv = float(sig.get("kv_memory_utilization") or 0.0)

@@ -36,9 +36,15 @@ class PayloadImage:
     mode: str                        # "train" | "prefill" | "decode" | "serve" | "noop"
     smoke: bool = True               # reduced config (tests/examples) vs full
     flags: tuple = ()                # e.g. (("remat","dots"), ("attn_impl","causal_blocked"))
+    # serve mode only: registry name of a DRAFT model for speculative
+    # decoding.  Like the arch itself, the draft choice is a late-binding
+    # decision — it names a different image (own compile-cache key), and
+    # engines from the image default to spec="draft" with this draft.
+    draft: str | None = None
 
     def key(self) -> tuple:
-        return (self.arch, self.shape, self.mode, self.smoke, self.flags)
+        return (self.arch, self.shape, self.mode, self.smoke, self.flags,
+                self.draft)
 
     def config(self) -> ArchConfig:
         cfg = get_smoke_config(self.arch) if self.smoke else get_config(self.arch)
@@ -219,20 +225,61 @@ class ExecutableRegistry:
             # the image's seed, so every server in a fleet serves IDENTICAL
             # weights — what makes replay-from-prompt reproduce a dead
             # server's tokens bitwise.
-            from repro.serving.engine import ServeEngine, make_engine_step
+            from repro.serving.engine import (
+                ServeEngine, make_draft_step, make_engine_step,
+                make_verify_step,
+            )
 
             step_fns: dict[int, Any] = {}
             prefill_fn = jax.jit(bundle.prefill)
             chunk_fn = (jax.jit(bundle.prefill_chunk, donate_argnums=1)
                         if bundle.prefill_chunk is not None else None)
+            # the draft model is part of the image: one bundle, one fixed-
+            # seed param set and one jitted prefill shared by every engine
+            # the factory builds — so a fleet's servers draft (and replay)
+            # bitwise-identically, and a registry prefetch stages the draft
+            # compiles alongside the target's
+            draft_cfg = draft_bundle = draft_prefill_fn = None
+            draft_params_cache: dict[str, Any] = {}
+            if image.draft:
+                draft_cfg = (get_smoke_config(image.draft) if image.smoke
+                             else get_config(image.draft))
+                draft_bundle = build_model(draft_cfg)
+                draft_prefill_fn = jax.jit(draft_bundle.prefill)
+            spec_fns: dict[tuple, Any] = {}
 
             def step_for(max_len):
                 if max_len not in step_fns:
                     step_fns[max_len] = make_engine_step(bundle, max_len)
                 return step_fns[max_len]
 
+            def spec_for(max_len, k):
+                if (max_len, k) not in spec_fns:
+                    spec_fns[(max_len, k)] = (
+                        make_draft_step(draft_bundle or bundle, k, max_len),
+                        make_verify_step(bundle, max_len, k))
+                return spec_fns[(max_len, k)]
+
+            def draft_params_for():
+                if "params" not in draft_params_cache:
+                    draft_params_cache["params"] = draft_bundle.init(
+                        jax.random.key(0))
+                return draft_params_cache["params"]
+
             def fn(params, slots=None, max_len=None, **kw):
                 ml = max_len or shape.seq_len
+                if image.draft:
+                    kw.setdefault("spec", "draft")
+                if kw.get("spec") == "draft":
+                    kw.setdefault("spec_k", 4)
+                    dfn, vfn = spec_for(ml, int(kw["spec_k"]))
+                    kw.setdefault("draft_fn", dfn)
+                    kw.setdefault("verify_fn", vfn)
+                    if draft_bundle is not None:
+                        kw.setdefault("draft_cfg", draft_cfg)
+                        kw.setdefault("draft_bundle", draft_bundle)
+                        kw.setdefault("draft_params", draft_params_for())
+                        kw.setdefault("draft_prefill_fn", draft_prefill_fn)
                 return ServeEngine(cfg, params,
                                    slots=slots or shape.global_batch,
                                    max_len=ml, bundle=bundle,
@@ -253,9 +300,19 @@ class ExecutableRegistry:
                 # trade this prewarm for a first-tick compile.
                 params = bundle.init(jax.random.key(0))
                 eng = fn(params, prefill="chunked")
-                eng.warm_admission()   # every bucket + every chunk shape
-                out = eng._step_fn(params, eng.state, eng.active,
-                                   eng.budget)   # the decode-step compile
+                eng.warm_admission()   # buckets + chunk shapes (+ draft)
+                if eng.spec == "draft":
+                    # stage the draft-chain and k-position verify compiles
+                    # (the decode loop a speculative engine actually runs)
+                    drafts, eng._draft_cache = eng._draft_fn(
+                        eng.draft_params, eng._draft_cache,
+                        eng.state["token"], eng.state["pos"],
+                        eng.state["block_tables"])
+                    out = eng._verify_fn(params, eng.state, eng.active,
+                                         eng.budget, drafts)
+                else:
+                    out = eng._step_fn(params, eng.state, eng.active,
+                                       eng.budget)  # the decode-step compile
                 jax.block_until_ready(out[0])
         else:                            # decode
             step = make_serve_step(cfg)

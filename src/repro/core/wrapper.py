@@ -135,7 +135,7 @@ def _serve_loop(exe, key, n_steps, entry, proctable, telemetry, spec) -> int:
     params = exe.make_inputs(key)
     kv_kw = {k: spec[k] for k in ("kv", "prefill", "prefill_chunk",
                                   "num_blocks", "block_size",
-                                  "prefix_sharing")
+                                  "prefix_sharing", "spec", "spec_k")
              if spec.get(k) is not None}
     eng = exe.fn(params, slots=spec.get("slots"),
                  max_len=spec.get("max_len"), **kv_kw)
@@ -171,7 +171,9 @@ _SERVE_STAT_KEYS = (
     "ttft_p50_s", "ttft_p99_s",
     "kv", "kv_memory_utilization", "kv_peak_live_tokens",
     "kv_capacity_tokens", "prefix_hit_rate", "prefill_chunks",
-    "blocked_admissions")
+    "blocked_admissions",
+    "spec", "spec_fallback_reason", "acceptance_rate", "tokens_per_step",
+    "draft_overhead_s")
 
 
 def _fleet_serve_loop(eng, spec, n_steps, entry, proctable, telemetry) -> int:

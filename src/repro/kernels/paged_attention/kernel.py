@@ -111,3 +111,107 @@ def paged_decode_attention_kernel(q, k_pool, v_pool, block_tables, cache_len,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         interpret=interpret,
     )(lens, block_tables.astype(jnp.int32), q, k_pool, v_pool)
+
+
+def _paged_verify_kernel(off_ref, btab_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_sc, l_sc, acc_sc, *, scale, block_size, n_b,
+                         n_q, group):
+    """k-query variant: ``n_q`` speculative queries per row share one walk
+    of the block table.  Query ``s`` sits at absolute position
+    ``off[b] + s`` and its causal reach is ``t <= off[b] + s`` — a
+    staircase mask instead of the decode kernel's single ragged length."""
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    b = pl.program_id(0)
+    t_pos = ti * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_size), 1)
+    # the deepest query reaches t <= off + n_q - 1; blocks wholly past
+    # that skip their compute entirely
+    valid_any = (t_pos <= off_ref[b] + n_q - 1)[0]        # (block_size,)
+
+    @pl.when(jnp.any(valid_any))
+    def _compute():
+        q = q_ref[0, :, 0]                                # (n_q, G, Dh)
+        q = q.reshape(n_q * group, q.shape[-1])
+        k = k_ref[0, :, 0]                                # (block_size, Dh)
+        v = jnp.where(valid_any[:, None], v_ref[0, :, 0], 0.0)
+        s = jax.lax.dot_general(
+            q.astype(jnp.bfloat16), k.astype(jnp.bfloat16),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (n_q*G, bs)
+        # staircase causal mask: row r = s*G + g covers t <= off + s
+        s_idx = jax.lax.broadcasted_iota(
+            jnp.int32, (n_q * group, block_size), 0) // group
+        tcol = ti * block_size + jax.lax.broadcasted_iota(
+            jnp.int32, (n_q * group, block_size), 1)
+        valid = tcol <= off_ref[b] + s_idx
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        # a row can be ENTIRELY masked in this block (shallow query, deep
+        # block): then m_new == NEG_INF and exp(s - m_new) == 1, not 0 —
+        # zero masked entries explicitly so they never enter l / acc
+        p = jnp.where(valid, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * alpha + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p.astype(jnp.bfloat16), v.astype(jnp.bfloat16),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (n_q*G, Dh)
+        acc_sc[...] = acc_sc[...] * alpha[..., None] + pv
+        m_sc[...] = m_new
+
+    @pl.when(ti == n_b - 1)
+    def _finalize():
+        l = jnp.maximum(l_sc[...], 1e-30)
+        out = acc_sc[...] / l[..., None]
+        o_ref[0, :, 0] = out.reshape(n_q, group, out.shape[-1]).astype(
+            o_ref.dtype)
+
+
+def paged_verify_attention_kernel(q, k_pool, v_pool, block_tables, q_off,
+                                  *, interpret=False):
+    """q: (B,S,K,G,Dh) — S speculative queries per row, query ``s`` at
+    absolute position ``q_off[b] + s``; pools: (nb, block_size, K, Dh);
+    block_tables: (B, mb) int32; q_off: (B,) int32 base positions."""
+    B, S, K, G, Dh = q.shape
+    nb, block_size = k_pool.shape[0], k_pool.shape[1]
+    mb = block_tables.shape[1]
+    scale = 1.0 / (Dh ** 0.5)
+
+    kernel = functools.partial(_paged_verify_kernel, scale=scale,
+                               block_size=block_size, n_b=mb, n_q=S,
+                               group=G)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                # q_off, block_tables
+        grid=(B, K, mb),
+        in_specs=[
+            pl.BlockSpec((1, S, 1, G, Dh),
+                         lambda b, h, ti, off, btab: (b, 0, h, 0, 0)),
+            pl.BlockSpec((1, block_size, 1, Dh),
+                         lambda b, h, ti, off, btab: (btab[b, ti], 0, h, 0)),
+            pl.BlockSpec((1, block_size, 1, Dh),
+                         lambda b, h, ti, off, btab: (btab[b, ti], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, S, 1, G, Dh),
+                               lambda b, h, ti, off, btab: (b, 0, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((S * G,), jnp.float32),
+            pltpu.VMEM((S * G,), jnp.float32),
+            pltpu.VMEM((S * G, Dh), jnp.float32),
+        ],
+    )
+    off = jnp.broadcast_to(jnp.asarray(q_off, jnp.int32), (B,))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(off, block_tables.astype(jnp.int32), q, k_pool, v_pool)

@@ -6,7 +6,9 @@ import functools
 
 import jax
 
-from repro.kernels.paged_attention.kernel import paged_decode_attention_kernel
+from repro.kernels.paged_attention.kernel import (
+    paged_decode_attention_kernel, paged_verify_attention_kernel,
+)
 
 
 def _on_tpu() -> bool:
@@ -34,3 +36,26 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, cache_len, *,
     o = paged_decode_attention_kernel(qg, k_pool, v_pool, block_tables,
                                       cache_len, interpret=interpret)
     return o.reshape(B, H, Dh)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_verify_attention(q, k_pool, v_pool, block_tables, q_off, *,
+                           interpret=None):
+    """k-query flash-decode for speculative verify.  q: (B,S,H,Dh) — the
+    S = k+1 verify queries of each row, query ``s`` at absolute position
+    ``q_off[b] + s``; pools: (nb, bs, K, Dh); block_tables: (B, mb) int32;
+    q_off: scalar or (B,) base positions.  Returns (B,S,H,Dh).
+
+    One walk of the row's block table serves all S queries (a staircase
+    causal mask instead of S ragged lengths), so the verify step streams
+    each KV block from HBM once, not S times."""
+    B, S, H, Dh = q.shape
+    K = k_pool.shape[2]
+    assert H % K == 0, (H, K)
+    G = H // K
+    if interpret is None:
+        interpret = not _on_tpu()
+    qg = q.reshape(B, S, K, G, Dh)
+    o = paged_verify_attention_kernel(qg, k_pool, v_pool, block_tables,
+                                      q_off, interpret=interpret)
+    return o.reshape(B, S, H, Dh)

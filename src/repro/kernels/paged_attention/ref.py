@@ -10,6 +10,8 @@ gather semantics.
 
 from __future__ import annotations
 
+import jax.numpy as jnp
+
 from repro.kernels.decode_attention.ref import decode_attention_ref
 
 
@@ -27,3 +29,18 @@ def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, cache_len):
     kg = gather_kv(k_pool, block_tables)
     vg = gather_kv(v_pool, block_tables)
     return decode_attention_ref(q, kg, vg, cache_len)
+
+
+def paged_verify_attention_ref(q, k_pool, v_pool, block_tables, q_off):
+    """k-query speculative-verify oracle.  q: (B,S,H,Dh) — query ``s`` of
+    row ``b`` sits at absolute position ``q_off[b] + s`` and attends the
+    causal prefix ``t <= q_off[b] + s``; the per-query loop defers to the
+    single-token oracle so each query's math (shapes, masks, reduction
+    order) is EXACTLY one plain decode step's.  Returns (B,S,H,Dh)."""
+    kg = gather_kv(k_pool, block_tables)
+    vg = gather_kv(v_pool, block_tables)
+    T = kg.shape[1]
+    outs = [decode_attention_ref(q[:, s], kg, vg,
+                                 jnp.minimum(q_off + s + 1, T))
+            for s in range(q.shape[1])]
+    return jnp.stack(outs, axis=1)

@@ -72,11 +72,13 @@ def serve_direct(cfg, n_requests: int, slots: int, max_len: int,
                  seed: int = 0, admission: str = "continuous",
                  kv: str | None = None, prefill: str = "oneshot",
                  num_blocks: int | None = None,
-                 dup_rate: float = 0.0) -> dict:
+                 dup_rate: float = 0.0, spec: str = "off", spec_k: int = 4,
+                 draft_cfg=None) -> dict:
     params = build_model(cfg).init(jax.random.key(seed))
     eng = ServeEngine(cfg, params, slots=slots, max_len=max_len,
                       admission=admission, kv=kv, prefill=prefill,
-                      num_blocks=num_blocks)
+                      num_blocks=num_blocks, spec=spec, spec_k=spec_k,
+                      draft_cfg=draft_cfg)
     trace = make_trace(cfg.vocab_size, n_requests, max_len=max_len,
                        seed=seed, dup_rate=dup_rate)
     return eng.run_trace(trace)
@@ -125,13 +127,18 @@ def serve_via_pilots(archs: list[str], n_requests: int = 8,
 def serve_fleet(arch: str, n_requests: int, n_pilots: int, *,
                 slots: int = 2, max_len: int = 64, fail_at: int | None = None,
                 fail_count: int = 1, lease_ttl: float = 0.5,
-                registry=None, seed: int = 0) -> dict:
+                registry=None, seed: int = 0, draft: str | None = None,
+                spec_k: int = 4) -> dict:
     """The fleet serve demo/driver: N pilots lease requests from one pool.
 
     ``fail_at`` hard-kills ``fail_count`` lease-holding pilots (one at
     ``fail_at`` settled requests, the next one ``fail_at`` later, ...) —
-    the requeue-on-pilot-failure path.  Returns pool + timing stats; the
-    caller owns no threads when this returns (fleet drained, pool closed).
+    the requeue-on-pilot-failure path.  ``draft`` turns on speculative
+    decoding on every server: a draft arch name, or ``"self"`` for the
+    self-draft ablation (the image's fixed draft seed keeps requeued
+    requests replaying bitwise on survivors).  Returns pool + timing
+    stats; the caller owns no threads when this returns (fleet drained,
+    pool closed).
     """
     cfg = get_smoke_config(arch)
     sim = ClusterSim(registry=registry)
@@ -140,9 +147,13 @@ def serve_fleet(arch: str, n_requests: int, n_pilots: int, *,
                        seed=seed)
     fleet = sim.spawn_fleet(n_pilots, PilotConfig(max_payloads=2,
                                                   idle_grace=0.3))
-    img = PayloadImage(arch=arch, shape="smoke", mode="serve")
-    fleet.submit_servers(img, pool.name, n=n_pilots,
-                         spec={"slots": slots, "max_len": max_len})
+    img = PayloadImage(arch=arch, shape="smoke", mode="serve",
+                       draft=None if draft in (None, "self") else draft)
+    server_spec = {"slots": slots, "max_len": max_len}
+    if draft is not None:
+        server_spec.update({"spec": "draft", "spec_k": spec_k})
+    tids = fleet.submit_servers(img, pool.name, n=n_pilots,
+                                spec=server_spec)
     # submit traffic only once the fleet is up and WARM, so TTFT measures
     # serving (queue wait + requeue delay), not server cold start
     if not pool.wait_servers(n_pilots, timeout=300.0):
@@ -181,6 +192,15 @@ def serve_fleet(arch: str, n_requests: int, n_pilots: int, *,
     # same percentile definition as ServeEngine._stats, so fleet and
     # single-engine ttft_p*_s rows are directly comparable
     pct = lambda v, q: float(np.percentile(v, q)) if v else None
+    # speculative effectiveness, averaged over the servers that ran with
+    # spec on (their serve telemetry survives in the repo's task results)
+    spec_rows = []
+    for tid in tids:
+        r = sim.repo.result(tid)
+        if r and r.telemetry.get("serve", {}).get("spec") == "draft":
+            spec_rows.append(r.telemetry["serve"])
+    mean = lambda k: (sum(s[k] for s in spec_rows) / len(spec_rows)
+                      if spec_rows else 0.0)
     return {
         "drained": ok,
         "wall_s": wall,
@@ -190,6 +210,9 @@ def serve_fleet(arch: str, n_requests: int, n_pilots: int, *,
         "failed_pilots": failed_pilots,
         "pilot_seconds": fleet.pilot_seconds(),
         "results": pool.results(),
+        "spec_servers": len(spec_rows),
+        "acceptance_rate": mean("acceptance_rate"),
+        "tokens_per_step": mean("tokens_per_step"),
         **stats,
     }
 
@@ -349,6 +372,12 @@ def main():
                     help="paged pool size (default: dense-equivalent)")
     ap.add_argument("--dup-rate", type=float, default=0.0,
                     help="fraction of repeated prompts (prefix-cache hits)")
+    ap.add_argument("--draft", default=None,
+                    help="speculative decoding: draft model arch, or "
+                         "'self' for the self-draft ablation (direct and "
+                         "fleet modes)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed per speculative step")
     ap.add_argument("--via-pilots", action="store_true")
     ap.add_argument("--pilots", type=int, default=None,
                     help="fleet serve: N pilots lease requests from one "
@@ -382,8 +411,13 @@ def main():
     if args.pilots:
         out = serve_fleet(args.arch, args.requests, args.pilots,
                           slots=args.slots or 2, max_len=args.max_len or 64,
-                          fail_at=args.fail_at)
+                          fail_at=args.fail_at, draft=args.draft,
+                          spec_k=args.spec_k)
         out.pop("results")
+        if args.draft:
+            print(f"[spec] servers={out['spec_servers']} "
+                  f"acceptance_rate={out['acceptance_rate']:.3f} "
+                  f"tokens_per_step={out['tokens_per_step']:.2f}")
         print(json.dumps(out, indent=1))
         return
     if args.via_pilots:
@@ -392,12 +426,23 @@ def main():
                          max_len=args.max_len)
         return
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    draft_cfg = None
+    if args.draft and args.draft != "self":
+        draft_cfg = (get_smoke_config(args.draft) if args.smoke
+                     else get_config(args.draft))
     stats = serve_direct(cfg, args.requests, args.slots or 4,
                          args.max_len or 128,
                          admission="wave" if args.wave else "continuous",
                          kv=args.kv, prefill=args.prefill,
                          num_blocks=args.num_blocks,
-                         dup_rate=args.dup_rate)
+                         dup_rate=args.dup_rate,
+                         spec="draft" if args.draft else "off",
+                         spec_k=args.spec_k, draft_cfg=draft_cfg)
+    if args.draft:
+        print(f"[spec] spec={stats['spec']} "
+              f"acceptance_rate={stats['acceptance_rate']:.3f} "
+              f"tokens_per_step={stats['tokens_per_step']:.2f} "
+              f"draft_overhead_s={stats['draft_overhead_s']:.3f}")
     print(json.dumps(stats, indent=1))
 
 

@@ -51,6 +51,12 @@ class ModelBundle:
     # row of a PAGED decode state; None for families without a chunked
     # path (enc-dec).
     prefill_chunk: Callable[..., Any] | None = None
+    # (params, tokens (B,S), state) -> (logits (B,S,V), new state) — the
+    # speculative-verify forward: score S = k+1 consecutive positions
+    # (pending token + k draft proposals) of every row in one pass over
+    # the PAGED cache.  Each position's logits are bitwise-equal to the
+    # sequential decode steps the verify replaces.  None for enc-dec.
+    verify: Callable[..., Any] | None = None
 
     # ---- shape specs (ShapeDtypeStruct stand-ins; no allocation) ----------
 
@@ -168,8 +174,15 @@ def _build_lm(cfg, compute):
             compute=compute)
         return logits, {**state, "cache": cache}
 
+    def verify(params, tokens, state):
+        logits, cache = tf.lm_verify(params, cfg, tokens, state["cache"],
+                                     state["pos"],
+                                     block_tables=state.get("block_tables"),
+                                     compute=compute)
+        return logits, {**state, "cache": cache}
+
     return ModelBundle(cfg, init, loss, prefill, decode,
-                       prefill_chunk=prefill_chunk)
+                       prefill_chunk=prefill_chunk, verify=verify)
 
 
 def _build_encdec(cfg, compute):

@@ -456,6 +456,120 @@ def attention_decode(x, p, cfg, cache, pos, *, rope_theta=None,
     return out, {"k": k_cache, "v": v_cache}
 
 
+def _paged_write_seq(pool, new, block_tables, pos):
+    """Multi-position paged write for speculative verify: pool (nb, bs, ...),
+    new (B, S, ...), block_tables (B, mb), pos (B,) base positions.  Row
+    ``b``'s entry ``s`` lands at logical position ``pos_b + s``.  Unlike
+    `_paged_write_rows` (which wraps the table index — safe for single-step
+    decode because eviction fires before the wrap is reachable), positions
+    at or past the table's logical capacity ``mb*bs`` are routed to the
+    reserved scratch block 0 EXPLICITLY: a verify burst can run up to k
+    positions past a row's end before acceptance clamps it, and those
+    overflow writes must never land in a live (or prefix-shared) block."""
+    bs = pool.shape[1]
+    mb = block_tables.shape[1]
+    S = new.shape[1]
+    positions = pos[:, None] + jnp.arange(S)[None]             # (B, S)
+    inb = positions < mb * bs
+    blk = jnp.where(inb, positions // bs, 0)
+    pb = jnp.where(inb, jnp.take_along_axis(block_tables, blk, axis=1), 0)
+    return pool.at[pb, positions % bs].set(new.astype(pool.dtype))
+
+
+def attention_verify(x, p, cfg, cache, pos, *, block_tables,
+                     compute=jnp.bfloat16):
+    """Speculative-verify attention: S = k+1 positions of every row in ONE
+    forward.  x: (B,S,D); pos: (B,) absolute position of x[:,0]; paged
+    cache only (the engine gates speculation to pure-paged archs).
+
+    Writes the S new KV rows at ``pos..pos+S-1`` (overflow past the table's
+    reach lands in the scratch block), then attends each query with its own
+    causal frontier ``cache_len = pos+s+1``.  The XLA fallback is a static
+    per-query loop through `decode_attend` — the exact shapes, masks and
+    f32-softmax reduction order of a plain decode step — which is what
+    makes accepted speculative tokens bitwise-equal to spec="off" greedy
+    decode.  Returns (out (B,S,D), new_cache)."""
+    if cfg.mla is not None:
+        return _mla_verify(x, p, cfg, cache, pos, block_tables=block_tables,
+                           compute=compute)
+    if "kp" not in cache:
+        raise ValueError("attention_verify requires a paged KV cache")
+    B, S, _ = x.shape
+    pos = _row_positions(pos, B)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(compute))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(compute))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(compute))
+    positions = pos[:, None] + jnp.arange(S)[None]             # (B, S)
+    cos, sin = rope_table(positions, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    k_pool = _paged_write_seq(cache["kp"], k, block_tables, pos)
+    v_pool = _paged_write_seq(cache["vp"], v, block_tables, pos)
+    T = block_tables.shape[1] * k_pool.shape[1]
+    if cfg.attn_impl == "pallas":
+        from repro.kernels.paged_attention.ops import paged_verify_attention
+        out = paged_verify_attention(q, k_pool, v_pool, block_tables, pos)
+    else:
+        kg = _paged_gather(k_pool, block_tables)
+        vg = _paged_gather(v_pool, block_tables)
+        out = jnp.concatenate(
+            [decode_attend(q[:, s:s + 1], kg, vg,
+                           jnp.minimum(pos + s + 1, T))
+             for s in range(S)], axis=1)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(compute))
+    return out, {"kp": k_pool, "vp": v_pool}
+
+
+def _mla_verify(x, p, cfg, cache, pos, *, block_tables, compute):
+    """MLA speculative verify over the paged latent pools: per-query loop
+    through `_mla_decode`'s absorbed-weight score math (same shapes, same
+    masks, same reduction order — the bitwise-parity contract)."""
+    s = cfg.mla
+    if "ckvp" not in cache:
+        raise ValueError("_mla_verify requires the paged latent pools")
+    B, S, _ = x.shape
+    pos = _row_positions(pos, B)
+    q_nope, q_rope = _mla_project_q(x, p, cfg, compute)        # (B,S,H,*)
+    positions = pos[:, None] + jnp.arange(S)[None]             # (B, S)
+    cos, sin = rope_table(positions, s.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(compute))
+    ckv_new = rmsnorm(kv_a[..., : s.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    kr_new = apply_rope(kv_a[:, :, None, s.kv_lora_rank:], cos, sin)[:, :, 0]
+    ckv_pool = _paged_write_seq(cache["ckvp"], ckv_new, block_tables, pos)
+    kr_pool = _paged_write_seq(cache["kropep"], kr_new, block_tables, pos)
+    ckv = _paged_gather(ckv_pool, block_tables)
+    krope = _paged_gather(kr_pool, block_tables)
+    T = ckv.shape[1]
+
+    wkv_b = p["wkv_b"].astype(compute)                         # (r,H,n+v)
+    wk = wkv_b[..., : s.qk_nope_head_dim]
+    wv = wkv_b[..., s.qk_nope_head_dim:]
+    scale = 1.0 / np.sqrt(s.qk_head_dim)
+    outs = []
+    for sq in range(S):
+        q_lat = jnp.einsum("bhn,rhn->bhr", q_nope[:, sq], wk)
+        scores = (
+            jnp.einsum("bhr,btr->bht", q_lat, ckv.astype(compute),
+                       preferred_element_type=jnp.float32)
+            + jnp.einsum("bhk,btk->bht", q_rope[:, sq], krope.astype(compute),
+                         preferred_element_type=jnp.float32)
+        ) * scale
+        valid = (jnp.arange(T)[None]
+                 < jnp.minimum(pos + sq + 1, T)[:, None])      # (B,T)
+        scores = jnp.where(valid[:, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out_lat = jnp.einsum("bht,btr->bhr", probs.astype(compute),
+                             ckv.astype(compute),
+                             preferred_element_type=jnp.float32)
+        out = jnp.einsum("bhr,rhv->bhv", out_lat.astype(compute), wv)
+        outs.append(jnp.einsum("bhv,hvd->bd", out,
+                               p["wo"].astype(compute))[:, None])
+    return (jnp.concatenate(outs, axis=1),
+            {"ckvp": ckv_pool, "kropep": kr_pool})
+
+
 def init_kv_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
     """Per-attention-layer cache pytree (SWA: rolling buffer of window)."""
     if cfg.mla is not None:

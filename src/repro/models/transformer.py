@@ -319,6 +319,54 @@ def lm_decode(params, cfg, token, cache, pos, *, block_tables=None,
     return logits, new_cache
 
 
+def lm_verify(params, cfg, tokens, cache, pos, *, block_tables=None,
+              compute=jnp.bfloat16):
+    """Speculative-verify forward: score S = k+1 consecutive positions of
+    every row in ONE pass.  tokens: (B,S) int32 — ``tokens[:,0]`` is the
+    pending token at ``pos`` and ``tokens[:,1:]`` the draft proposals;
+    pos: (B,) absolute position of tokens[:,0].  Structurally `lm_decode`
+    with an S-wide token axis: every position-wise op (embed, norms, MLP,
+    dense-MoE, logits) batches over S, while the attention mixer loops the
+    S queries through the exact single-token attend — which is what keeps
+    each position's logits bitwise-equal to the sequential decode steps it
+    replaces.  Paged attention-only archs: SSM mixers have no multi-token
+    state-rollback path (the engine falls back to spec="off" for them).
+    Returns (logits (B,S,V), new cache)."""
+    slots = layer_slots(cfg)
+    x = embed_lookup(tokens, params["embed"], compute)
+
+    def group_body(x, inp):
+        gparams, gcache = inp
+        x = constrain(x, "b..")
+        new_gcache = []
+        for i, slot in enumerate(slots):
+            if slot["mixer"] != "attn":
+                raise ValueError(
+                    f"{cfg.name}: speculative verify needs every mixer to "
+                    "be paged attention; SSM state rows advance one token "
+                    "at a time and cannot roll back a rejected suffix")
+            p = gparams[i]
+            h = apply_norm(x, p["mixer_norm"], cfg)
+            h, nc = attn.attention_verify(
+                h, p["mixer"], cfg, gcache[i], pos,
+                block_tables=block_tables, compute=compute)
+            new_gcache.append(nc)
+            x = x + h
+            if slot["ffn"] != "none":
+                h = apply_norm(x, p["ffn_norm"], cfg)
+                if slot["ffn"] == "dense":
+                    h = apply_mlp(h, p["ffn"], cfg, compute)
+                else:
+                    h, _ = moe_mod.apply_moe_dense(h, p["ffn"], cfg, compute)
+                x = x + h
+        return x, new_gcache
+
+    x, new_cache = jax.lax.scan(group_body, x, (params["layers"], cache))
+    x = apply_norm(x, params["final_norm"], cfg)
+    logits = lm_logits(x, head_matrix(params, cfg), cfg.logit_softcap)
+    return logits, new_cache
+
+
 def lm_prefill_chunk(params, cfg, tokens, cache, table_row, slot,
                      q_offset, *, compute=jnp.bfloat16):
     """One CHUNK of an admission prefill, into ONE batch row of the shared

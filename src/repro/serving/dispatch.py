@@ -404,6 +404,14 @@ class FleetDispatcher:
         n = len(ttfts)
         blocked = {s: int(d.get("blocked_admissions", 0))
                    for s, d in tele.items()}
+        # speculative-decoding effectiveness, averaged over the servers
+        # that report it: tokens_per_step is the fleet's EFFECTIVE per-
+        # pilot throughput (> slot count when draft acceptance is high),
+        # which the autoscaler uses in place of nominal slot capacity
+        acc = [float(d["acceptance_rate"]) for d in tele.values()
+               if "acceptance_rate" in d]
+        tps = [float(d["tokens_per_step"]) for d in tele.values()
+               if "tokens_per_step" in d]
         return {
             "queued": rs["queued"],
             "leased": rs["leased"],
@@ -417,6 +425,8 @@ class FleetDispatcher:
                  for d in tele.values()), default=0.0),
             "blocked_admissions": sum(blocked.values()),
             "blocked_by_server": blocked,
+            "acceptance_rate": sum(acc) / len(acc) if acc else 0.0,
+            "tokens_per_step": sum(tps) / len(tps) if tps else 0.0,
         }
 
     def lease_holders(self) -> dict[str, list[int]]:

@@ -111,6 +111,7 @@ class _PrefillJob:
     off: int                           # == prefix-hit tokens at creation
     row: list                          # physical block ids (prefix + fresh)
     keys: list                         # full-block chain-hash keys
+    nhit: int = 0                      # prefix-hit blocks (draft install)
 
 
 def admit_length(prompt_len: int, max_len: int) -> int:
@@ -182,6 +183,92 @@ def make_engine_step(bundle, max_len: int):
     return jax.jit(step, donate_argnums=(1, 2, 3))
 
 
+def make_draft_step(bundle, k: int, max_len: int):
+    """The draft half of a speculative step: ``k`` autoregressive draft
+    decodes fused into one jitted ``lax.scan`` (one dispatch, zero
+    device→host syncs).  The draft writes its KV into its OWN paged pools,
+    addressed by the TARGET's block tables — same physical block ids, so
+    admission/eviction bookkeeping covers both caches for free.  Returns
+    ``(drafts (slots, k) int32, new draft cache)``."""
+    def draft(params, cache, token, pos, block_tables):
+        state = {"cache": cache, "token": token, "pos": pos,
+                 "block_tables": block_tables}
+
+        def body(st, _):
+            # clamp the write position: a row whose speculative reach
+            # crosses max_len keeps overwriting the last in-bounds
+            # position — a block only this row can own (prefix sharing
+            # never reaches the final position's block) — and drafts past
+            # the end can never be accepted (acceptance clamps at
+            # max_len - pos), so live KV is untouched either way
+            _, nst = bundle.decode(
+                params, {**st, "pos": jnp.minimum(st["pos"], max_len - 1)})
+            nst = {**nst, "pos": st["pos"] + 1}
+            return nst, nst["token"][:, 0]
+
+        state, toks = jax.lax.scan(body, state, None, length=k)
+        return jnp.transpose(toks), state["cache"]
+
+    return jax.jit(draft, donate_argnums=(1,))
+
+
+def make_verify_step(bundle, max_len: int, k: int):
+    """The verify half of a speculative step: ONE batched (k+1)-position
+    target forward over [pending token, k drafts], then greedy acceptance
+    (truncate at the first draft/target mismatch), budget debit and done
+    mask — all on device.  The packed return is a single (k+3, slots)
+    int32 array riding the engine's one-transfer-per-step contract:
+    row 0 = accepted length ``a`` (0 for free slots), row 1 = done flags,
+    rows 2..k+2 = the k+1 target-verified tokens (the host appends the
+    first ``a`` of them).  Rejected suffixes need no device work to roll
+    back: the host frontier simply does not advance over them, the next
+    step's writes land at the committed frontier and overwrite, and
+    per-query causal masks hide anything beyond ``pos``."""
+    def step(params, state, active, budget, drafts):
+        tokens = jnp.concatenate([state["token"], drafts], axis=1)
+        logits, new_state = bundle.verify(params, tokens, state)
+        preds = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B, k+1)
+        # t_{s+1} is valid iff its input d_s matched the target's own
+        # pick t_s at every position up to s: cumprod of the match mask
+        match = (preds[:, :k] == drafts).astype(jnp.int32)
+        a = 1 + jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+        # clamp to the slot's remaining budget and max_len room (verify
+        # probes up to k positions past both; the overshoot is garbage by
+        # construction and must not be committed), zero for free slots
+        a = jnp.minimum(a, jnp.minimum(budget, max_len - state["pos"]))
+        a = jnp.maximum(a, 0) * active.astype(jnp.int32)
+        budget = budget - a
+        pos = state["pos"] + a
+        done = active & ((budget <= 0) | (pos >= max_len))
+        token = jnp.take_along_axis(
+            preds, jnp.maximum(a - 1, 0)[:, None], axis=1)
+        token = jnp.where(active[:, None], token, state["token"])
+        new_state = {**new_state, "token": token, "pos": pos}
+        packed = jnp.concatenate(
+            [a[None], done.astype(jnp.int32)[None], preds.T], axis=0)
+        return packed, new_state, active & ~done, budget
+
+    return jax.jit(step, donate_argnums=(1, 2, 3))
+
+
+def spec_ineligible_reason(cfg, kv: str) -> str | None:
+    """Why an arch cannot run draft-and-verify speculation (None == it
+    can).  Mirrors the PR 3 dense fallback: instead of failing, the engine
+    records the reason and serves non-speculatively."""
+    if cfg.is_encdec:
+        return "enc-dec archs have no decoder-only verify path"
+    if cfg.is_attention_free or cfg.ssm is not None:
+        return ("SSM state rows advance one token at a time and cannot "
+                "roll back a rejected speculative suffix")
+    if cfg.sliding_window is not None:
+        return ("SWA rolling rings overwrite history in place and cannot "
+                "roll back a rejected speculative suffix")
+    if kv != "paged":
+        return ("speculative rollback rides the paged block tables; "
+                "kv='dense' has no frontier to truncate")
+    return None
+
+
 class ServeEngine:
     """Continuous-batching engine over a paged KV cache.
 
@@ -206,9 +293,13 @@ class ServeEngine:
                  block_size: int = 16, num_blocks: int | None = None,
                  prefill: str = "oneshot", prefill_chunk: int = 32,
                  prefix_sharing: bool = True, bundle=None, step_fn=None,
-                 prefill_fn=None, chunk_fn=None):
+                 prefill_fn=None, chunk_fn=None,
+                 spec: str = "off", spec_k: int = 4, draft_cfg=None,
+                 draft_params=None, draft_bundle=None, draft_fn=None,
+                 verify_fn=None, draft_prefill_fn=None):
         assert admission in ("continuous", "wave"), admission
         assert prefill in ("oneshot", "chunked"), prefill
+        assert spec in ("off", "draft"), spec
         # an arch only pages if some attention layer's per-token state can
         # live in blocks: all-SWA models are pure rolling rings and
         # attention-free models pure SSM state — a pool there would be
@@ -242,6 +333,7 @@ class ServeEngine:
             assert prefill_chunk % block_size == 0, (prefill_chunk,
                                                      block_size)
             nb = num_blocks or (slots * (max_len // block_size) + 1)
+            self._num_blocks = nb
             self.allocator = BlockAllocator(nb, block_size)
             # prefix reuse needs ALL per-token state inside paged blocks:
             # SWA ring rows and SSM state rows are per-slot and cannot be
@@ -258,6 +350,7 @@ class ServeEngine:
             self.prefix = None
             self.state = init_decode_state(cfg, slots, max_len)
             self.max_blocks_per_slot = 0
+            self._num_blocks = 0
         self.budget = jnp.zeros((slots,), jnp.int32)          # device-side
         self.active = jnp.zeros((slots,), bool)               # device-side
         self.slot_meta = [SlotState() for _ in range(slots)]
@@ -278,6 +371,11 @@ class ServeEngine:
         self.prefix_hit_tokens = 0
         self._kv_util_sum = 0.0
         self.kv_peak_live_tokens = 0
+        # speculative-decode accounting (all zero when spec == "off")
+        self.spec_drafted = 0          # draft proposals scored by verify
+        self.spec_accepted = 0         # of those, committed to requests
+        self.tokens_emitted = 0        # total committed tokens (all modes)
+        self.draft_time_s = 0.0        # wall time inside the draft chain
 
         # one compiled decode step for the whole engine lifetime; engine
         # state (decode state + budget + active) is donated every step
@@ -287,6 +385,58 @@ class ServeEngine:
         self._chunk_fn = chunk_fn or (
             jax.jit(self.bundle.prefill_chunk, donate_argnums=1)
             if self.bundle.prefill_chunk is not None else None)
+
+        # ---- speculative decoding: draft-and-verify multi-token steps ----
+        # the draft model is itself a late-binding decision: a serve image
+        # names it in its payload spec and the engine falls back (recorded,
+        # not fatal) wherever the arch cannot roll back a rejected suffix
+        self.spec = "off"
+        self.spec_k = int(spec_k)
+        self.spec_fallback_reason = None
+        if spec == "draft":
+            reason = spec_ineligible_reason(cfg, self.kv)
+            if reason is None and draft_cfg is not None:
+                dr = spec_ineligible_reason(draft_cfg, "paged")
+                if dr is not None:
+                    reason = f"draft arch: {dr}"
+                elif draft_cfg.vocab_size != cfg.vocab_size:
+                    reason = ("draft vocab differs from target "
+                              f"({draft_cfg.vocab_size} vs "
+                              f"{cfg.vocab_size}); proposals would not be "
+                              "target token ids")
+            if reason is not None:
+                self.spec_fallback_reason = reason
+            else:
+                self.spec = "draft"
+        if self.spec == "draft":
+            self.draft_cfg = draft_cfg or cfg
+            # draft_cfg None == self-draft: the target proposes for itself
+            # (the upper-bound ablation; every proposal is accepted)
+            self.draft_bundle = draft_bundle or (
+                self.bundle if draft_cfg is None
+                else build_model(self.draft_cfg))
+            if draft_params is not None:
+                self.draft_params = draft_params
+            elif draft_cfg is None:
+                self.draft_params = params
+            else:
+                # fixed seed: every engine in a fleet reconstructs bitwise-
+                # identical draft weights, so a requeued request replays the
+                # same tokens on whichever server picks it up
+                self.draft_params = self.draft_bundle.init(jax.random.key(0))
+            # the draft's paged pools shadow the target's: same num_blocks,
+            # same block_size, addressed through the SAME block-table ids —
+            # admission/eviction bookkeeping covers both caches at once
+            self._draft_cache = init_decode_state(
+                self.draft_cfg, slots, max_len, kv="paged",
+                num_blocks=self._num_blocks,
+                block_size=block_size)["cache"]
+            self._draft_fn = draft_fn or make_draft_step(
+                self.draft_bundle, self.spec_k, max_len)
+            self._verify_fn = verify_fn or make_verify_step(
+                self.bundle, max_len, self.spec_k)
+            self._draft_prefill = draft_prefill_fn or jax.jit(
+                self.draft_bundle.prefill)
 
     # ------------------------------------------------------------------
 
@@ -387,7 +537,7 @@ class ServeEngine:
             self._zero_ssm_rows(si)
             self._jobs.append(_PrefillJob(
                 si=si, req=req, padded=padded, plen=plen,
-                off=nhit * bs, row=row, keys=keys))
+                off=nhit * bs, row=row, keys=keys, nhit=nhit))
             return True
 
         logits, cache = self._prefill(
@@ -397,6 +547,7 @@ class ServeEngine:
             self.state = _install_slot_paged(
                 self.state, cache, si, plen, nxt, row, nhit, bs)
             self._publish_prefix(keys, row, nhit, shareable)
+            self._install_draft(padded, row, nhit)
         else:
             self.state = _install_slot(self.state, cache, si, plen, nxt)
         self._finish_admission(si, req, plen, nxt)
@@ -437,6 +588,20 @@ class ServeEngine:
             new_cache.append(leaf)
         self.state = {**self.state, "cache": new_cache}
 
+    def _install_draft(self, padded, row, nhit: int):
+        """Prompt-prefill the DRAFT model for a freshly admitted request
+        and scatter its KV into the draft pools at the same physical block
+        ids the target admission mapped.  Prefix-hit blocks are skipped:
+        draft prefill is deterministic, so the admission that published a
+        shared block already left bit-identical draft KV in the shadow
+        pool — prefix reuse covers both caches for free."""
+        if self.spec != "draft":
+            return
+        _, dcache = self._draft_prefill(
+            self.draft_params, {"tokens": jnp.asarray(padded[None])})
+        self._draft_cache = _install_draft_paged(
+            self._draft_cache, dcache, row, nhit, self.block_size)
+
     # ------------------------------------------------------------------
     # chunked prefill: at most ONE chunk per engine tick
     # ------------------------------------------------------------------
@@ -471,6 +636,10 @@ class ServeEngine:
                     jnp.asarray(row_arr)))
         self.state["token"] = self.state["token"].at[job.si, 0].set(nxt)
         self.state["pos"] = self.state["pos"].at[job.si].set(job.plen)
+        # the DRAFT prompt KV lands in one shot on the final chunk's tick:
+        # the draft is orders of magnitude smaller than the target, so its
+        # whole-bucket prefill costs less than one more target chunk would
+        self._install_draft(job.padded, job.row, job.nhit)
         self._publish_prefix(
             job.keys, job.row, 0,
             min(job.plen // self.block_size,
@@ -506,6 +675,17 @@ class ServeEngine:
         self.state = {**self.state, "cache": cache}
 
     def _evict_slot(self, si: int):
+        # Frontier truncation doubles as the speculative rollback path: a
+        # cancel or eviction can land MID-VERIFY, with draft/verify KV
+        # written up to spec_k positions past the committed frontier (in
+        # BOTH the target and the shadow draft pools).  Speculation never
+        # allocates — admission maps the request's whole reach — so every
+        # frontier extension lives in blocks this row already owns; freeing
+        # `_slot_blocks` releases all of them and zeroing the device table
+        # row makes the stale entries unreachable.  Refcounts therefore
+        # balance exactly one free per admission-time alloc/share, with no
+        # speculative remainder to leak or double-free (the cancel-mid-
+        # verify churn test asserts the allocator returns to prefix-only).
         m = self.slot_meta[si]
         if self.kv == "paged":
             for bid in self._slot_blocks[si]:
@@ -576,33 +756,61 @@ class ServeEngine:
         if not actives:
             return 0
         guard = self._guard_rows() if self._jobs else None
-        packed, self.state, self.active, self.budget = self._step_fn(
-            self.params, self.state, self.active, self.budget)
+        if self.spec == "draft":
+            # draft chain: k small-model decodes in one dispatch, writing
+            # into the shadow pools.  block_until_ready is a host SYNC, not
+            # a transfer — the drafts stay device-resident and feed verify
+            # directly; only the packed verify result crosses to the host.
+            t_draft = time.monotonic()
+            drafts, self._draft_cache = self._draft_fn(
+                self.draft_params, self._draft_cache, self.state["token"],
+                self.state["pos"], self.state["block_tables"])
+            jax.block_until_ready(drafts)
+            self.draft_time_s += time.monotonic() - t_draft
+            packed, self.state, self.active, self.budget = self._verify_fn(
+                self.params, self.state, self.active, self.budget, drafts)
+        else:
+            packed, self.state, self.active, self.budget = self._step_fn(
+                self.params, self.state, self.active, self.budget)
         if guard is not None:
             self._restore_rows(guard)
         self.steps += 1
         self.idle_slot_steps += self.slots - len(actives)
-        for si in actives:
-            self._host_pos[si] += 1
         out = jax.device_get(packed)       # THE device→host transfer
         self.d2h_transfers += 1
-        self._sample_kv_pressure()
-        toks, dones = out[0], out[1]
+        if self.spec == "draft":
+            acc, dones, tok_rows = out[0], out[1], out[2:]
+        else:
+            acc = np.ones((self.slots,), np.int64)
+            toks, dones = out[0], out[1]
+            tok_rows = toks[None]
+        emitted = 0
+        for si in actives:
+            self._host_pos[si] += int(acc[si])
+            emitted += int(acc[si])
+        self._sample_kv_pressure()         # before evictions, as ever
         now = time.monotonic()
         for si in actives:
             meta = self.slot_meta[si]
             req = self._live[meta.rid]
-            req.tokens.append(int(toks[si]))
+            req.tokens.extend(int(tok_rows[s][si])
+                              for s in range(int(acc[si])))
             if dones[si]:
                 req.done_s = now - req.submitted
                 self.done[req.rid] = req
                 del self._live[meta.rid]
                 self._evict_slot(si)
+        if self.spec == "draft":
+            self.spec_drafted += self.spec_k * len(actives)
+            # of each slot's a committed tokens, a-1 were draft proposals
+            # the target ratified; the last is the target's own bonus token
+            self.spec_accepted += emitted - len(actives)
+        self.tokens_emitted += emitted
         # the latency every decoding slot experienced this tick — admission
         # work included, which is exactly what the chunked-prefill
         # interleave rule bounds (<= one chunk per tick)
         self._tick_times.append(time.monotonic() - t_tick)
-        return len(actives)
+        return emitted
 
     def warm_admission(self):
         """Stage every admission executable ahead of the first request:
@@ -617,6 +825,13 @@ class ServeEngine:
             logits, _ = self._prefill(
                 self.params, {"tokens": jnp.zeros((1, pb), jnp.int32)})
             jax.block_until_ready(logits)
+            if self.spec == "draft":
+                # the draft bundle prefills once per admission too — stage
+                # its trace for every bucket alongside the target's
+                dlogits, _ = self._draft_prefill(
+                    self.draft_params,
+                    {"tokens": jnp.zeros((1, pb), jnp.int32)})
+                jax.block_until_ready(dlogits)
         if self.prefill_mode == "chunked" and self._chunk_fn is not None:
             row = jnp.zeros((max(self.max_blocks_per_slot, 1),), jnp.int32)
             for C in prefill_chunk_shapes(self.max_len, self.block_size,
@@ -680,6 +895,13 @@ class ServeEngine:
             "prefix_hit_rate": (self.prefix_hit_tokens
                                 / self.prompt_tokens_total
                                 if self.prompt_tokens_total else 0.0),
+            # speculative effectiveness, live: the autoscaler reads these
+            # to convert nominal slot capacity into EFFECTIVE token/step
+            # capacity (a pool decoding 3 tokens/step needs fewer pilots)
+            "acceptance_rate": (self.spec_accepted / self.spec_drafted
+                                if self.spec_drafted else 0.0),
+            "tokens_per_step": (self.tokens_emitted / self.steps
+                                if self.steps else 0.0),
         }
 
     def _sample_kv_pressure(self):
@@ -740,7 +962,12 @@ class ServeEngine:
         return self._stats(decoded, time.monotonic() - t0)
 
     def _stats(self, decoded: int, wall: float) -> dict:
-        util = (decoded / (self.steps * self.slots)) if self.steps else 0.0
+        # occupancy, not throughput: with speculation a slot can commit
+        # several tokens per step, so utilization counts slot-steps that
+        # had a live request (identical to decoded/(steps*slots) when
+        # spec == "off", where every live slot-step emits exactly one)
+        denom = self.steps * self.slots
+        util = (denom - self.idle_slot_steps) / denom if self.steps else 0.0
         ttfts = [r.first_token_s for r in self.done.values()
                  if r.first_token_s is not None]
         tpots = [(r.done_s - r.first_token_s) / max(1, len(r.tokens) - 1)
@@ -779,6 +1006,14 @@ class ServeEngine:
                                 if self.prompt_tokens_total else 0.0),
             "prefill_chunks": self.prefill_chunks,
             "blocked_admissions": self.blocked_admissions,
+            # speculative decoding
+            "spec": self.spec,
+            "spec_k": self.spec_k if self.spec != "off" else 0,
+            "spec_fallback_reason": self.spec_fallback_reason,
+            "acceptance_rate": (self.spec_accepted / self.spec_drafted
+                                if self.spec_drafted else 0.0),
+            "tokens_per_step": decoded / self.steps if self.steps else 0.0,
+            "draft_overhead_s": self.draft_time_s,
         }
 
     def reset_metrics(self):
@@ -795,6 +1030,10 @@ class ServeEngine:
         self.prefix_hit_tokens = 0
         self._kv_util_sum = 0.0
         self.kv_peak_live_tokens = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self.tokens_emitted = 0
+        self.draft_time_s = 0.0
         self._tick_times = []
         if self.prefix is not None:
             self.prefix.lookups = 0
@@ -857,6 +1096,22 @@ def _install_slot_paged(state, prefill_cache, slot: int, plen: int,
         "block_tables": state["block_tables"].at[slot].set(
             jnp.asarray(row_arr)),
     }
+
+
+def _install_draft_paged(cache, prefill_cache, row: list, nhit: int,
+                         block_size: int):
+    """Scatter a DRAFT-model prefill into the draft's shadow block pools at
+    the same physical ids the target admission mapped.  Spec eligibility
+    guarantees every draft cache leaf is paged (no SSM/SWA per-row state),
+    so unlike `_install_slot_paged` there is no per-row merge arm."""
+    paged_keys = {"kp": "k", "vp": "v", "ckvp": "ckv", "kropep": "krope"}
+    new_cache = []
+    for st_leaf, pf_leaf in zip(cache, prefill_cache):
+        new_cache.append({
+            key: _scatter_blocks(val, pf_leaf[paged_keys[key]],
+                                 row, nhit, block_size)
+            for key, val in st_leaf.items()})
+    return new_cache
 
 
 def _scatter_blocks(pool, src, row: list, nhit: int, block_size: int):
