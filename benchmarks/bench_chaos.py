@@ -1,0 +1,185 @@
+"""Chaos benchmark: gray-failure drills against the hardened serving fleet.
+
+A :class:`~repro.core.chaos.ChaosController` runs a scripted
+:class:`~repro.core.chaos.FaultPlan` — hard crash, stall (renewing but
+frozen), slow straggler, flaky heartbeats, control-plane partition, and a
+poison request that kills every pilot that fetches it — against a
+FleetDispatcher fleet with the full :class:`RobustnessPolicy` hardening on
+(progress watchdog, hedged re-dispatch, backoff requeue, blast-radius
+quarantine).
+
+Gates (the run RAISES on violation):
+
+* 100% completion of the NON-POISON requests;
+* committed tokens bitwise-identical to a single-engine no-chaos baseline
+  (greedy decode + first-completion-wins keeps replay/hedge exactly-once);
+* p99 pool TTFT <= 3x the no-chaos fleet run;
+* the poison request quarantined after at most 2 pilot kills, with ZERO
+  false positives (nothing else quarantined);
+* zero KV block-pool leaks across every gracefully-exited server.
+
+``run_smoke`` is the CI variant: one kill + one stall + one hedged slow
+straggler, with the completion + bitwise + leak gates and a hedge
+actually fired.
+"""
+
+from __future__ import annotations
+
+from benchmarks.bench_fleet_serve import _baseline
+from repro.configs.base import get_smoke_config
+from repro.core.chaos import FaultPlan, FaultSpec
+from repro.core.images import ExecutableRegistry
+from repro.core.taskrepo import BackoffPolicy
+from repro.launch.serve import make_trace, serve_fleet
+from repro.serving.dispatch import RobustnessPolicy
+
+ARCH = "smollm-360m"
+MAX_LEN = 64
+SLOTS_PER_PILOT = 2
+LEASE_TTL = 0.4
+
+
+def _policy() -> RobustnessPolicy:
+    """Drill-tuned hardening: deadlines and budgets scaled to smoke-model
+    request service times (~0.1-0.5 s), so every detection layer can fire
+    within a short trace."""
+    return RobustnessPolicy(
+        stall_deadline=0.5, sick_cooldown=1.0,
+        # p50-based straggler budget: a handful of slow-server completions
+        # in a short drill would blow a p95 budget sky-high; the median
+        # stays anchored to healthy service
+        hedging=True, hedge_percentile=50.0, hedge_min_s=0.3,
+        hedge_factor=3.0, hedge_min_samples=4, watchdog_interval=0.05,
+        max_hedges=2, bench_after_hedges=2,
+        quarantine_after=2,
+        backoff=BackoffPolicy(base=0.1, cap=0.5))
+
+
+def _check_tokens(label: str, out: dict, base_tokens: dict,
+                  n_requests: int):
+    if out["completed"] != n_requests:
+        raise RuntimeError(
+            f"chaos run {label} completed {out['completed']}/{n_requests} "
+            f"non-poison requests — the hardening lost work")
+    for rid, toks in out["results"].items():
+        if list(toks) != list(base_tokens[rid]):
+            raise RuntimeError(
+                f"chaos run {label}: rid {rid} token stream diverged from "
+                f"the no-chaos baseline — replay/hedge broke determinism")
+    if out["leaked_blocks"] != 0:
+        raise RuntimeError(
+            f"chaos run {label} leaked {out['leaked_blocks']} KV pool "
+            f"blocks — a cancel/hedge/revoke path dropped refcounts")
+
+
+def _check_quarantine(out: dict):
+    if sorted(out["quarantined_rids"]) != sorted(out["poison_rids"]):
+        raise RuntimeError(
+            f"quarantine mismatch: quarantined {out['quarantined_rids']} "
+            f"vs poison {out['poison_rids']} — false positive or an "
+            f"unquarantined poison")
+    kills = (out.get("chaos") or {}).get("poison_kills", {})
+    for rid, n in kills.items():
+        if n > 2:
+            raise RuntimeError(
+                f"poison rid {rid} killed {n} pilots before quarantine "
+                f"(gate: <= 2)")
+
+
+def run(n_requests: int = 48, n_pilots: int = 6) -> list[tuple[str, float, str]]:
+    cfg = get_smoke_config(ARCH)
+    trace = make_trace(cfg.vocab_size, n_requests, max_len=MAX_LEN, seed=0)
+    base = _baseline(cfg, trace, n_pilots * SLOTS_PER_PILOT)
+
+    registry = ExecutableRegistry()       # shared: scenarios reuse compiles
+    # reference: the hardened fleet with NO faults — the TTFT the chaos
+    # run is judged against (hardening on in both, chaos is the variable)
+    ref = serve_fleet(ARCH, n_requests, n_pilots, slots=SLOTS_PER_PILOT,
+                      max_len=MAX_LEN, lease_ttl=LEASE_TTL,
+                      registry=registry, robustness=_policy())
+    _check_tokens("no-chaos", ref, base["tokens"], n_requests)
+
+    # the mixed drill: every fault kind, timed to land while the trace is
+    # in flight (the smoke model serves a request in ~0.1-0.3 s, so the
+    # whole window is the first half second), plus one poison request
+    plan = FaultPlan(faults=[
+        FaultSpec(kind="slow", at_s=0.10, duration_s=1.2, factor=20.0),
+        FaultSpec(kind="crash", at_s=0.15),
+        FaultSpec(kind="stall", at_s=0.20, duration_s=1.2),
+        FaultSpec(kind="flaky_heartbeat", at_s=0.20, duration_s=2.0,
+                  drop_rate=0.75),
+        FaultSpec(kind="partition", at_s=0.35, duration_s=0.6),
+    ], poison=True)
+    out = serve_fleet(ARCH, n_requests, n_pilots, slots=SLOTS_PER_PILOT,
+                      max_len=MAX_LEN, lease_ttl=LEASE_TTL,
+                      registry=registry, robustness=_policy(),
+                      chaos_plan=plan, poison=1)
+    _check_tokens("mixed", out, base["tokens"], n_requests)
+    _check_quarantine(out)
+
+    ratio = (out["ttft_p99_s"] / ref["ttft_p99_s"]
+             if ref["ttft_p99_s"] else float("inf"))
+    if ratio > 3.0:
+        raise RuntimeError(
+            f"chaos pushed p99 TTFT to {ratio:.2f}x the no-chaos fleet "
+            f"run (gate: <= 3x)")
+
+    detail = (f"{ARCH}, {n_pilots} pilots x {SLOTS_PER_PILOT} slots, "
+              f"{n_requests} reqs + 1 poison, lease_ttl {LEASE_TTL}s")
+    faults_applied = float((out.get("chaos") or {}).get("faults_applied", 0))
+    return [
+        ("chaos_completed", float(out["completed"]),
+         f"of {n_requests} non-poison ({detail})"),
+        ("chaos_token_match", 1.0,
+         "chaos-run tokens bitwise == no-chaos baseline (raises otherwise)"),
+        ("chaos_ttft_p99_ratio", ratio,
+         "chaos p99 TTFT / no-chaos fleet p99 TTFT (gate: <= 3)"),
+        ("chaos_faults_applied", faults_applied,
+         "crash+stall+slow+flaky+partition+poison landed"),
+        ("chaos_quarantined", float(out["quarantined"]),
+         "poison requests settled by blast-radius accounting (= poison count)"),
+        ("chaos_poison_kills", float(sum(
+            (out.get("chaos") or {}).get("poison_kills", {}).values())),
+         "pilots the poison killed before quarantine (gate: <= 2)"),
+        ("chaos_hedges", float(out["hedges"]),
+         "hedged duplicate dispatches (stragglers raced)"),
+        ("chaos_stalls_revoked", float(out["stalls_revoked"]),
+         "renewing-but-frozen requests revoked by the progress watchdog"),
+        ("chaos_replays", float(out["replays"]),
+         "re-dispatches beyond first (the faults' price)"),
+        ("chaos_leaked_blocks", float(out["leaked_blocks"]),
+         "KV pool blocks stranded after drain (gate: 0)"),
+    ]
+
+
+def run_smoke(n_requests: int = 16, n_pilots: int = 3) -> list[tuple[str, float, str]]:
+    """CI smoke: one kill + one stall + one hedged slow straggler.
+    Completion, bitwise and leak gates, and the hedge must actually fire
+    (the slow fault runs 40x for several seconds against a 0.3 s straggler
+    budget floor, so a held request always crosses it)."""
+    cfg = get_smoke_config(ARCH)
+    trace = make_trace(cfg.vocab_size, n_requests, max_len=MAX_LEN, seed=0)
+    base = _baseline(cfg, trace, n_pilots * SLOTS_PER_PILOT)
+    plan = FaultPlan(faults=[
+        FaultSpec(kind="slow", at_s=0.05, duration_s=5.0, factor=40.0),
+        FaultSpec(kind="crash", at_s=0.15),
+        FaultSpec(kind="stall", at_s=0.25, duration_s=2.0),
+    ])
+    out = serve_fleet(ARCH, n_requests, n_pilots, slots=SLOTS_PER_PILOT,
+                      max_len=MAX_LEN, lease_ttl=LEASE_TTL,
+                      registry=ExecutableRegistry(), robustness=_policy(),
+                      chaos_plan=plan)
+    _check_tokens("smoke", out, base["tokens"], n_requests)
+    if out["hedges"] < 1:
+        raise RuntimeError(
+            "the 8x-slow straggler never triggered a hedged re-dispatch")
+    return [
+        ("chaos_smoke_completed", float(out["completed"]),
+         f"of {n_requests}, crash+stall+slow against {n_pilots} pilots"),
+        ("chaos_smoke_token_match", 1.0,
+         "chaos-run tokens bitwise == no-chaos baseline"),
+        ("chaos_smoke_hedges", float(out["hedges"]),
+         "straggler rescued by hedged re-dispatch (gate: >= 1)"),
+        ("chaos_smoke_leaked_blocks", float(out["leaked_blocks"]),
+         "KV pool blocks stranded after drain (gate: 0)"),
+    ]

@@ -12,10 +12,10 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_autoscale, bench_bind, bench_fleet_serve,
-                        bench_lifecycle, bench_monitor, bench_scheduler,
-                        bench_serving, bench_spec_decode, bench_train,
-                        roofline)
+from benchmarks import (bench_autoscale, bench_bind, bench_chaos,
+                        bench_fleet_serve, bench_lifecycle, bench_monitor,
+                        bench_scheduler, bench_serving, bench_spec_decode,
+                        bench_train, roofline)
 
 SUITES = {
     "bind": bench_bind.run,            # paper Fig. 4: late-binding cost
@@ -28,6 +28,8 @@ SUITES = {
     "fleet_serve_smoke": bench_fleet_serve.run_smoke,  # CI failure smoke
     "autoscale": bench_autoscale.run,  # bursty demand vs peak-sized fleet
     "autoscale_smoke": bench_autoscale.run_smoke,  # ramp + scale-to-zero CI
+    "chaos": bench_chaos.run,          # gray-failure drill, all gates
+    "chaos_smoke": bench_chaos.run_smoke,  # kill+stall+hedged straggler CI
     "spec_decode": bench_spec_decode.run,          # draft-and-verify tok/s
     "spec_decode_smoke": bench_spec_decode.run_smoke,  # bitwise + accept CI
     "train": bench_train.run,          # payload-side training numbers

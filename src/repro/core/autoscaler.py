@@ -171,8 +171,13 @@ class FleetAutoscaler:
         self.last_signals = sig
         live = self.fleet.size()
         # mid-drain victims still count in size(); sizing against them
-        # would double-shed on back-to-back low-demand ticks
-        effective = max(0, live - self.fleet.draining())
+        # would double-shed on back-to-back low-demand ticks; SICK servers
+        # (stall-benched or quarantine-implicated, per the pool's gray-
+        # failure watchdog) still hold slices but serve nothing — counting
+        # them would HOLD on a demand level that needs a scale-up around
+        # the sick pilot
+        sick = int(sig.get("pool_sick_servers") or 0)
+        effective = max(0, live - self.fleet.draining() - sick)
         self.peak_live = max(self.peak_live, live)
         cap = max(1, p.slots_per_pilot)
         # speculative decoding makes capacity EFFECTIVE, not nominal: a

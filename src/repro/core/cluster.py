@@ -114,6 +114,18 @@ class ClusterSim:
             p.fail()
             p.proctable.kill_uid(PAYLOAD_UID)
 
+    def fail_pilot(self, pilot_id: str) -> bool:
+        """:meth:`fail_node` addressed by pilot_id — the identity fault
+        drivers (chaos controller, fleet-serve kill loop) actually hold,
+        since slice ids are an internal detail of provisioning."""
+        with self._lock:
+            target = next((sid for sid, p in self.pilots.items()
+                           if p.pilot_id == pilot_id), None)
+        if target is None:
+            return False
+        self.fail_node(target)
+        return True
+
     def drain(self, slice_id: int):
         with self._lock:
             p = self.pilots.get(slice_id)

@@ -45,6 +45,7 @@ import time
 import uuid
 
 from repro.core.arena import SharedArena
+from repro.core import chaos
 from repro.core.images import ExecutableRegistry
 from repro.core.latebind import PayloadExecutor, PodPatchCapability
 from repro.core.monitor import Monitor, MonitorLimits
@@ -306,6 +307,11 @@ class Pilot:
             # (d) heartbeats on the shared timer wheel; the pilot thread
             # itself parks on the payload exit event (no sleep loop)
             def renew_tick():
+                site = chaos.site(self.pilot_id)
+                if site is not None and site.partitioned():
+                    return               # control-plane cut: renewals and
+                                         # heartbeats fail; the payload
+                                         # keeps computing (gray failure)
                 self.repo.renew(task.task_id, self.pilot_id)
                 self.repo.heartbeat_pilot(self.pilot_id)
 

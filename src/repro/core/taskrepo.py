@@ -47,6 +47,32 @@ Predicate = Callable[[dict], bool]
 
 
 @dataclasses.dataclass
+class BackoffPolicy:
+    """Exponential backoff with deterministic jitter for failure requeue.
+
+    A payload that crashes instantly used to hot-loop through the fleet:
+    release(failed=True) / lease expiry re-enqueued it with zero delay,
+    so the very next match handed it straight back.  The delay doubles
+    per attempt up to ``cap`` and is jittered by a hash of
+    ``(task_id, attempts)`` — deterministic (replayable runs stay
+    replayable) but de-correlated across tasks, so a cohort of requests
+    requeued by one pilot death does not re-land as one block on the
+    next victim.  ``base <= 0`` disables backoff entirely (the legacy
+    immediate-requeue behavior)."""
+    base: float = 0.05             # first-failure delay (seconds)
+    cap: float = 2.0               # delay ceiling
+    jitter: float = 0.5            # +/- fraction around the nominal delay
+
+    def delay(self, task_id: int, attempts: int) -> float:
+        if self.base <= 0:
+            return 0.0
+        nominal = min(self.cap, self.base * (2.0 ** max(0, attempts - 1)))
+        # Knuth multiplicative hash: stable across runs, unlike hash()
+        frac = ((task_id * 2654435761 + attempts * 40503) % 4096) / 4096.0
+        return nominal * (1.0 - self.jitter + 2.0 * self.jitter * frac)
+
+
+@dataclasses.dataclass
 class PayloadTask:
     task_id: int
     image: Any                          # PayloadImage (core.images)
@@ -66,6 +92,9 @@ class PayloadTask:
     prefetch_hint: Any = None
     attempts: int = 0
     max_attempts: int = 3
+    # earliest monotonic time this task may be matched again — stamped by
+    # the failure-requeue backoff; 0.0 == immediately eligible
+    not_before: float = 0.0
 
 
 @dataclasses.dataclass
@@ -113,7 +142,9 @@ class _TaskHeap:
 
 class TaskRepo:
     def __init__(self, *, lease_ttl: float = 10.0, wheel: TimerWheel | None = None,
-                 pilot_ttl: float | None = None):
+                 pilot_ttl: float | None = None,
+                 backoff: BackoffPolicy | None = None,
+                 on_expired: Callable[[PayloadTask, str], str] | None = None):
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
         self._ids = itertools.count(1)
@@ -123,6 +154,18 @@ class TaskRepo:
         self._leases: dict[int, Lease] = {}
         self._deadlines: list[tuple[float, int]] = []  # (expires, task_id)
         self._reap_timer = None
+        # backoff-deferred tasks: (not_before, task_id, task) min-heap.  A
+        # deferred task is QUEUED (counts toward drain / demand) but not
+        # matchable until its stamp passes — a failing task waits out its
+        # backoff in here without ever blocking healthy matches
+        self._deferred: list[tuple[float, int, PayloadTask]] = []
+        self._defer_timer = None
+        self.backoff = backoff or BackoffPolicy(base=0.0)   # default: legacy
+        # consulted (OUTSIDE the repo lock) when a lease expires: returns
+        # "requeue" (default) or "drop" (settle failed — e.g. the fleet
+        # dispatcher quarantining a poison request).  Death-event hook for
+        # blast-radius accounting at a higher layer.
+        self.on_expired = on_expired
         self._results: dict[int, TaskResult] = {}
         self._failed: dict[int, PayloadTask] = {}
         self._pilot_heartbeats: dict[str, float] = {}
@@ -144,11 +187,19 @@ class TaskRepo:
     # ---- internal: queue index ----------------------------------------------
 
     def _n_queued(self) -> int:
-        return (len(self._open) + len(self._pred)
+        return (len(self._open) + len(self._pred) + len(self._deferred)
                 + sum(len(h) for h in self._by_labels.values()))
 
     def _enqueue(self, task: PayloadTask):
-        """Route a task to its index bucket.  Caller holds the lock."""
+        """Route a task to its index bucket.  Caller holds the lock.
+        A task whose backoff stamp has not passed parks in the deferred
+        heap instead; the defer timer re-routes it when eligible."""
+        if task.not_before > time.monotonic():
+            heapq.heappush(self._deferred,
+                           (task.not_before, task.task_id, task))
+            self._drained.clear()
+            self._arm_defer_timer(task.not_before)
+            return
         if task.requirements is not None:
             self._pred.push(task)
         elif task.require_labels:
@@ -159,6 +210,27 @@ class TaskRepo:
         self._drained.clear()
         self.notifies += 1
         self._cond.notify_all()
+
+    def _arm_defer_timer(self, when: float):
+        """Caller holds the lock."""
+        if self._defer_timer is None or self._defer_timer.deadline > when:
+            if self._defer_timer is not None:
+                self._defer_timer.cancel()
+            self._defer_timer = self._wheel.call_at(
+                when, self._on_defer_timer, name="taskrepo-defer")
+
+    def _on_defer_timer(self):
+        """Move every deferral whose stamp has passed back into the match
+        index (waking parked pilots), then re-arm for the next one."""
+        now = time.monotonic()
+        with self._lock:
+            self._defer_timer = None
+            while self._deferred and self._deferred[0][0] <= now:
+                _, _, task = heapq.heappop(self._deferred)
+                task.not_before = 0.0
+                self._enqueue(task)
+            if self._deferred:
+                self._arm_defer_timer(self._deferred[0][0])
 
     def _update_drained(self):
         """Caller holds the lock."""
@@ -209,6 +281,21 @@ class TaskRepo:
         """
         t0 = time.perf_counter()
         labels = pilot_ad.get("labels") or {}
+        # lazy tombstone purge: a queued copy of a task whose RESULT has
+        # already landed (a hedged duplicate settled by first-completion-
+        # wins, or a stale requeue racing a completion) must never be
+        # leased again — it would win every future match (lowest task_id)
+        # and replay settled work forever
+        while ((h := self._open.peek()) is not None
+               and h.task_id in self._results):
+            self._open.pop()
+        for key in [k for k, hh in self._by_labels.items()
+                    if hh and hh.peek().task_id in self._results]:
+            hh = self._by_labels[key]
+            while hh and hh.peek().task_id in self._results:
+                hh.pop()
+            if not hh:
+                del self._by_labels[key]
         best: tuple[tuple[int, int], Callable[[], PayloadTask]] | None = None
 
         def consider(task: PayloadTask, take: Callable[[], PayloadTask]):
@@ -235,6 +322,8 @@ class TaskRepo:
             if best is not None and (-cand.priority, cand.task_id) >= best[0]:
                 break                     # can't beat the indexed candidate
             cand = self._pred.pop()
+            if cand.task_id in self._results:
+                continue                  # tombstone: drop, don't push back
             try:
                 # a task may carry BOTH label constraints and a predicate
                 ok = (not cand.require_labels
@@ -362,14 +451,19 @@ class TaskRepo:
             return False
 
     def release(self, task: PayloadTask, *, failed: bool = False,
-                pilot_id: str | None = None):
+                pilot_id: str | None = None, defer_s: float | None = None):
         """Give a leased task back (pilot draining, or payload failure).
 
         Racing the lease reaper is safe: if the lease is already gone the
         reaper requeued the task (or a result landed) and enqueueing it
         AGAIN here would duplicate it — the release becomes a no-op.  Pass
         ``pilot_id`` to also guard against the task having been re-leased
-        to someone else in the meantime (their lease must survive)."""
+        to someone else in the meantime (their lease must survive).
+
+        A FAILED release backs off before re-matching (``self.backoff``):
+        a crashing payload must not hot-loop through the fleet.  Graceful
+        releases requeue immediately (drain latency matters), unless the
+        caller paces them explicitly with ``defer_s``."""
         with self._lock:
             lease = self._leases.get(task.task_id)
             if (pilot_id is not None and lease is not None
@@ -388,6 +482,12 @@ class TaskRepo:
                 self._failed[task.task_id] = task
                 self._update_drained()
                 return
+            if failed:
+                task.not_before = (time.monotonic()
+                                   + self.backoff.delay(task.task_id,
+                                                        task.attempts))
+            elif defer_s is not None:
+                task.not_before = time.monotonic() + defer_s
             self._enqueue(task)
 
     # ---- lease reaping: deadline heap + repo-owned timer ---------------------
@@ -414,30 +514,51 @@ class TaskRepo:
     def reap_leases(self) -> int:
         now = time.monotonic()
         with self._lock:
-            expired: list[PayloadTask] = []
+            expired: list[tuple[PayloadTask, str]] = []
             while self._deadlines and self._deadlines[0][0] <= now:
                 _, tid = heapq.heappop(self._deadlines)
                 lease = self._leases.get(tid)
                 if lease is None or lease.expires > now:
                     continue                       # stale entry (renewed/done)
                 del self._leases[tid]
-                expired.append(lease.task)
+                expired.append((lease.task, lease.pilot_id))
                 # no renewals for a whole TTL: the holder is presumed dead —
                 # evict its heartbeat so the live-pilot signal and the
                 # straggler median never count a ghost
                 self._pilot_heartbeats.pop(lease.pilot_id, None)
                 self._step_times.pop(lease.pilot_id, None)
             self._prune_stale_pilots(now)
-            for task in expired:
+        # the death-event hook runs OUTSIDE the repo lock: the fleet
+        # dispatcher's blast-radius accounting takes its own pool lock
+        # there, and pool->repo is the established lock order everywhere
+        # else (fetch/complete/release all call in holding the pool lock)
+        dispositions: dict[int, str] = {}
+        if self.on_expired is not None:
+            for task, pid in expired:
+                try:
+                    dispositions[task.task_id] = self.on_expired(task, pid)
+                except Exception:        # noqa: BLE001 — a broken hook must
+                    pass                 # not disable lease recovery
+        with self._lock:
+            for task, pid in expired:
                 if task.task_id in self._results:
                     continue
-                if task.attempts >= task.max_attempts:
+                if dispositions.get(task.task_id) == "drop":
+                    # the hook settled it (e.g. poison quarantine): record
+                    # as failed so drain accounting and failed_tasks() agree
+                    self._failed[task.task_id] = task
+                elif task.attempts >= task.max_attempts:
                     # the dispatch budget is spent: settle as failed instead
                     # of cycling lease→expire→requeue forever (a release
                     # (failed=True) that races the expiry would otherwise
                     # never reach the _failed state)
                     self._failed[task.task_id] = task
                 else:
+                    # an expiry IS a delivery failure: back the task off so
+                    # a payload that kills its pilot can't hot-loop through
+                    # the fleet at lease-TTL cadence
+                    task.not_before = now + self.backoff.delay(task.task_id,
+                                                               task.attempts)
                     self._enqueue(task)
             self._update_drained()
             if self._deadlines:                    # re-arm for the next lease

@@ -200,6 +200,7 @@ def _fleet_serve_loop(eng, spec, n_steps, entry, proctable, telemetry) -> int:
     (``report_telemetry``), which the autoscaler reads via
     ``pool_pressure`` — kv_memory_utilization / blocked_admissions are
     scale-up signals a queue-depth-only policy would miss."""
+    from repro.core import chaos
     from repro.serving import dispatch as fleet_dispatch
     from repro.serving.engine import Request
 
@@ -231,19 +232,50 @@ def _fleet_serve_loop(eng, spec, n_steps, entry, proctable, telemetry) -> int:
         if entry.drain.is_set():
             break        # scale-down: wind down NOW — leased work is
                          # released below, not left to wait out its TTL
+        # chaos drills (no-op dict probe when no controller is installed):
+        # a STALLED payload freezes — no fetch, no step, no completions —
+        # but its lease renewals keep flowing with frozen progress, which
+        # is exactly the gray failure only the progress watchdog can see
+        site = chaos.site(server_id)
+        stalled = site is not None and site.stalled()
+        cut = site is not None and site.partitioned()
+        if stalled:
+            if inflight:
+                pool.renew(server_id, {rid: len(r.tokens)
+                                       for rid, r in inflight.items()})
+            time.sleep(0.005)
+            tick += 1
+            continue
         # _live already counts mid-admission (_jobs) requests, so this is
         # every admitted-or-queued request exactly once
         want = eng.slots - (len(eng._live) + len(eng.queue))
-        if want > 0 and not pool.finished():
+        if want > 0 and not cut and not pool.finished():
             idle = not any(m.active for m in eng.slot_meta) and not eng._jobs
             for e in pool.fetch(server_id, max_n=want,
                                 timeout=0.05 if idle else 0.0,
                                 labels=labels, cancel=entry.stop.is_set):
+                if (site is not None and e.get("poison")
+                        and site.poison_lethal()):
+                    # poison request: detonates on fetch, killing this
+                    # pilot — the lease is never released; it expires and
+                    # the pool's blast-radius accounting takes over
+                    site.trip_poison(int(e["rid"]))
+                    return 143
                 req = Request(
                     rid=int(e["rid"]),
                     prompt=np.asarray(e["prompt"], np.int32),
                     max_new_tokens=int(e.get("max_new_tokens", 16)),
                     submitted=float(e.get("submitted_s", time.monotonic())))
+                if req.rid in inflight:
+                    # the pool re-leased a rid this server still holds
+                    # locally: its lease expired mid-partition and looped
+                    # back before this tick's renew could reveal the loss.
+                    # Purge the stale copy — pairing the fresh Request
+                    # with the old engine result would commit truncated
+                    # tokens (and two live slots under one rid is worse)
+                    eng.cancel(req.rid)
+                    inflight.pop(req.rid, None)
+                eng.done.pop(req.rid, None)    # stale result of a lost lease
                 try:
                     eng.submit(req)
                 except ValueError:
@@ -254,10 +286,24 @@ def _fleet_serve_loop(eng, spec, n_steps, entry, proctable, telemetry) -> int:
         t0 = time.monotonic()
         decoded += eng.step()
         dt = time.monotonic() - t0
+        if site is not None:
+            slow = site.slow_factor()
+            if slow > 1.0:               # straggler: inflate the step time
+                time.sleep(dt * (slow - 1.0))
+                dt = dt * slow
         tick += 1
         proctable.heartbeat(entry.pid, dt)
         telemetry["steps"] = tick
         telemetry["step_times"].append(dt)
+        if cut:
+            # control-plane partition: the payload keeps computing but
+            # renewals, completions and telemetry cannot reach the pool.
+            # Leases expire and the work replays elsewhere; completions
+            # parked in eng.done are reported after the partition heals
+            # (first completion wins keeps it exactly once either way).
+            if pool.finished() and not inflight:
+                break
+            continue
         for rid in [r for r in inflight if r in eng.done]:
             req = inflight.pop(rid)
             if pool.complete(server_id, rid, req.tokens,
@@ -277,7 +323,8 @@ def _fleet_serve_loop(eng, spec, n_steps, entry, proctable, telemetry) -> int:
             "blocked_admissions": eng.blocked_admissions,
             "free_slots": eng.slots - (len(eng._live) + len(eng.queue)),
         }
-        pool.report_telemetry(server_id, live_sample)
+        if not (site is not None and site.drop_heartbeat()):
+            pool.report_telemetry(server_id, live_sample)
         telemetry["serve_live"] = {
             **live_sample,
             "inflight": {str(rid): len(r.tokens)
@@ -295,7 +342,10 @@ def _fleet_serve_loop(eng, spec, n_steps, entry, proctable, telemetry) -> int:
     telemetry["serve"]["fleet"] = {
         "server_id": server_id, "pool": pool.name, "fetched": fetched,
         "completed_here": completed_here, "released": released,
-        "drained": entry.drain.is_set()}
+        "drained": entry.drain.is_set(),
+        # leak audit on the now-idle engine: every cancel/hedge-loser/
+        # revocation path must have returned its KV blocks to the pool
+        "leaked_blocks": eng.block_leaks()}
     telemetry["tokens"] = {str(r.rid): r.tokens for r in eng.done.values()}
     return 0
 

@@ -128,7 +128,8 @@ def serve_fleet(arch: str, n_requests: int, n_pilots: int, *,
                 slots: int = 2, max_len: int = 64, fail_at: int | None = None,
                 fail_count: int = 1, lease_ttl: float = 0.5,
                 registry=None, seed: int = 0, draft: str | None = None,
-                spec_k: int = 4) -> dict:
+                spec_k: int = 4, robustness=None, chaos_plan=None,
+                poison: int = 0) -> dict:
     """The fleet serve demo/driver: N pilots lease requests from one pool.
 
     ``fail_at`` hard-kills ``fail_count`` lease-holding pilots (one at
@@ -136,15 +137,31 @@ def serve_fleet(arch: str, n_requests: int, n_pilots: int, *,
     the requeue-on-pilot-failure path.  ``draft`` turns on speculative
     decoding on every server: a draft arch name, or ``"self"`` for the
     self-draft ablation (the image's fixed draft seed keeps requeued
-    requests replaying bitwise on survivors).  Returns pool + timing
-    stats; the caller owns no threads when this returns (fleet drained,
-    pool closed).
+    requests replaying bitwise on survivors).
+
+    Chaos drills: ``robustness`` (a
+    :class:`~repro.serving.dispatch.RobustnessPolicy`) turns on the
+    dispatcher's gray-failure hardening; ``chaos_plan`` (a
+    :class:`~repro.core.chaos.FaultPlan`) runs a
+    :class:`~repro.core.chaos.ChaosController` against the fleet for the
+    duration of the trace; ``poison`` appends that many poison request
+    entries (lethal while the plan arms them — each kills the pilot that
+    fetches it until the pool quarantines it).
+
+    Returns pool + timing stats; the caller owns no threads when this
+    returns (fleet drained, pool closed).
     """
+    from repro.core.chaos import ChaosController
+
     cfg = get_smoke_config(arch)
     sim = ClusterSim(registry=registry)
-    pool = FleetDispatcher(lease_ttl=lease_ttl)
+    pool = FleetDispatcher(lease_ttl=lease_ttl, policy=robustness)
     trace = make_trace(cfg.vocab_size, n_requests, max_len=max_len,
                        seed=seed)
+    poison_rids = list(range(n_requests, n_requests + poison))
+    for rid in poison_rids:
+        trace.append({"rid": rid, "prompt": [1, 2, 3, 4],
+                      "max_new_tokens": 4, "poison": True})
     fleet = sim.spawn_fleet(n_pilots, PilotConfig(max_payloads=2,
                                                   idle_grace=0.3))
     img = PayloadImage(arch=arch, shape="smoke", mode="serve",
@@ -163,7 +180,11 @@ def serve_fleet(arch: str, n_requests: int, n_pilots: int, *,
         raise RuntimeError(
             f"only {len(pool.servers)}/{n_pilots} servers came up within "
             f"300s — refusing to serve traffic into a half-started fleet")
+    ctl = (ChaosController(sim, fleet, pool=pool, plan=chaos_plan)
+           if chaos_plan is not None else None)
     t0 = time.monotonic()
+    if ctl is not None:
+        ctl.start()            # t=0 for the plan's fault offsets
     pool.submit_trace(trace)
     pool.seal()                # the demo trace is the whole workload
     failed_pilots: list[str] = []
@@ -178,6 +199,8 @@ def serve_fleet(arch: str, n_requests: int, n_pilots: int, *,
             sim.fail_node(victim.slice.slice_id)
         ok = pool.wait_all(timeout=600.0)
     finally:
+        if ctl is not None:
+            ctl.stop()
         pool.close()
         fleet.drain_all()
         fleet.join_all(30.0)
@@ -201,6 +224,12 @@ def serve_fleet(arch: str, n_requests: int, n_pilots: int, *,
             spec_rows.append(r.telemetry["serve"])
     mean = lambda k: (sum(s[k] for s in spec_rows) / len(spec_rows)
                       if spec_rows else 0.0)
+    # block-pool leak audit: every server that exited gracefully reports
+    # its engine's residual allocation (killed servers can't — their KV
+    # state died with the simulated node, which leaks nothing real)
+    leaked = sum(r.telemetry["serve"]["fleet"].get("leaked_blocks", 0)
+                 for r in (sim.repo.result(t) for t in tids)
+                 if r and r.telemetry.get("serve", {}).get("fleet"))
     return {
         "drained": ok,
         "wall_s": wall,
@@ -213,6 +242,13 @@ def serve_fleet(arch: str, n_requests: int, n_pilots: int, *,
         "spec_servers": len(spec_rows),
         "acceptance_rate": mean("acceptance_rate"),
         "tokens_per_step": mean("tokens_per_step"),
+        "leaked_blocks": leaked,
+        "poison_rids": poison_rids,
+        "quarantined_rids": sorted(r.rid for r in recs.values()
+                                   if r.quarantined),
+        "fail_reasons": {r.rid: r.fail_reason for r in recs.values()
+                         if r.failed},
+        "chaos": ctl.stats() if ctl is not None else None,
         **stats,
     }
 
@@ -385,6 +421,16 @@ def main():
     ap.add_argument("--fail-at", type=int, default=None,
                     help="fleet serve: hard-kill a lease-holding pilot "
                          "after K completed requests")
+    ap.add_argument("--chaos", action="store_true",
+                    help="fleet serve: run the canned chaos drill (crash + "
+                         "stall + slow + flaky heartbeat + one poison "
+                         "request) with gray-failure hardening on")
+    ap.add_argument("--hedge", type=float, default=None,
+                    help="fleet serve: enable hedged re-dispatch with this "
+                         "straggler budget factor (x pool p95 service time)")
+    ap.add_argument("--quarantine-after", type=int, default=None,
+                    help="fleet serve: quarantine a request once this many "
+                         "distinct pilots died holding it (0 disables)")
     ap.add_argument("--autoscale", action="store_true",
                     help="fleet serve on a bursty square-wave trace with "
                          "the demand-driven autoscaler (--pilots caps the "
@@ -409,10 +455,29 @@ def main():
         print(json.dumps(out, indent=1))
         return
     if args.pilots:
+        robustness, chaos_plan, poison = None, None, 0
+        if args.chaos or args.hedge is not None \
+                or args.quarantine_after is not None:
+            from repro.serving.dispatch import RobustnessPolicy
+            robustness = RobustnessPolicy()
+            if args.hedge is not None:
+                robustness.hedge_factor = args.hedge
+            if args.quarantine_after is not None:
+                robustness.quarantine_after = args.quarantine_after
+        if args.chaos:
+            from repro.core.chaos import FaultPlan, FaultSpec
+            chaos_plan = FaultPlan(faults=[
+                FaultSpec(kind="crash", at_s=0.5),
+                FaultSpec(kind="stall", at_s=1.0, duration_s=2.0),
+                FaultSpec(kind="slow", at_s=1.5, duration_s=2.0, factor=5.0),
+                FaultSpec(kind="flaky_heartbeat", at_s=1.5, duration_s=2.0),
+            ], poison=True)
+            poison = 1
         out = serve_fleet(args.arch, args.requests, args.pilots,
                           slots=args.slots or 2, max_len=args.max_len or 64,
                           fail_at=args.fail_at, draft=args.draft,
-                          spec_k=args.spec_k)
+                          spec_k=args.spec_k, robustness=robustness,
+                          chaos_plan=chaos_plan, poison=poison)
         out.pop("results")
         if args.draft:
             print(f"[spec] servers={out['spec_servers']} "

@@ -27,8 +27,29 @@ Request lease lifecycle::
 
     submit ──> queued ──> leased(server A) ──renew──> ... ──> completed
                   ^            │ no renew (A died)                 ^
-                  └── requeued ┘ after lease_ttl                   │
+                  └── requeued ┘ after lease_ttl (+ backoff)       │
                   └────────────── leased(server B), replay ────────┘
+
+Gray-failure hardening (:class:`RobustnessPolicy`) — a clean crash is the
+EASY failure; these paths handle the ones the lease reaper cannot see:
+
+* **progress watchdog** — renewals carry per-request progress, so a
+  request renewing on schedule but FROZEN past ``stall_deadline`` is
+  revoked (requeued elsewhere) and its server benched (``sick_cooldown``);
+* **hedged re-dispatch** — a leased request whose in-flight age exceeds a
+  pool-percentile service budget gets a duplicate dispatch with an
+  anti-affinity predicate; first completion wins (the existing exactly-
+  once rule), the loser is tombstoned and its server cancels the slot;
+* **poison quarantine** — per-request blast-radius accounting: a request
+  implicated (held with zero progress) in ``quarantine_after`` distinct
+  pilot deaths settles FAILED with a recorded reason instead of serially
+  killing its way through ``max_attempts`` pilots.  Once-implicated
+  requests are *canaried*: dispatched at most one per server, so the next
+  death identifies the poison unambiguously instead of condemning its
+  whole co-fetched cohort;
+* **requeue backoff** — failure requeues stamp ``not_before``
+  (exponential + deterministic jitter, ``BackoffPolicy``) so a crashing
+  request cannot hot-loop through the fleet at lease-TTL cadence.
 
 Pools register under a process-global name (the simulation's stand-in for
 a network endpoint): a serve payload finds its pool with
@@ -43,16 +64,67 @@ import time
 import uuid
 from collections import deque
 
-from repro.core.taskrepo import TaskRepo, TaskResult
+from repro.core.taskrepo import BackoffPolicy, TaskRepo, TaskResult
+from repro.core.timerwheel import shared_wheel
 
 _POOLS: dict[str, "FleetDispatcher"] = {}
 _POOLS_LOCK = threading.Lock()
+
+
+def _canary_ok(ad) -> bool:
+    """Canary placement predicate: a SUSPECT (death-implicated) request only
+    matches a server whose current requests have ALL produced tokens —
+    progress proves they are not the poison (the poison never progresses),
+    so if the canary dies the suspect is implicated unambiguously.  Routed
+    through the repo's requirements matchmaking so an eligible server picks
+    the suspect up the moment it parks in fetch — no defer/retry ping-pong
+    inflating the suspect's TTFT."""
+    return bool(ad.get("canary_ok"))
 
 
 def get_pool(name: str) -> "FleetDispatcher | None":
     """Resolve a pool name published in a serve payload's startup spec."""
     with _POOLS_LOCK:
         return _POOLS.get(name)
+
+
+@dataclasses.dataclass
+class RobustnessPolicy:
+    """Gray-failure hardening knobs (the ``AutoscalePolicy`` idiom: one
+    dataclass, sane defaults, no inline constants).  The zero/None values
+    disable the corresponding mechanism; :meth:`conservative` is the
+    do-no-harm default a bare ``FleetDispatcher()`` gets — backoff only,
+    detection layers off — so non-chaos callers keep PR-4 semantics."""
+    # progress watchdog: revoke a renewing-but-frozen request after this
+    # many seconds without progress, and bench its server
+    stall_deadline: float = 2.0          # 0 disables
+    sick_cooldown: float = 2.0           # seconds a stalled server is benched
+    # hedged re-dispatch: duplicate a leased request once its in-flight age
+    # exceeds max(hedge_min_s, hedge_factor * pNN(recent service times))
+    hedging: bool = True
+    hedge_percentile: float = 95.0
+    hedge_factor: float = 3.0
+    hedge_min_s: float = 2.0             # budget floor / cold-start budget
+    hedge_min_samples: int = 8           # completions before pNN is trusted
+    max_hedges: int = 1                  # duplicate dispatches per request
+    watchdog_interval: float = 0.1       # hedge-scan period (s)
+    # bench a server once this many of its held requests needed hedging
+    # (a SLOW server keeps making progress — the stall watchdog never
+    # fires — but trapping request after request past the straggler
+    # budget is the same sickness); 0 disables
+    bench_after_hedges: int = 0
+    # poison quarantine: distinct pilot deaths (implicated with zero
+    # progress) before the request settles failed; 0 disables
+    quarantine_after: int = 2
+    # failure-requeue backoff (threaded into the request repo)
+    backoff: BackoffPolicy = dataclasses.field(
+        default_factory=lambda: BackoffPolicy(base=0.05, cap=2.0))
+
+    @classmethod
+    def conservative(cls) -> "RobustnessPolicy":
+        """Backoff-only: no stall revocation, no hedging, no quarantine.
+        The default for pools that did not opt into chaos hardening."""
+        return cls(stall_deadline=0.0, hedging=False, quarantine_after=0)
 
 
 @dataclasses.dataclass
@@ -70,26 +142,63 @@ class RequestRecord:
     progress: int = 0                   # tokens reported via renew()
     failed: bool = False                # rejected max_attempts times
     servers_tried: list = dataclasses.field(default_factory=list)
+    # blast radius: distinct pilots that died while holding this request
+    # with zero recorded progress (the quarantine signal)
+    implicated: set = dataclasses.field(default_factory=set)
+    quarantined: bool = False
+    fail_reason: str | None = None
+    hedges: int = 0                     # duplicate dispatches issued
+    hedge_tids: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _HeldLease:
+    """Per-(server, rid) lease-side state: the repo task plus the progress
+    trail the stall watchdog and blast-radius blame read."""
+    task: object                        # the leased PayloadTask
+    t: float                            # fetch time (hedge age zero)
+    progress: int = -1                  # last tokens reported by THIS server
+    t_progress: float = 0.0             # when progress last advanced
+    t_renew: float = 0.0                # last successful lease renewal
 
 
 class FleetDispatcher:
     def __init__(self, *, name: str | None = None, lease_ttl: float = 1.0,
-                 max_attempts: int = 8):
+                 max_attempts: int = 8,
+                 policy: RobustnessPolicy | None = None):
         self.name = name or f"pool-{uuid.uuid4().hex[:8]}"
+        self.policy = policy or RobustnessPolicy.conservative()
         # a DEDICATED repo: request leases expire on their own (short) TTL,
-        # independent of the pilot-level task leases
-        self.repo = TaskRepo(lease_ttl=lease_ttl)
+        # independent of the pilot-level task leases.  The repo calls back
+        # on every lease expiry (a presumed pilot death) for blast-radius
+        # accounting, and applies the policy's backoff to failure requeues.
+        self.repo = TaskRepo(lease_ttl=lease_ttl,
+                             backoff=self.policy.backoff,
+                             on_expired=self._on_lease_expired)
         self.max_attempts = max_attempts
         self._lock = threading.Lock()
         self._done_cond = threading.Condition(self._lock)
         self._records: dict[int, RequestRecord] = {}
         self._by_tid: dict[int, int] = {}
-        # (server_id, rid) -> leased PayloadTask (needed for release/renew)
-        self._leased: dict[tuple[str, int], object] = {}
+        # (server_id, rid) -> _HeldLease (task + progress trail)
+        self._leased: dict[tuple[str, int], _HeldLease] = {}
         self._n_settled = 0               # completed + failed
         self.duplicates = 0               # completions dropped by first-wins
         self.lost_leases = 0              # renewals refused (re-leased away)
+        self.hedges = 0                   # hedged duplicate dispatches
+        self.stalls_revoked = 0           # watchdog revocations
+        self.quarantined = 0              # requests settled by blast radius
         self.servers: set[str] = set()    # servers that announced readiness
+        # server_id -> bench-until stamp: stalled/implicated servers are
+        # refused fetches and excluded from capacity sizing until this
+        self._sick: dict[str, float] = {}
+        # server_id -> held requests that crossed the straggler budget
+        # (hedge strikes); at bench_after_hedges the server is benched
+        self._hedge_strikes: dict[str, int] = {}
+        # pilot_id -> (death stamp, had_suspect): groups the per-lease
+        # expiry callbacks of one pilot death into one blame event even
+        # when the reaper splits them across batches
+        self._deaths: dict[str, tuple[float, bool]] = {}
         # server_id -> (monotonic stamp, engine telemetry sample): the
         # per-tick KV-pressure heartbeat the autoscaler reads; entries
         # go stale after telemetry_ttl (a dead server stops reporting)
@@ -98,8 +207,15 @@ class FleetDispatcher:
         # bounded recent-TTFT window so pool_pressure (called every
         # autoscaler tick) never sorts the pool's full request history
         self._recent_ttfts: deque[float] = deque(maxlen=2048)
+        # fetch->completion service times: the hedge budget's percentile base
+        self._recent_service: deque[float] = deque(maxlen=512)
         self.sealed = threading.Event()   # no further submissions coming
         self.closed = threading.Event()
+        self._watchdog_timer = None
+        if self.policy.hedging and self.policy.watchdog_interval > 0:
+            self._watchdog_timer = shared_wheel().call_periodic(
+                self.policy.watchdog_interval, self._watchdog_tick,
+                name=f"pool-{self.name}-hedge-watchdog")
         with _POOLS_LOCK:
             _POOLS[self.name] = self
 
@@ -161,6 +277,8 @@ class FleetDispatcher:
         with self._done_cond:
             self.servers.discard(server_id)
             self._telemetry.pop(server_id, None)
+            self._sick.pop(server_id, None)
+            self._hedge_strikes.pop(server_id, None)
             self._done_cond.notify_all()
 
     def report_telemetry(self, server_id: str, sample: dict):
@@ -176,12 +294,39 @@ class FleetDispatcher:
         may block up to ``timeout`` (parked on the repo condition — a
         requeued request wakes it immediately); the rest are non-blocking.
         Returned entries carry ``rid``, ``submitted_s`` (the pool-level TTFT
-        zero) and ``attempt``."""
+        zero) and ``attempt``.
+
+        A BENCHED server (stall watchdog) gets nothing until its cooldown
+        passes — a stalled payload freeing slots by revocation must not
+        immediately refill them with requests it will also black-hole."""
+        now = time.monotonic()
+        with self._lock:
+            sick_until = self._sick.get(server_id, 0.0)
+        if now < sick_until:
+            if timeout > 0:
+                time.sleep(min(timeout, sick_until - now))
+            return []
         ad = {"pilot_id": server_id, "labels": dict(labels or {})}
         stop = (self.closed.is_set if cancel is None
                 else lambda: self.closed.is_set() or cancel())
         out: list[dict] = []
         for i in range(max_n):
+            with self._lock:
+                # solo-canary rule: a server holding a SUSPECT (death-
+                # implicated) request serves it alone — fetching anything
+                # else alongside would let an undetected poison detonate
+                # on the canary and condemn the innocent suspect with it
+                canarying = any(
+                    r in self._records and self._records[r].implicated
+                    for (s, r) in self._leased if s == server_id)
+                # advertised to the _canary_ok placement predicate;
+                # recomputed every iteration — the previous match added a
+                # zero-progress lease to this server
+                ad["canary_ok"] = all(
+                    h.progress > 0 for (s, r), h in self._leased.items()
+                    if s == server_id)
+            if canarying:
+                break
             if i == 0 and timeout > 0:
                 task = self.repo.match_wait(ad, timeout=timeout, cancel=stop)
             else:
@@ -197,7 +342,8 @@ class FleetDispatcher:
                     rid = int(task.payload_spec["rid"])
                     self._by_tid[task.task_id] = rid
                 rec = self._records[rid]
-                rec.task_id = task.task_id
+                if rec.task_id == -1:
+                    rec.task_id = task.task_id
                 if rec.tokens is not None or rec.failed:
                     # stale queued copy of an already-settled request (its
                     # lease expired in the same window the original server
@@ -208,13 +354,43 @@ class FleetDispatcher:
                     self.repo.release(task, failed=rec.failed,
                                       pilot_id=server_id)
                     continue
-                # the previous holder is dead or lost the lease — its stale
-                # lease record must not keep counting it as a holder
+                if (server_id, rid) in self._leased:
+                    # this server already holds another dispatch of the
+                    # same rid (its hedge, or a requeued primary looping
+                    # back) — one engine slot per rid per server.  Defer
+                    # the copy briefly so another server picks it up.
+                    self.repo.release(task, pilot_id=server_id,
+                                      defer_s=2 * self.policy.backoff.base
+                                      or 0.05)
+                    continue
+                if (rec.implicated and self.policy.quarantine_after > 0
+                        and any(h.progress <= 0
+                                for (s, r), h in self._leased.items()
+                                if s == server_id)):
+                    # canary entry guard (the race the _canary_ok predicate
+                    # cannot see: implication landed after the task was
+                    # enqueued without requirements): a suspect must not
+                    # share a server with a zero-progress request — an
+                    # undetected poison among them would detonate on the
+                    # canary and condemn the innocent suspect with it
+                    self.repo.release(task, pilot_id=server_id,
+                                      defer_s=2 * self.policy.backoff.base
+                                      or 0.05)
+                    continue
+                # the previous holder of THIS task is dead or lost the
+                # lease — its stale record must not keep counting it as a
+                # holder.  Same-tid only: a hedge sibling holds the same
+                # rid under a DIFFERENT task id and is a live racer, not a
+                # stale holder
                 for k in [k for k in self._leased
-                          if k[1] == rid and k[0] != server_id]:
+                          if k[1] == rid and k[0] != server_id
+                          and self._leased[k].task.task_id == task.task_id]:
                     del self._leased[k]
-                self._leased[(server_id, rid)] = task
-                rec.attempts = task.attempts
+                t_now = time.monotonic()
+                self._leased[(server_id, rid)] = _HeldLease(
+                    task=task, t=t_now, progress=-1, t_progress=t_now,
+                    t_renew=t_now)
+                rec.attempts = max(rec.attempts, task.attempts)
                 rec.servers_tried.append(server_id)
                 e = dict(rec.entry)
                 e["rid"] = rid
@@ -226,15 +402,44 @@ class FleetDispatcher:
     def renew(self, server_id: str, progress: dict[int, int]) -> list[int]:
         """Renew this server's request leases, piggybacking per-request
         progress (tokens produced so far) on the heartbeat.  Returns the
-        rids whose lease this server NO LONGER holds (expired and re-leased
-        or requeued) — the caller should ``ServeEngine.cancel`` them instead
-        of burning slots on tokens that can never win."""
+        rids whose lease this server NO LONGER holds (expired and re-leased,
+        requeued, or REVOKED by the stall watchdog) — the caller should
+        ``ServeEngine.cancel`` them instead of burning slots on tokens that
+        can never win.
+
+        The stall watchdog lives here because stalls are exactly the
+        failure renewals cannot expose: a stuck payload keeps renewing on
+        schedule, so only the piggybacked progress can show it is dead
+        weight.  Frozen past ``stall_deadline`` -> the request is revoked
+        (requeued elsewhere) and the server benched for ``sick_cooldown``."""
         lost: list[int] = []
+        pol = self.policy
         for rid, n_tokens in progress.items():
+            now = time.monotonic()
+            revoked = None
             with self._lock:
-                task = self._leased.get((server_id, rid))
+                held = self._leased.get((server_id, rid))
                 rec = self._records.get(rid)
-            if task is None or rec is None:
+                if held is not None and rec is not None:
+                    if int(n_tokens) > held.progress:
+                        held.progress = int(n_tokens)
+                        held.t_progress = now
+                        rec.progress = max(rec.progress, int(n_tokens))
+                        if int(n_tokens) > 0 and rec.implicated:
+                            # exoneration: a suspect that produces TOKENS is
+                            # not the poison (poison never progresses) —
+                            # drop its strikes and its idle-only canary
+                            # routing so it stops paying the suspect tax
+                            rec.implicated.clear()
+                            held.task.requirements = None
+                    elif (pol.stall_deadline > 0
+                          and now - held.t_progress > pol.stall_deadline
+                          and rec.tokens is None and not rec.failed):
+                        del self._leased[(server_id, rid)]
+                        self.stalls_revoked += 1
+                        self._sick[server_id] = now + pol.sick_cooldown
+                        revoked = held.task
+            if held is None or rec is None:
                 # the lease record was already swept (the rid re-leased to
                 # another server, or the pool never knew it) — still a loss
                 # from this server's point of view
@@ -242,9 +447,14 @@ class FleetDispatcher:
                     self.lost_leases += 1
                 lost.append(rid)
                 continue
-            if self.repo.renew(task.task_id, server_id):
-                with self._lock:
-                    rec.progress = max(rec.progress, int(n_tokens))
+            if revoked is not None:
+                # immediate requeue (no backoff: the REQUEST is healthy,
+                # its server is not) — survivors pick it up right away
+                self.repo.release(revoked, pilot_id=server_id)
+                lost.append(rid)
+                continue
+            if self.repo.renew(held.task.task_id, server_id):
+                held.t_renew = now
             else:
                 lost.append(rid)
                 self.lost_leases += 1
@@ -255,15 +465,24 @@ class FleetDispatcher:
     def complete(self, server_id: str, rid: int, tokens: list,
                  *, first_token_s: float | None = None) -> bool:
         """Report a finished request.  First completion wins — routed
-        through ``TaskRepo.complete``'s result dedup, so a replayed copy
-        racing the original produces exactly one accepted result."""
+        through ``TaskRepo.complete``'s result dedup, so a replayed or
+        HEDGED copy racing the original produces exactly one accepted
+        result.  On a win, every other outstanding dispatch of the rid is
+        tombstoned in the repo: leased losers fail their next renew (the
+        server cancels the slot), queued copies are lazily purged by the
+        match index."""
         with self._lock:
             rec = self._records.get(rid)
+            held = self._leased.get((server_id, rid))
         if rec is None:
             return False
+        # complete the task THIS server actually holds: under hedging the
+        # rid maps to several tids and rec.task_id is only the primary
+        tid = held.task.task_id if held is not None else rec.task_id
         accepted = self.repo.complete(TaskResult(
-            task_id=rec.task_id, pilot_id=server_id, exitcode=0,
+            task_id=tid, pilot_id=server_id, exitcode=0,
             telemetry={"rid": rid, "n_tokens": len(tokens)}))
+        loser_tids: list[int] = []
         with self._done_cond:
             self._leased.pop((server_id, rid), None)
             # a request settles EXACTLY once: a late result for a request
@@ -276,12 +495,26 @@ class FleetDispatcher:
                 rec.first_token_s = first_token_s
                 if first_token_s is not None:
                     self._recent_ttfts.append(first_token_s)
-                rec.completed_s = time.monotonic() - rec.submitted_s
+                now = time.monotonic()
+                rec.completed_s = now - rec.submitted_s
+                if held is not None:
+                    self._recent_service.append(now - held.t)
+                for k in [k for k in self._leased if k[1] == rid]:
+                    lt = self._leased.pop(k).task.task_id
+                    if lt != tid:
+                        loser_tids.append(lt)
+                for lt in {rec.task_id, *rec.hedge_tids} - {tid, -1}:
+                    if lt not in loser_tids:
+                        loser_tids.append(lt)
                 self._n_settled += 1
                 self._done_cond.notify_all()
             else:
                 self.duplicates += 1
                 accepted = False
+        for lt in loser_tids:
+            self.repo.complete(TaskResult(
+                task_id=lt, pilot_id=server_id, exitcode=0,
+                telemetry={"rid": rid, "superseded_by": tid}))
         return accepted
 
     def release(self, server_id: str, rids: list[int]):
@@ -290,11 +523,11 @@ class FleetDispatcher:
         out the lease TTL."""
         for rid in rids:
             with self._lock:
-                task = self._leased.pop((server_id, rid), None)
-            if task is not None:
+                held = self._leased.pop((server_id, rid), None)
+            if held is not None:
                 # pilot_id guard: if the lease already expired and moved,
                 # the new holder's lease survives and nothing is duplicated
-                self.repo.release(task, pilot_id=server_id)
+                self.repo.release(held.task, pilot_id=server_id)
 
     def reject(self, server_id: str, rid: int):
         """This server can never run the request (e.g. the prompt exceeds
@@ -302,17 +535,165 @@ class FleetDispatcher:
         pool's ``max_attempts``, then settles as failed — it must not
         ping-pong forever between release and fetch."""
         with self._lock:
-            task = self._leased.pop((server_id, rid), None)
+            held = self._leased.pop((server_id, rid), None)
             rec = self._records.get(rid)
-        if task is None or rec is None:
+        if held is None or rec is None:
             return
-        self.repo.release(task, failed=True, pilot_id=server_id)
-        if task.attempts >= self.max_attempts:
+        self.repo.release(held.task, failed=True, pilot_id=server_id)
+        if held.task.attempts >= self.max_attempts:
             with self._done_cond:
                 if not rec.failed and rec.tokens is None:
                     rec.failed = True
+                    rec.fail_reason = "rejected by every server"
                     self._n_settled += 1
                     self._done_cond.notify_all()
+
+    # ---- gray-failure hardening -------------------------------------------
+
+    def _on_lease_expired(self, task, pilot_id: str) -> str:
+        """Death-event hook, called by the repo's lease reaper (outside the
+        repo lock) once per expired lease.  Does the blast-radius blame
+        accounting and decides the task's disposition: ``"requeue"``
+        (normal recovery, with backoff) or ``"drop"`` (settle failed —
+        quarantine, or the record is already settled).
+
+        Blame rule: a pilot death strikes the requests it held with ZERO
+        recorded progress — a request that renewed with tokens was being
+        served fine and is collateral, not cause.  If any already-SUSPECT
+        request was among the held set (canary isolation guarantees at
+        most one per server), only suspects are struck: the canary
+        confirmed its guilt and exonerates the rest of the batch."""
+        spec = getattr(task, "payload_spec", None) or {}
+        rid = spec.get("rid")
+        if rid is None:
+            return "requeue"
+        rid = int(rid)
+        pol = self.policy
+        now = time.monotonic()
+        quarantine_losers: list[int] = []
+        with self._done_cond:
+            rec = self._records.get(rid)
+            held = self._leased.pop((pilot_id, rid), None)
+            if rec is None:
+                return "requeue"
+            if rec.tokens is not None or rec.failed:
+                return "drop"              # already settled: nothing to redo
+            if pol.quarantine_after > 0:
+                ev = self._deaths.get(pilot_id)
+                if ev is None or now - ev[0] > 2.0 * self.repo.lease_ttl:
+                    had_suspect = bool(rec.implicated) or any(
+                        r in self._records and self._records[r].implicated
+                        for (s, r) in self._leased if s == pilot_id)
+                    ev = (now, had_suspect)
+                    self._deaths[pilot_id] = ev
+                had_suspect = ev[1]
+                zero_progress = held is None or held.progress <= 0
+                # zero progress is NECESSARY for a strike (a request that
+                # renewed with tokens was being served fine — collateral,
+                # not cause); when a suspect was among the held set, it is
+                # also SUFFICIENT only for the suspect (canary confirmed)
+                strike = zero_progress and (bool(rec.implicated)
+                                            if had_suspect else True)
+                if strike:
+                    rec.implicated.add(pilot_id)
+                    # now a suspect: its requeued task only matches a server
+                    # with all-progressed requests (canary placement,
+                    # cleared on exoneration)
+                    task.requirements = _canary_ok
+                    if len(rec.implicated) >= pol.quarantine_after:
+                        rec.failed = True
+                        rec.quarantined = True
+                        rec.fail_reason = (
+                            f"quarantined: {len(rec.implicated)} pilots "
+                            f"({sorted(rec.implicated)}) died holding it")
+                        self.quarantined += 1
+                        self._n_settled += 1
+                        # revoke every other outstanding dispatch (a hedge
+                        # still decoding elsewhere must stop winning slots
+                        # for a condemned request)
+                        for k in [k for k in self._leased if k[1] == rid]:
+                            quarantine_losers.append(
+                                self._leased.pop(k).task.task_id)
+                        for lt in ({rec.task_id, *rec.hedge_tids}
+                                   - {task.task_id, -1}):
+                            if lt not in quarantine_losers:
+                                quarantine_losers.append(lt)
+                        self._done_cond.notify_all()
+        if quarantine_losers:
+            for lt in quarantine_losers:
+                self.repo.complete(TaskResult(
+                    task_id=lt, pilot_id=pilot_id, exitcode=0,
+                    telemetry={"rid": rid, "quarantined": True}))
+            return "drop"
+        if rec.quarantined:
+            return "drop"
+        return "requeue"
+
+    def _watchdog_tick(self):
+        """Hedge scan (timer-wheel periodic): find leased, unsettled,
+        un-hedged requests whose in-flight age exceeds the pool's service
+        budget and dispatch a duplicate with an anti-affinity predicate.
+        The budget is a percentile of recent fetch->completion service
+        times (times ``hedge_factor``), floored at ``hedge_min_s`` until
+        enough samples exist — a cold pool must not hedge its first wave."""
+        pol = self.policy
+        if not pol.hedging or self.closed.is_set():
+            return
+        now = time.monotonic()
+        to_hedge: list[tuple[int, RequestRecord, list[str]]] = []
+        with self._lock:
+            if len(self._recent_service) >= pol.hedge_min_samples:
+                s = sorted(self._recent_service)
+                p = s[min(len(s) - 1,
+                          int(pol.hedge_percentile / 100.0 * len(s)))]
+                budget = max(pol.hedge_min_s, pol.hedge_factor * p)
+            else:
+                budget = pol.hedge_min_s
+            fresh = 0.5 * self.repo.lease_ttl   # holder-liveness horizon
+            by_rid: dict[int, tuple[float, list[str], bool]] = {}
+            for (server, rid), held in self._leased.items():
+                t0, holders, alive = by_rid.get(rid, (held.t, [], False))
+                alive = alive or (now - max(held.t_renew, held.t) <= fresh)
+                by_rid[rid] = (min(t0, held.t), holders + [server], alive)
+            for rid, (t0, holders, alive) in by_rid.items():
+                rec = self._records.get(rid)
+                if (rec is None or rec.tokens is not None or rec.failed
+                        or rec.implicated     # suspects are canaried solo
+                        or rec.hedges >= pol.max_hedges
+                        or now - t0 <= budget
+                        # hedging is for LIVE stragglers: a holder that
+                        # stopped renewing is dead/partitioned — leave it
+                        # to the lease reaper so blame accounting lands
+                        # instead of racing a duplicate into a fresh pilot
+                        or not alive):
+                    continue
+                rec.hedges += 1
+                self.hedges += 1
+                to_hedge.append((rid, rec, sorted(set(holders))))
+                if pol.bench_after_hedges > 0:
+                    for server in set(holders):
+                        n = self._hedge_strikes.get(server, 0) + 1
+                        self._hedge_strikes[server] = n
+                        if n >= pol.bench_after_hedges:
+                            # a server that keeps trapping requests past
+                            # the straggler budget is SLOW-sick: bench it
+                            # (no new fetches, excluded from capacity)
+                            # even though its progress renewals look fine
+                            self._sick[server] = now + pol.sick_cooldown
+                            self._hedge_strikes[server] = 0
+        for rid, rec, holders in to_hedge:
+            excl = frozenset(holders)
+            tid = self.repo.submit(
+                "serve-request",
+                # anti-affinity: the duplicate must land on a DIFFERENT
+                # server — racing the straggler against itself is pointless
+                requirements=lambda ad, _x=excl: ad["pilot_id"] not in _x,
+                priority=int(rec.entry.get("priority", 0)),
+                max_attempts=self.max_attempts,
+                payload_spec={"rid": rid, "hedge": True})
+            with self._lock:
+                rec.hedge_tids.append(tid)
+                self._by_tid[tid] = rid
 
     # ---- driver side ------------------------------------------------------
 
@@ -376,6 +757,8 @@ class FleetDispatcher:
                 if (rec is not None and not rec.failed
                         and rec.tokens is None):
                     rec.failed = True
+                    if rec.fail_reason is None:
+                        rec.fail_reason = "attempt budget exhausted"
                     self._n_settled += 1
                     self._done_cond.notify_all()
 
@@ -390,7 +773,13 @@ class FleetDispatcher:
         are pruned here).  ``blocked_by_server`` carries the cumulative
         per-server counters so the autoscaler can diff per server: server
         churn (retire, TTL prune) must never fabricate or mask a delta in
-        a fleet-wide sum."""
+        a fleet-wide sum.
+
+        SICK servers (stall-benched) are counted in ``sick_servers`` and
+        excluded from the capacity-side aggregates (``tokens_per_step``,
+        ``acceptance_rate``, ``kv_memory_utilization``): a stalled pilot's
+        last healthy-looking heartbeat must not keep propping up effective
+        capacity — the autoscaler should scale UP around it."""
         now = time.monotonic()
         rs = self.repo.stats()
         with self._lock:
@@ -398,31 +787,36 @@ class FleetDispatcher:
             for sid in [s for s, (t, _) in self._telemetry.items()
                         if now - t > self.telemetry_ttl]:
                 del self._telemetry[sid]
+            for sid in [s for s, u in self._sick.items() if now >= u]:
+                del self._sick[sid]
+            sick = set(self._sick)
             tele = {s: d for s, (_, d) in self._telemetry.items()}
             n_servers = len(self.servers)
             ttfts = sorted(self._recent_ttfts)
         n = len(ttfts)
         blocked = {s: int(d.get("blocked_admissions", 0))
                    for s, d in tele.items()}
+        healthy = {s: d for s, d in tele.items() if s not in sick}
         # speculative-decoding effectiveness, averaged over the servers
         # that report it: tokens_per_step is the fleet's EFFECTIVE per-
         # pilot throughput (> slot count when draft acceptance is high),
         # which the autoscaler uses in place of nominal slot capacity
-        acc = [float(d["acceptance_rate"]) for d in tele.values()
+        acc = [float(d["acceptance_rate"]) for d in healthy.values()
                if "acceptance_rate" in d]
-        tps = [float(d["tokens_per_step"]) for d in tele.values()
+        tps = [float(d["tokens_per_step"]) for d in healthy.values()
                if "tokens_per_step" in d]
         return {
             "queued": rs["queued"],
             "leased": rs["leased"],
             "pending": pending,
             "servers": n_servers,
+            "sick_servers": len(sick),
             "sealed": self.sealed.is_set(),
             "ttft_p50_s": ttfts[n // 2] if n else None,
             "ttft_p99_s": ttfts[min(n - 1, (99 * n) // 100)] if n else None,
             "kv_memory_utilization": max(
                 (d.get("kv_memory_utilization", 0.0)
-                 for d in tele.values()), default=0.0),
+                 for d in healthy.values()), default=0.0),
             "blocked_admissions": sum(blocked.values()),
             "blocked_by_server": blocked,
             "acceptance_rate": sum(acc) / len(acc) if acc else 0.0,
@@ -463,11 +857,17 @@ class FleetDispatcher:
                 # the failures, not of the steady state
                 "replays": sum(max(0, r.attempts - 1) for r in recs),
                 "distinct_servers": len({r.server for r in completed}),
+                "hedges": self.hedges,
+                "stalls_revoked": self.stalls_revoked,
+                "quarantined": self.quarantined,
             }
 
     def close(self):
         """Unregister the pool and release any server parked in fetch."""
         self.closed.set()
+        if self._watchdog_timer is not None:
+            self._watchdog_timer.cancel()
+            self._watchdog_timer = None
         with _POOLS_LOCK:
             _POOLS.pop(self.name, None)
         self.repo.kick()

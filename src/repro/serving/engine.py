@@ -875,6 +875,22 @@ class ServeEngine:
             self.prefix.evict_unreferenced(self.allocator.capacity_blocks)
         self.reset_metrics()               # also drops the dummy results
 
+    def block_leaks(self) -> int:
+        """KV block-pool leak audit for an IDLE engine (nothing live,
+        queued, or mid-admission): evicts the prefix cache's published
+        (but unreferenced) blocks and returns how many pool blocks remain
+        allocated — which must be zero if every admit/cancel/rollback path
+        balanced its refcounts.  Chaos drills call this after drain on
+        every server: hedged-loser cancels and stall revocations are
+        exactly the paths that could strand a block."""
+        if self.kv != "paged":
+            return 0
+        assert not self._live and not self.queue and not self._jobs, \
+            "block_leaks() on a busy engine"
+        if self.prefix is not None:
+            self.prefix.evict_unreferenced(self.allocator.capacity_blocks)
+        return self.allocator.allocated_blocks
+
     def kv_pressure(self) -> dict:
         """Instantaneous cache-pressure sample for heartbeat telemetry:
         live/allocated RIGHT NOW (the `_stats` dict reports the mean over

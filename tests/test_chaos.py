@@ -1,0 +1,503 @@
+"""Chaos layer + gray-failure hardening contracts.
+
+Everything here is the fast lane: the dispatcher's detection layers
+(progress watchdog, hedged re-dispatch, backoff requeue, blast-radius
+quarantine) are pure threading over the request repo, and the chaos
+controller is driven against stub sims/fleets.  The end-to-end drills
+(real engines, real pilots) live in ``benchmarks/bench_chaos.py``.
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+
+from repro.core import chaos
+from repro.core.autoscaler import AutoscalePolicy, FleetAutoscaler
+from repro.core.chaos import ChaosController, FaultPlan, FaultSpec
+from repro.core.taskrepo import BackoffPolicy, TaskRepo, TaskResult
+from repro.serving.dispatch import FleetDispatcher, RobustnessPolicy
+
+NOOP_IMG = "serve-request"            # repo tasks here never run a payload
+
+
+def _wait(pred, timeout=5.0, dt=0.01):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(dt)
+    return pred()
+
+
+# ---------------------------------------------------------------------------
+# backoff requeue (the immediate-requeue hot-loop regression)
+# ---------------------------------------------------------------------------
+
+def test_backoff_delay_is_deterministic_exponential_and_capped():
+    p = BackoffPolicy(base=0.1, cap=0.4, jitter=0.5)
+    d1, d2, d3, d6 = (p.delay(7, n) for n in (1, 2, 3, 6))
+    assert d1 == p.delay(7, 1)                 # deterministic, not random
+    assert 0.05 <= d1 <= 0.15                  # base +/- jitter
+    assert d2 > d1 and d3 > d2                 # exponential growth
+    assert d6 <= 0.4 * 1.5                     # capped (+ jitter headroom)
+    assert BackoffPolicy(base=0.0).delay(7, 5) == 0.0
+
+
+def test_failure_requeue_backs_off_no_hot_loop():
+    """Regression for the hot loop: a payload that crashes instantly used
+    to bounce queue->lease->release(failed)->queue at match cadence.  With
+    backoff, three rapid failures may not produce three sub-interval
+    redispatches — and a HEALTHY task keeps matching immediately the whole
+    time (the deferred heap never blocks the open queue)."""
+    repo = TaskRepo(lease_ttl=60.0,
+                    backoff=BackoffPolicy(base=0.2, cap=1.0, jitter=0.0))
+    crash_tid = repo.submit(NOOP_IMG, payload_spec={"which": "crasher"})
+    redispatches = 0
+    t0 = time.monotonic()
+    for _ in range(3):
+        t = repo.match({"pilot_id": "p1"})
+        if t is None or t.task_id != crash_tid:
+            break
+        redispatches += 1
+        repo.release(t, failed=True, pilot_id="p1")
+    # without backoff this loop spins 3 redispatches in microseconds;
+    # with base=0.2 the second comes no earlier than 0.2s
+    assert not (redispatches >= 3 and time.monotonic() - t0 < 0.2)
+    # a healthy task submitted NOW matches immediately, crasher deferred
+    ok_tid = repo.submit(NOOP_IMG, payload_spec={"which": "ok"})
+    t = repo.match({"pilot_id": "p2"})
+    assert t is not None and t.task_id == ok_tid
+    # the crasher becomes eligible again on its own (defer timer, no kick)
+    got = repo.match_wait({"pilot_id": "p3"}, timeout=5.0)
+    assert got is not None and got.task_id == crash_tid
+    s = repo.stats()
+    assert s["leased"] == 2
+
+
+def test_deferred_release_honored_by_match_wait():
+    repo = TaskRepo(lease_ttl=60.0, backoff=BackoffPolicy(base=0.0))
+    repo.submit(NOOP_IMG)
+    t = repo.match({"pilot_id": "A"})
+    t_defer = time.monotonic()
+    repo.release(t, pilot_id="A", defer_s=0.25)
+    assert repo.match({"pilot_id": "B"}) is None      # not eligible yet
+    got = repo.match_wait({"pilot_id": "B"}, timeout=5.0)
+    assert got is not None and got.task_id == t.task_id
+    assert time.monotonic() - t_defer >= 0.2
+
+
+# ---------------------------------------------------------------------------
+# progress watchdog (stall revoke + sick bench)
+# ---------------------------------------------------------------------------
+
+def _entries(n):
+    return [{"rid": i, "prompt": [1, 2, 3], "max_new_tokens": 4}
+            for i in range(n)]
+
+
+def test_stall_watchdog_revokes_and_benches_server():
+    """A request renewing on schedule but FROZEN past stall_deadline is
+    revoked; the stalled server is benched (fetch returns nothing) while a
+    survivor picks the request up immediately (no backoff: the request is
+    healthy, its server is not)."""
+    pol = RobustnessPolicy(stall_deadline=0.15, sick_cooldown=0.6,
+                           hedging=False, quarantine_after=0,
+                           backoff=BackoffPolicy(base=0.0))
+    pool = FleetDispatcher(lease_ttl=5.0, policy=pol)
+    try:
+        pool.submit_trace(_entries(1))
+        (e,) = pool.fetch("A", max_n=1)
+        assert pool.renew("A", {0: 2}) == []          # progressing: fine
+        time.sleep(0.2)
+        assert pool.renew("A", {0: 2}) == [0]         # frozen: revoked
+        s = pool.stats()
+        assert s["stalls_revoked"] == 1
+        assert pool.fetch("A", max_n=1) == []         # benched
+        (e2,) = pool.fetch("B", max_n=1, timeout=5.0)  # survivor replays
+        assert e2["rid"] == 0 and e2["attempt"] == 2
+        assert pool.complete("B", 0, [9, 9])
+        assert pool.pool_pressure()["sick_servers"] == 1
+        assert _wait(lambda: pool.fetch("A", max_n=1) == [], timeout=0.1)
+        time.sleep(0.6)                               # cooldown passes
+        assert pool.pool_pressure()["sick_servers"] == 0
+    finally:
+        pool.close()
+
+
+# ---------------------------------------------------------------------------
+# hedged re-dispatch
+# ---------------------------------------------------------------------------
+
+def test_hedge_rescues_straggler_first_completion_wins():
+    """A leased request past the straggler budget gets a duplicate with
+    anti-affinity; the fast copy wins, the straggler's completion is a
+    counted duplicate, and the pool settles exactly once."""
+    pol = RobustnessPolicy(stall_deadline=0.0, hedging=True,
+                           hedge_min_s=0.1, hedge_min_samples=99,
+                           watchdog_interval=0.02, max_hedges=1,
+                           quarantine_after=0,
+                           backoff=BackoffPolicy(base=0.0))
+    pool = FleetDispatcher(lease_ttl=2.0, policy=pol)
+    try:
+        pool.submit_trace(_entries(1))
+        (e,) = pool.fetch("A", max_n=1)
+        assert _wait(lambda: pool.stats()["hedges"] >= 1)
+        # anti-affinity: the straggler itself can NOT lease its own hedge
+        assert pool.fetch("A", max_n=1) == []
+        (h,) = pool.fetch("B", max_n=1, timeout=5.0)
+        assert h["rid"] == 0
+        # both copies race; the original holder is still live pool-side
+        assert pool.renew("A", {0: 1}) == []
+        assert pool.complete("B", 0, [5, 6]) is True
+        assert pool.complete("A", 0, [5, 6]) is False   # loser: duplicate
+        assert pool.renew("A", {0: 2}) == [0]           # tombstoned: cancel
+        assert pool.results() == {0: [5, 6]}
+        s = pool.stats()
+        assert s["completed"] == 1 and s["hedges"] == 1
+        assert s["duplicates"] == 1
+        assert pool.wait_all(timeout=5.0)
+        rs = pool.repo.stats()
+        assert rs["queued"] == 0 and rs["leased"] == 0   # nothing stranded
+    finally:
+        pool.close()
+
+
+def test_hedge_requires_a_freshly_renewing_holder():
+    """Hedging is for LIVE stragglers.  A holder that stopped renewing is
+    dead or partitioned — the lease reaper's requeue (with blame
+    accounting) handles it; racing a hedge into the gap would burn a slot
+    and, for a poison request, kill a third pilot."""
+    pol = RobustnessPolicy(stall_deadline=0.0, hedging=True,
+                           hedge_min_s=0.3, hedge_min_samples=99,
+                           watchdog_interval=0.02, max_hedges=1,
+                           quarantine_after=0,
+                           backoff=BackoffPolicy(base=0.0))
+    pool = FleetDispatcher(lease_ttl=0.3, policy=pol)   # fresh horizon .15s
+    try:
+        pool.submit_trace(_entries(1))
+        pool.fetch("A", max_n=1)
+        time.sleep(0.45)          # budget crossed only after A went stale
+        assert pool.stats()["hedges"] == 0
+        # the reaper requeued it instead; a survivor completes normally
+        (e,) = pool.fetch("B", max_n=1, timeout=5.0)
+        assert e["attempt"] == 2
+        assert pool.complete("B", 0, [1])
+    finally:
+        pool.close()
+
+
+# ---------------------------------------------------------------------------
+# blast-radius quarantine + canary placement
+# ---------------------------------------------------------------------------
+
+def test_quarantine_poison_after_two_deaths_without_false_positives():
+    """Two requests die with a pilot: the one that had produced tokens is
+    collateral (no strike); the zero-progress one becomes a suspect,
+    canaries SOLO on the next server, and is quarantined when that canary
+    dies too — while the collateral request completes fine elsewhere."""
+    pol = RobustnessPolicy(stall_deadline=0.0, hedging=False,
+                           quarantine_after=2,
+                           backoff=BackoffPolicy(base=0.0))
+    pool = FleetDispatcher(lease_ttl=0.15, policy=pol)
+    try:
+        pool.submit_trace(_entries(2))
+        got = pool.fetch("A", max_n=2)
+        assert [e["rid"] for e in got] == [0, 1]
+        pool.renew("A", {0: 3, 1: 0})      # rid 0 progressed, rid 1 frozen
+        # A dies silently; the reaper strikes ONLY the zero-progress rid
+        assert _wait(lambda: pool.records()[1].implicated == {"A"})
+        assert pool.records()[0].implicated == set()
+
+        # canary placement: B currently holds a zero-progress request, so
+        # the suspect must not land there yet
+        (e0,) = pool.fetch("B", max_n=2, timeout=5.0)
+        assert e0["rid"] == 0               # the healthy replay, not rid 1
+        pool.renew("B", {0: 1})             # B's held work has progressed
+        (e1,) = pool.fetch("B", max_n=1, timeout=5.0)
+        assert e1["rid"] == 1               # now eligible as a canary
+        # solo-canary: while holding a suspect, B fetches nothing else
+        pool.submit(_entries(3)[2])
+        assert pool.fetch("B", max_n=1) == []
+
+        # B dies too: second distinct pilot death with zero progress ->
+        # quarantined; B's progressed rid 0 is again collateral
+        assert _wait(lambda: pool.records()[1].quarantined)
+        rec = pool.records()[1]
+        assert rec.failed and "quarantined" in rec.fail_reason
+        assert pool.stats()["quarantined"] == 1
+
+        # the collateral + late request complete on a healthy server
+        done = set()
+        while len(done) < 2:
+            for e in pool.fetch("C", max_n=2, timeout=5.0):
+                pool.complete("C", e["rid"], [7])
+                done.add(e["rid"])
+        assert done == {0, 2}
+        pool.seal()
+        assert pool.wait_all(timeout=5.0)
+        s = pool.stats()
+        assert s["completed"] == 2 and s["failed"] == 1
+    finally:
+        pool.close()
+
+
+def test_suspect_exonerated_on_first_token():
+    """An innocent co-fetched with an undetected poison gets implicated by
+    the first death — but the moment it produces a token on its canary it
+    is exonerated (the poison NEVER progresses), shedding the canary tax
+    and the strike history."""
+    pol = RobustnessPolicy(stall_deadline=0.0, hedging=False,
+                           quarantine_after=2,
+                           backoff=BackoffPolicy(base=0.0))
+    pool = FleetDispatcher(lease_ttl=0.15, policy=pol)
+    try:
+        pool.submit_trace(_entries(1))
+        pool.fetch("A", max_n=1)
+        assert _wait(lambda: pool.records()[0].implicated == {"A"})
+        (e,) = pool.fetch("B", max_n=1, timeout=5.0)
+        assert pool.renew("B", {0: 1}) == []
+        assert pool.records()[0].implicated == set()
+        assert pool.complete("B", 0, [4])
+        assert pool.wait_all(timeout=5.0)
+    finally:
+        pool.close()
+
+
+# ---------------------------------------------------------------------------
+# requeue/hedge/cancel/complete under racing servers (stress)
+# ---------------------------------------------------------------------------
+
+def test_stress_racing_servers_settle_exactly_once():
+    """Servers that complete, release, and silently die while hedging and
+    the lease reaper churn underneath: every request settles exactly once
+    with the right tokens, no lease is left held, and the repo drains to
+    zero queued/leased."""
+    n = 40
+    pol = RobustnessPolicy(stall_deadline=0.0, hedging=True,
+                           hedge_min_s=0.15, hedge_min_samples=4,
+                           hedge_percentile=50.0, hedge_factor=3.0,
+                           watchdog_interval=0.02, max_hedges=2,
+                           quarantine_after=0,
+                           backoff=BackoffPolicy(base=0.01, cap=0.1))
+    pool = FleetDispatcher(lease_ttl=0.12, max_attempts=64, policy=pol)
+    accepted: dict[int, int] = {}
+    acc_lock = threading.Lock()
+
+    def tokens_for(rid):
+        return [rid, rid + 1, rid + 2]
+
+    def server(name, seed):
+        rng = random.Random(seed)
+        while not pool.finished():
+            got = pool.fetch(name, max_n=2, timeout=0.05)
+            if not got:
+                continue
+            held = {}
+            for e in got:
+                roll = rng.random()
+                if roll < 0.45:                      # fast completion
+                    if pool.complete(name, e["rid"], tokens_for(e["rid"])):
+                        with acc_lock:
+                            accepted[e["rid"]] = accepted.get(e["rid"], 0) + 1
+                elif roll < 0.65:                    # graceful hand-back
+                    pool.release(name, [e["rid"]])
+                elif roll < 0.8:                     # silent death: forget
+                    pass
+                else:                                # slow-ish holder
+                    held[e["rid"]] = 0
+            for _ in range(rng.randrange(1, 4)):
+                if not held:
+                    break
+                time.sleep(0.02)
+                for rid in list(held):
+                    held[rid] += 1
+                lost = pool.renew(name, dict(held))
+                for rid in lost:
+                    held.pop(rid, None)
+            for rid in list(held):
+                if pool.complete(name, rid, tokens_for(rid)):
+                    with acc_lock:
+                        accepted[rid] = accepted.get(rid, 0) + 1
+
+    pool.submit_trace(_entries(n))
+    pool.seal()
+    threads = [threading.Thread(target=server, args=(f"s{i}", 1000 + i),
+                                daemon=True) for i in range(6)]
+    try:
+        for t in threads:
+            t.start()
+        assert pool.wait_all(timeout=60.0), pool.stats()
+        for t in threads:
+            t.join(timeout=10.0)
+        s = pool.stats()
+        assert s["completed"] == n and s["failed"] == 0
+        results = pool.results()
+        for rid in range(n):
+            assert results[rid] == tokens_for(rid)
+        with acc_lock:
+            assert all(v == 1 for v in accepted.values())   # exactly once
+        rs = pool.repo.stats()
+        assert rs["queued"] == 0 and rs["leased"] == 0
+        assert pool.lease_holders() == {}                   # no held lease
+    finally:
+        pool.close()
+
+
+# ---------------------------------------------------------------------------
+# chaos controller + sites (stub sim)
+# ---------------------------------------------------------------------------
+
+class _StubPilot:
+    def __init__(self, pid):
+        self.pilot_id = pid
+
+
+class _StubSim:
+    def __init__(self, pids):
+        self.pids = list(pids)
+        self.failed: list[str] = []
+
+    def live_pilots(self):
+        return [_StubPilot(p) for p in self.pids if p not in self.failed]
+
+    def fail_pilot(self, pid):
+        self.failed.append(pid)
+        return True
+
+
+def test_chaos_site_stamps_expire_on_their_own():
+    sim = _StubSim(["p1"])
+    ctl = ChaosController(sim, plan=FaultPlan())
+    with ctl:
+        s = chaos.site("p1")
+        assert s is not None
+        assert not s.stalled() and s.slow_factor() == 1.0
+        assert not s.partitioned() and not s.drop_heartbeat()
+        now = time.monotonic()
+        s.stall_until = now + 0.1
+        s.slow_by, s.slow_until = 8.0, now + 0.1
+        s.cut_until = now + 0.1
+        s.drop_rate, s.flaky_until = 1.0, now + 0.1
+        assert s.stalled() and s.slow_factor() == 8.0
+        assert s.partitioned() and s.drop_heartbeat()
+        time.sleep(0.12)                      # stamps clear themselves
+        assert not s.stalled() and s.slow_factor() == 1.0
+        assert not s.partitioned() and not s.drop_heartbeat()
+    assert chaos.site("p1") is None           # uninstalled: hot path off
+
+
+def test_controller_schedules_faults_and_poison_counts():
+    sim = _StubSim(["p1", "p2"])
+    plan = FaultPlan(faults=[
+        FaultSpec(kind="crash", at_s=0.0, victim="p1"),
+        FaultSpec(kind="slow", at_s=0.02, duration_s=5.0, factor=6.0,
+                  victim="p2"),
+    ], poison=True)
+    ctl = ChaosController(sim, plan=plan)
+    with ctl:
+        assert _wait(lambda: len(ctl.log) >= 2)
+        assert sim.failed == ["p1"]
+        assert chaos.site("p2").slow_factor() == 6.0
+        assert chaos.site("p2").poison_lethal()
+        chaos.site("p2").trip_poison(7)
+        assert sim.failed == ["p1", "p2"]
+        assert ctl.poison_kills == {7: 1}
+    st = ctl.stats()
+    assert st["faults_applied"] == 3          # crash + slow + poison
+
+
+def test_controller_picks_most_leases_victim_and_single_install():
+    class _StubPool:
+        def lease_holders(self):
+            return {"p2": [1, 2, 3], "p1": [4]}
+
+    sim = _StubSim(["p1", "p2"])
+    ctl = ChaosController(sim, pool=_StubPool(),
+                          plan=FaultPlan(faults=[FaultSpec(kind="crash")]))
+    with ctl:
+        assert _wait(lambda: sim.failed == ["p2"])   # most leases dies
+        other = ChaosController(sim, plan=FaultPlan())
+        try:
+            other.start()
+            raise AssertionError("double install must raise")
+        except RuntimeError:
+            pass
+    assert chaos.site("p1") is None
+
+
+# ---------------------------------------------------------------------------
+# autoscaler: sick servers don't count as capacity
+# ---------------------------------------------------------------------------
+
+class _StubFleet:
+    def __init__(self, n):
+        self.n = n
+        self.ups: list[int] = []
+
+    def size(self):
+        return self.n
+
+    def draining(self):
+        return 0
+
+    def scale_up(self, n):
+        self.n += n
+        self.ups.append(n)
+        return [object()] * n
+
+    def scale_down(self, n):
+        self.n -= n
+        return []
+
+
+def test_autoscaler_scales_up_around_sick_servers():
+    """A stalled/quarantine-implicated server still holds its slice but
+    serves nothing: with pool_sick_servers reported, effective capacity
+    shrinks and the SAME demand that used to sit in the hysteresis band
+    now forces a scale-up around the sick pilot."""
+    p = AutoscalePolicy(min_pilots=0, max_pilots=8, slots_per_pilot=2,
+                        high_water=1.25, low_water=0.5,
+                        up_cooldown=0.0, down_cooldown=10.0,
+                        down_stable_ticks=3)
+    clk = [100.0]
+    sig = {"demand": 8, "pool_sick_servers": 0}
+    fleet = _StubFleet(4)
+    a = FleetAutoscaler(fleet, None, policy=p,
+                        signals_fn=lambda: dict(sig),
+                        clock=lambda: clk[0])
+    assert a.tick() is None           # util 8/(4*2) = 1.0: in band, hold
+    clk[0] += 1.0
+    sig["pool_sick_servers"] = 2      # same demand, two pilots black-holed
+    d = a.tick()                      # util 8/(2*2) = 2.0: scale UP
+    assert d is not None and d.direction == "up"
+    assert fleet.n > 4
+
+
+def test_pool_pressure_excludes_sick_server_telemetry():
+    pool = FleetDispatcher(lease_ttl=1.0)
+    try:
+        pool.announce("A")
+        pool.announce("B")
+        pool.report_telemetry("A", {"kv_memory_utilization": 0.9,
+                                    "tokens_per_step": 6.0,
+                                    "blocked_admissions": 3})
+        pool.report_telemetry("B", {"kv_memory_utilization": 0.2,
+                                    "tokens_per_step": 2.0,
+                                    "blocked_admissions": 1})
+        pp = pool.pool_pressure()
+        assert pp["sick_servers"] == 0
+        assert pp["kv_memory_utilization"] == 0.9
+        with pool._lock:
+            pool._sick["A"] = time.monotonic() + 10.0
+        pp = pool.pool_pressure()
+        assert pp["sick_servers"] == 1
+        # A's healthy-looking heartbeat no longer props up capacity...
+        assert pp["kv_memory_utilization"] == 0.2
+        assert pp["tokens_per_step"] == 2.0
+        # ...but cumulative blocked counters still cover every server (the
+        # autoscaler diffs per server; churn must not fabricate deltas)
+        assert pp["blocked_admissions"] == 4
+    finally:
+        pool.close()
