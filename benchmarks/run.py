@@ -15,7 +15,7 @@ import time
 from benchmarks import (bench_autoscale, bench_bind, bench_chaos,
                         bench_fleet_serve, bench_lifecycle, bench_monitor,
                         bench_scheduler, bench_serving, bench_spec_decode,
-                        bench_train, roofline)
+                        bench_tp_serve, bench_train, roofline)
 
 SUITES = {
     "bind": bench_bind.run,            # paper Fig. 4: late-binding cost
@@ -32,6 +32,8 @@ SUITES = {
     "chaos_smoke": bench_chaos.run_smoke,  # kill+stall+hedged straggler CI
     "spec_decode": bench_spec_decode.run,          # draft-and-verify tok/s
     "spec_decode_smoke": bench_spec_decode.run_smoke,  # bitwise + accept CI
+    "tp_serve": bench_tp_serve.run,    # SPMD sharded serving, full battery
+    "tp_serve_smoke": bench_tp_serve.run_smoke,  # bitwise + 1-transfer CI
     "train": bench_train.run,          # payload-side training numbers
     "roofline": roofline.run,          # dry-run roofline aggregates
 }

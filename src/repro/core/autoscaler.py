@@ -180,6 +180,15 @@ class FleetAutoscaler:
         effective = max(0, live - self.fleet.draining() - sick)
         self.peak_live = max(self.peak_live, live)
         cap = max(1, p.slots_per_pilot)
+        # a mesh-bound (tensor-parallel) server is ONE capacity unit: its
+        # slot count comes from the image's engine geometry, NOT from the
+        # device count backing it.  The pool reports the live per-server
+        # slot capacity (`slots_per_server`); trusting it over a stale
+        # policy default keeps the demand-proportional target honest, and
+        # `pool_mesh_devices` is deliberately never multiplied in — an
+        # 8-device sharded server still serves `slots` requests at a time.
+        srv_slots = float(sig.get("pool_slots_per_server") or 0.0)
+        cap = max(cap, srv_slots)
         # speculative decoding makes capacity EFFECTIVE, not nominal: a
         # fleet whose servers commit tokens_per_step above the per-pilot
         # slot count drains the same backlog with fewer pilots.  Without

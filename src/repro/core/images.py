@@ -41,10 +41,23 @@ class PayloadImage:
     # decision — it names a different image (own compile-cache key), and
     # engines from the image default to spec="draft" with this draft.
     draft: str | None = None
+    # serve mode only: SPMD device-mesh shape ``(data, model)`` the image's
+    # engines run on (None = single device).  Mesh shape is a LATE-BINDING
+    # decision exactly like the arch: a pilot claims devices first, and the
+    # mesh-shaped executable binds after — so it is part of ``key()`` and
+    # the registry compiles/warms once per (image, mesh).
+    mesh_shape: tuple | None = None
 
     def key(self) -> tuple:
         return (self.arch, self.shape, self.mode, self.smoke, self.flags,
-                self.draft)
+                self.draft, self.mesh_shape)
+
+    def build_mesh(self):
+        """The serve mesh this image requests, or None (single device)."""
+        if self.mesh_shape is None:
+            return None
+        from repro.runtime.mesh import serve_mesh
+        return serve_mesh(self.mesh_shape)
 
     def config(self) -> ArchConfig:
         cfg = get_smoke_config(self.arch) if self.smoke else get_config(self.arch)
@@ -226,13 +239,21 @@ class ExecutableRegistry:
             # weights — what makes replay-from-prompt reproduce a dead
             # server's tokens bitwise.
             from repro.serving.engine import (
-                ServeEngine, make_draft_step, make_engine_step,
-                make_verify_step,
+                ServeEngine, _traced_under_mesh, make_draft_step,
+                make_engine_step, make_verify_step,
             )
 
+            # the image's requested serve mesh (late binding: the slice's
+            # devices are already held; this shapes the executable over
+            # them).  One mesh per factory — a different mesh_shape is a
+            # different image key, so the registry keeps the compiles apart.
+            eng_mesh = image.build_mesh()
             step_fns: dict[int, Any] = {}
-            prefill_fn = jax.jit(bundle.prefill)
-            chunk_fn = (jax.jit(bundle.prefill_chunk, donate_argnums=1)
+            prefill_fn = jax.jit(_traced_under_mesh(bundle.prefill,
+                                                    eng_mesh))
+            chunk_fn = (jax.jit(_traced_under_mesh(bundle.prefill_chunk,
+                                                   eng_mesh),
+                        donate_argnums=1)
                         if bundle.prefill_chunk is not None else None)
             # the draft model is part of the image: one bundle, one fixed-
             # seed param set and one jitted prefill shared by every engine
@@ -245,19 +266,22 @@ class ExecutableRegistry:
                 draft_cfg = (get_smoke_config(image.draft) if image.smoke
                              else get_config(image.draft))
                 draft_bundle = build_model(draft_cfg)
-                draft_prefill_fn = jax.jit(draft_bundle.prefill)
+                draft_prefill_fn = jax.jit(
+                    _traced_under_mesh(draft_bundle.prefill, eng_mesh))
             spec_fns: dict[tuple, Any] = {}
 
             def step_for(max_len):
                 if max_len not in step_fns:
-                    step_fns[max_len] = make_engine_step(bundle, max_len)
+                    step_fns[max_len] = make_engine_step(bundle, max_len,
+                                                         mesh=eng_mesh)
                 return step_fns[max_len]
 
             def spec_for(max_len, k):
                 if (max_len, k) not in spec_fns:
                     spec_fns[(max_len, k)] = (
-                        make_draft_step(draft_bundle or bundle, k, max_len),
-                        make_verify_step(bundle, max_len, k))
+                        make_draft_step(draft_bundle or bundle, k, max_len,
+                                        mesh=eng_mesh),
+                        make_verify_step(bundle, max_len, k, mesh=eng_mesh))
                 return spec_fns[(max_len, k)]
 
             def draft_params_for():
@@ -266,26 +290,40 @@ class ExecutableRegistry:
                         jax.random.key(0))
                 return draft_params_cache["params"]
 
-            def fn(params, slots=None, max_len=None, **kw):
+            def fn(params, slots=None, max_len=None, mesh_shape=None, **kw):
                 ml = max_len or shape.seq_len
+                mesh = eng_mesh
+                shared = True
+                if mesh_shape is not None \
+                        and tuple(mesh_shape) != image.mesh_shape:
+                    # startup-spec override of the image's mesh: correct
+                    # but unprefetched — the engine jits its own steps for
+                    # the off-image geometry (first tick pays the compile)
+                    from repro.runtime.mesh import serve_mesh
+                    mesh = serve_mesh(tuple(mesh_shape))
+                    shared = False
                 if image.draft:
                     kw.setdefault("spec", "draft")
                 if kw.get("spec") == "draft":
                     kw.setdefault("spec_k", 4)
-                    dfn, vfn = spec_for(ml, int(kw["spec_k"]))
-                    kw.setdefault("draft_fn", dfn)
-                    kw.setdefault("verify_fn", vfn)
+                    if shared:
+                        dfn, vfn = spec_for(ml, int(kw["spec_k"]))
+                        kw.setdefault("draft_fn", dfn)
+                        kw.setdefault("verify_fn", vfn)
                     if draft_bundle is not None:
                         kw.setdefault("draft_cfg", draft_cfg)
                         kw.setdefault("draft_bundle", draft_bundle)
                         kw.setdefault("draft_params", draft_params_for())
-                        kw.setdefault("draft_prefill_fn", draft_prefill_fn)
+                        if shared:
+                            kw.setdefault("draft_prefill_fn",
+                                          draft_prefill_fn)
                 return ServeEngine(cfg, params,
                                    slots=slots or shape.global_batch,
                                    max_len=ml, bundle=bundle,
-                                   step_fn=step_for(ml),
-                                   prefill_fn=prefill_fn,
-                                   chunk_fn=chunk_fn, **kw)
+                                   step_fn=step_for(ml) if shared else None,
+                                   prefill_fn=prefill_fn if shared else None,
+                                   chunk_fn=chunk_fn if shared else None,
+                                   mesh=mesh, **kw)
 
             def make_inputs(key):
                 return bundle.init(key)

@@ -135,7 +135,8 @@ def _serve_loop(exe, key, n_steps, entry, proctable, telemetry, spec) -> int:
     params = exe.make_inputs(key)
     kv_kw = {k: spec[k] for k in ("kv", "prefill", "prefill_chunk",
                                   "num_blocks", "block_size",
-                                  "prefix_sharing", "spec", "spec_k")
+                                  "prefix_sharing", "spec", "spec_k",
+                                  "mesh_shape")
              if spec.get(k) is not None}
     eng = exe.fn(params, slots=spec.get("slots"),
                  max_len=spec.get("max_len"), **kv_kw)
@@ -173,7 +174,9 @@ _SERVE_STAT_KEYS = (
     "kv_capacity_tokens", "prefix_hit_rate", "prefill_chunks",
     "blocked_admissions",
     "spec", "spec_fallback_reason", "acceptance_rate", "tokens_per_step",
-    "draft_overhead_s")
+    "draft_overhead_s",
+    "mesh_shape", "mesh_devices", "slots",
+    "kv_pool_bytes", "kv_pool_bytes_per_device")
 
 
 def _fleet_serve_loop(eng, spec, n_steps, entry, proctable, telemetry) -> int:

@@ -5,10 +5,18 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+try:                                    # moved to jax.shard_map in new jax
+    from jax.experimental.shard_map import shard_map
+except ImportError:                     # pragma: no cover
+    from jax import shard_map
 
 from repro.kernels.paged_attention.kernel import (
     paged_decode_attention_kernel, paged_verify_attention_kernel,
 )
+from repro.runtime.mesh import MODEL_AXIS, mesh_axis_size
 
 
 def _on_tpu() -> bool:
@@ -59,3 +67,65 @@ def paged_verify_attention(q, k_pool, v_pool, block_tables, q_off, *,
     o = paged_verify_attention_kernel(qg, k_pool, v_pool, block_tables,
                                       q_off, interpret=interpret)
     return o.reshape(B, S, H, Dh)
+
+
+# --------------------------------------------------------------------------
+# tensor-parallel (head-sharded) wrappers
+# --------------------------------------------------------------------------
+# Each mesh shard runs the SAME Pallas kernel on its local contiguous head
+# slice: q on dim 1 (decode) / dim 2 (verify) over "model", pools on their
+# K dim (2), block tables + lengths replicated (they are the scalar-prefetch
+# operands — every shard walks the same table).  The contiguous-heads split
+# aligns with the kv-group mapping (query head h attends kv head h // G), so
+# shard s owns query heads [s*H/m, (s+1)*H/m) and exactly the kv heads
+# [s*K/m, (s+1)*K/m) they attend — no cross-shard communication, and every
+# per-head softmax is bitwise identical to the single-device kernel.
+# check_rep=False: pallas_call inside shard_map cannot prove replication.
+
+def tp_heads(mesh, num_kv_heads: int, num_heads: int) -> bool:
+    """True iff the kernel can be head-sharded on this mesh: the model axis
+    must divide the KV head count (whole kv-groups per shard)."""
+    if mesh is None:
+        return False
+    m = mesh_axis_size(mesh, MODEL_AXIS)
+    return m > 1 and num_kv_heads % m == 0 and num_heads % m == 0
+
+
+def _len_spec(x) -> P:
+    return P() if jnp.ndim(x) == 0 else P(*([None] * jnp.ndim(x)))
+
+
+def paged_decode_attention_tp(q, k_pool, v_pool, block_tables, cache_len,
+                              mesh, *, interpret=None):
+    """Head-sharded paged_decode_attention under shard_map.  Same contract;
+    q (B,H,Dh) sharded on H, pools (nb,bs,K,Dh) sharded on K, output
+    (B,H,Dh) sharded on H.  Requires :func:`tp_heads`."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    fn = shard_map(
+        functools.partial(paged_decode_attention, interpret=interpret),
+        mesh=mesh,
+        in_specs=(P(None, MODEL_AXIS, None), P(None, None, MODEL_AXIS, None),
+                  P(None, None, MODEL_AXIS, None), P(None, None),
+                  _len_spec(cache_len)),
+        out_specs=P(None, MODEL_AXIS, None),
+        check_rep=False)
+    return fn(q, k_pool, v_pool, block_tables, cache_len)
+
+
+def paged_verify_attention_tp(q, k_pool, v_pool, block_tables, q_off,
+                              mesh, *, interpret=None):
+    """Head-sharded paged_verify_attention under shard_map.  q (B,S,H,Dh)
+    sharded on H; pools on K; output sharded on H."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    fn = shard_map(
+        functools.partial(paged_verify_attention, interpret=interpret),
+        mesh=mesh,
+        in_specs=(P(None, None, MODEL_AXIS, None),
+                  P(None, None, MODEL_AXIS, None),
+                  P(None, None, MODEL_AXIS, None), P(None, None),
+                  _len_spec(q_off)),
+        out_specs=P(None, None, MODEL_AXIS, None),
+        check_rep=False)
+    return fn(q, k_pool, v_pool, block_tables, q_off)

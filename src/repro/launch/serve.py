@@ -73,12 +73,16 @@ def serve_direct(cfg, n_requests: int, slots: int, max_len: int,
                  kv: str | None = None, prefill: str = "oneshot",
                  num_blocks: int | None = None,
                  dup_rate: float = 0.0, spec: str = "off", spec_k: int = 4,
-                 draft_cfg=None) -> dict:
+                 draft_cfg=None, mesh_shape=None) -> dict:
+    mesh = None
+    if mesh_shape is not None:
+        from repro.runtime.mesh import serve_mesh
+        mesh = serve_mesh(mesh_shape)
     params = build_model(cfg).init(jax.random.key(seed))
     eng = ServeEngine(cfg, params, slots=slots, max_len=max_len,
                       admission=admission, kv=kv, prefill=prefill,
                       num_blocks=num_blocks, spec=spec, spec_k=spec_k,
-                      draft_cfg=draft_cfg)
+                      draft_cfg=draft_cfg, mesh=mesh)
     trace = make_trace(cfg.vocab_size, n_requests, max_len=max_len,
                        seed=seed, dup_rate=dup_rate)
     return eng.run_trace(trace)
@@ -129,7 +133,7 @@ def serve_fleet(arch: str, n_requests: int, n_pilots: int, *,
                 fail_count: int = 1, lease_ttl: float = 0.5,
                 registry=None, seed: int = 0, draft: str | None = None,
                 spec_k: int = 4, robustness=None, chaos_plan=None,
-                poison: int = 0) -> dict:
+                poison: int = 0, mesh_shape=None) -> dict:
     """The fleet serve demo/driver: N pilots lease requests from one pool.
 
     ``fail_at`` hard-kills ``fail_count`` lease-holding pilots (one at
@@ -165,8 +169,14 @@ def serve_fleet(arch: str, n_requests: int, n_pilots: int, *,
     fleet = sim.spawn_fleet(n_pilots, PilotConfig(max_payloads=2,
                                                   idle_grace=0.3))
     img = PayloadImage(arch=arch, shape="smoke", mode="serve",
-                       draft=None if draft in (None, "self") else draft)
+                       draft=None if draft in (None, "self") else draft,
+                       mesh_shape=(tuple(mesh_shape)
+                                   if mesh_shape is not None else None))
     server_spec = {"slots": slots, "max_len": max_len}
+    if mesh_shape is not None:
+        # the fleet path plumbs the mesh through the startup spec too, so
+        # telemetry/debug dumps of the spec show what geometry was served
+        server_spec["mesh_shape"] = list(tuple(mesh_shape))
     if draft is not None:
         server_spec.update({"spec": "draft", "spec_k": spec_k})
     tids = fleet.submit_servers(img, pool.name, n=n_pilots,
@@ -414,6 +424,11 @@ def main():
                          "fleet modes)")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="draft tokens proposed per speculative step")
+    ap.add_argument("--mesh", default=None,
+                    help="serve over a device mesh, 'AxB' = (data, model) "
+                         "— e.g. '1x2' shards params + paged KV pools on "
+                         "the head axis over 2 devices (direct and fleet "
+                         "modes)")
     ap.add_argument("--via-pilots", action="store_true")
     ap.add_argument("--pilots", type=int, default=None,
                     help="fleet serve: N pilots lease requests from one "
@@ -436,6 +451,11 @@ def main():
                          "the demand-driven autoscaler (--pilots caps the "
                          "fleet; starts at 1, scales to zero in the gaps)")
     args = ap.parse_args()
+
+    mesh_shape = None
+    if args.mesh:
+        from repro.runtime.mesh import parse_mesh_shape
+        mesh_shape = parse_mesh_shape(args.mesh)
 
     if args.autoscale:
         from repro.core.autoscaler import AutoscalePolicy
@@ -477,8 +497,12 @@ def main():
                           slots=args.slots or 2, max_len=args.max_len or 64,
                           fail_at=args.fail_at, draft=args.draft,
                           spec_k=args.spec_k, robustness=robustness,
-                          chaos_plan=chaos_plan, poison=poison)
+                          chaos_plan=chaos_plan, poison=poison,
+                          mesh_shape=mesh_shape)
         out.pop("results")
+        if mesh_shape is not None:
+            print(f"[mesh] shape={'x'.join(map(str, mesh_shape))} "
+                  f"(fleet: every server shards over its own mesh)")
         if args.draft:
             print(f"[spec] servers={out['spec_servers']} "
                   f"acceptance_rate={out['acceptance_rate']:.3f} "
@@ -502,7 +526,13 @@ def main():
                          num_blocks=args.num_blocks,
                          dup_rate=args.dup_rate,
                          spec="draft" if args.draft else "off",
-                         spec_k=args.spec_k, draft_cfg=draft_cfg)
+                         spec_k=args.spec_k, draft_cfg=draft_cfg,
+                         mesh_shape=mesh_shape)
+    if mesh_shape is not None:
+        print(f"[mesh] shape={'x'.join(map(str, mesh_shape))} "
+              f"devices={stats['mesh_devices']} "
+              f"kv_pool_bytes_per_device={stats['kv_pool_bytes_per_device']} "
+              f"(total {stats['kv_pool_bytes']})")
     if args.draft:
         print(f"[spec] spec={stats['spec']} "
               f"acceptance_rate={stats['acceptance_rate']:.3f} "

@@ -96,7 +96,8 @@ def default_num_blocks(batch: int, max_len: int, block_size: int) -> int:
 
 def init_decode_state(cfg: ArchConfig, batch: int, max_len: int, *,
                       dtype=jnp.bfloat16, kv: str = "dense",
-                      num_blocks: int | None = None, block_size: int = 16):
+                      num_blocks: int | None = None, block_size: int = 16,
+                      mesh=None):
     """Concrete zero decode state (also used via eval_shape for specs).
 
     ``pos`` is a per-row (batch,) vector: every batch row decodes at its own
@@ -107,7 +108,13 @@ def init_decode_state(cfg: ArchConfig, batch: int, max_len: int, *,
     ``kv="paged"`` swaps the dense per-row KV slabs for shared block pools
     plus a per-row ``block_tables`` (batch, max_len // block_size) map; the
     table width times the block size equals ``max_len`` so the gathered
-    logical view has the dense shapes (bitwise-equal attend math)."""
+    logical view has the dense shapes (bitwise-equal attend math).
+
+    ``mesh`` places the fresh state per the serve tensor-parallel rules
+    (:func:`repro.runtime.sharding.serve_state_shardings`): KV pools shard
+    on their head/latent dim over "model", block tables and scalars
+    replicate.  Must stay None under ``eval_shape`` (specs carry no
+    placement)."""
     if cfg.is_encdec:
         if kv == "paged":
             raise ValueError("paged KV is a decoder-LM path; "
@@ -131,6 +138,10 @@ def init_decode_state(cfg: ArchConfig, batch: int, max_len: int, *,
     if kv == "paged":
         state["block_tables"] = jnp.zeros(
             (batch, max_len // block_size), jnp.int32)
+    if mesh is not None:
+        from repro.runtime.sharding import serve_state_shardings
+        shardings = serve_state_shardings(state, mesh)
+        state = jax.tree.map(jax.device_put, state, shardings)
     return state
 
 

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.layers import apply_rope, dense_init, rmsnorm, rope_table
-from repro.runtime.sharding import constrain
+from repro.runtime.sharding import constrain, constrain_replicated
 
 NEG_INF = -1e30
 
@@ -274,7 +274,7 @@ def attention_forward(x, p, cfg, *, rope_cos, rope_sin, causal=True,
         k = apply_rope(k, rope_cos, rope_sin)
     out = constrain(attend(q, k, v, cfg, causal=causal, window=window),
                     "b.m.")
-    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(compute))
+    return jnp.einsum("bshk,hkd->bsd", constrain_replicated(out), p["wo"].astype(compute))
 
 
 def _ring_write_full(k, v, cache, window=None):
@@ -311,7 +311,7 @@ def attention_prefill(x, p, cfg, rope, cache, *, window=None,
         q = apply_rope(q, rope[0], rope[1])
         k = apply_rope(k, rope[0], rope[1])
     out = constrain(attend(q, k, v, cfg, causal=True, window=window), "b.m.")
-    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(compute))
+    out = jnp.einsum("bshk,hkd->bsd", constrain_replicated(out), p["wo"].astype(compute))
     return out, _ring_write_full(k, v, cache, window)
 
 
@@ -337,7 +337,7 @@ def _mla_prefill(x, p, cfg, rope, cache, *, compute):
         "b.m.")
     out = constrain(attend(q, k, v_pad, cfg, causal=True), "b.m.")
     out = out[..., : s.v_head_dim]
-    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(compute))
+    out = jnp.einsum("bshk,hkd->bsd", constrain_replicated(out), p["wo"].astype(compute))
     T = cache["ckv"].shape[1]
     ckv_w = jnp.pad(ckv, ((0, 0), (0, T - S), (0, 0))) if S <= T else ckv[:, -T:]
     kr = k_rope[:, :, 0]
@@ -431,14 +431,22 @@ def attention_decode(x, p, cfg, cache, pos, *, rope_theta=None,
         T = block_tables.shape[1] * k_pool.shape[1]
         cache_len = jnp.minimum(pos + 1, T)
         if cfg.attn_impl == "pallas":
-            from repro.kernels.paged_attention.ops import paged_decode_attention
-            out = paged_decode_attention(q[:, 0], k_pool, v_pool,
-                                         block_tables, cache_len)[:, None]
+            from repro.kernels.paged_attention.ops import (
+                paged_decode_attention, paged_decode_attention_tp, tp_heads)
+            from repro.runtime.sharding import active_mesh
+            mesh = active_mesh()
+            if tp_heads(mesh, cfg.num_kv_heads, cfg.num_heads):
+                out = paged_decode_attention_tp(q[:, 0], k_pool, v_pool,
+                                                block_tables, cache_len,
+                                                mesh)[:, None]
+            else:
+                out = paged_decode_attention(q[:, 0], k_pool, v_pool,
+                                             block_tables, cache_len)[:, None]
         else:
             out = decode_attend(q, _paged_gather(k_pool, block_tables),
                                 _paged_gather(v_pool, block_tables),
                                 cache_len, window=window)
-        out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(compute))
+        out = jnp.einsum("bshk,hkd->bsd", constrain_replicated(out), p["wo"].astype(compute))
         return out, {"kp": k_pool, "vp": v_pool}
     T = cache["k"].shape[1]
     # per-row ring-buffer write (rolling for SWA; plain append when T >= max)
@@ -452,7 +460,7 @@ def attention_decode(x, p, cfg, cache, pos, *, rope_theta=None,
                                cache_len)[:, None]
     else:
         out = decode_attend(q, k_cache, v_cache, cache_len, window=window)
-    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(compute))
+    out = jnp.einsum("bshk,hkd->bsd", constrain_replicated(out), p["wo"].astype(compute))
     return out, {"k": k_cache, "v": v_cache}
 
 
@@ -507,8 +515,15 @@ def attention_verify(x, p, cfg, cache, pos, *, block_tables,
     v_pool = _paged_write_seq(cache["vp"], v, block_tables, pos)
     T = block_tables.shape[1] * k_pool.shape[1]
     if cfg.attn_impl == "pallas":
-        from repro.kernels.paged_attention.ops import paged_verify_attention
-        out = paged_verify_attention(q, k_pool, v_pool, block_tables, pos)
+        from repro.kernels.paged_attention.ops import (
+            paged_verify_attention, paged_verify_attention_tp, tp_heads)
+        from repro.runtime.sharding import active_mesh
+        mesh = active_mesh()
+        if tp_heads(mesh, cfg.num_kv_heads, cfg.num_heads):
+            out = paged_verify_attention_tp(q, k_pool, v_pool, block_tables,
+                                            pos, mesh)
+        else:
+            out = paged_verify_attention(q, k_pool, v_pool, block_tables, pos)
     else:
         kg = _paged_gather(k_pool, block_tables)
         vg = _paged_gather(v_pool, block_tables)
@@ -516,7 +531,7 @@ def attention_verify(x, p, cfg, cache, pos, *, block_tables,
             [decode_attend(q[:, s:s + 1], kg, vg,
                            jnp.minimum(pos + s + 1, T))
              for s in range(S)], axis=1)
-    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(compute))
+    out = jnp.einsum("bshk,hkd->bsd", constrain_replicated(out), p["wo"].astype(compute))
     return out, {"kp": k_pool, "vp": v_pool}
 
 
@@ -539,8 +554,8 @@ def _mla_verify(x, p, cfg, cache, pos, *, block_tables, compute):
     kr_new = apply_rope(kv_a[:, :, None, s.kv_lora_rank:], cos, sin)[:, :, 0]
     ckv_pool = _paged_write_seq(cache["ckvp"], ckv_new, block_tables, pos)
     kr_pool = _paged_write_seq(cache["kropep"], kr_new, block_tables, pos)
-    ckv = _paged_gather(ckv_pool, block_tables)
-    krope = _paged_gather(kr_pool, block_tables)
+    ckv = constrain_replicated(_paged_gather(ckv_pool, block_tables))
+    krope = constrain_replicated(_paged_gather(kr_pool, block_tables))
     T = ckv.shape[1]
 
     wkv_b = p["wkv_b"].astype(compute)                         # (r,H,n+v)
@@ -564,7 +579,7 @@ def _mla_verify(x, p, cfg, cache, pos, *, block_tables, compute):
                              ckv.astype(compute),
                              preferred_element_type=jnp.float32)
         out = jnp.einsum("bhr,rhv->bhv", out_lat.astype(compute), wv)
-        outs.append(jnp.einsum("bhv,hvd->bd", out,
+        outs.append(jnp.einsum("bhv,hvd->bd", constrain_replicated(out),
                                p["wo"].astype(compute))[:, None])
     return (jnp.concatenate(outs, axis=1),
             {"ckvp": ckv_pool, "kropep": kr_pool})
@@ -649,7 +664,7 @@ def _mla_forward(x, p, cfg, *, rope_cos, rope_sin, compute):
     # TB/device of score all-reduces without this)
     out = constrain(attend(q, k, v_pad, cfg, causal=True), "b.m.")
     out = out[..., : s.v_head_dim]
-    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(compute))
+    return jnp.einsum("bshk,hkd->bsd", constrain_replicated(out), p["wo"].astype(compute))
 
 
 def _mla_decode(x, p, cfg, cache, pos, *, block_tables=None, compute):
@@ -687,6 +702,10 @@ def _mla_decode(x, p, cfg, cache, pos, *, block_tables=None, compute):
         krope = _ring_write_rows(cache["krope"], kr_new, slot)
         new_cache = None                    # filled below (dense returns full)
 
+    # serve TP: the latent pools shard on r — gather the rows whole so the
+    # score/out contractions over r keep single-device reduction order
+    ckv = constrain_replicated(ckv)
+    krope = constrain_replicated(krope)
     wkv_b = p["wkv_b"].astype(compute)                           # (r,H,n+v)
     wk = wkv_b[..., : s.qk_nope_head_dim]                        # (r,H,n)
     wv = wkv_b[..., s.qk_nope_head_dim:]                         # (r,H,v)
@@ -705,7 +724,7 @@ def _mla_decode(x, p, cfg, cache, pos, *, block_tables=None, compute):
                          ckv.astype(compute),
                          preferred_element_type=jnp.float32)     # (B,H,r)
     out = jnp.einsum("bhr,rhv->bhv", out_lat.astype(compute), wv)
-    out = jnp.einsum("bhv,hvd->bd", out, p["wo"].astype(compute))[:, None]
+    out = jnp.einsum("bhv,hvd->bd", constrain_replicated(out), p["wo"].astype(compute))[:, None]
     return out, (new_cache if new_cache is not None
                  else {"ckv": ckv, "krope": krope})
 
@@ -813,7 +832,7 @@ def attention_prefill_chunk(x, p, cfg, cache, table_row, slot, q_offset,
             "v": jax.lax.dynamic_update_index_in_dim(
                 cache["v"], new_v.astype(cache["v"].dtype), slot, 0),
         }
-    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(compute))
+    out = jnp.einsum("bshk,hkd->bsd", constrain_replicated(out), p["wo"].astype(compute))
     return out, new_cache
 
 
@@ -835,8 +854,9 @@ def _mla_prefill_chunk(x, p, cfg, cache, table_row, slot, q_offset, *,
                                   positions)
     kr_pool = _paged_write_chunk(cache["kropep"], kr_new[0], table_row,
                                  positions)
-    ckv = _paged_gather(ckv_pool, table_row[None])           # (1,T,r)
-    krope = _paged_gather(kr_pool, table_row[None])
+    ckv = constrain_replicated(
+        _paged_gather(ckv_pool, table_row[None]))            # (1,T,r)
+    krope = constrain_replicated(_paged_gather(kr_pool, table_row[None]))
     T = ckv.shape[1]
 
     wkv_b = p["wkv_b"].astype(compute)                       # (r,H,n+v)
@@ -857,5 +877,5 @@ def _mla_prefill_chunk(x, p, cfg, cache, table_row, slot, q_offset, *,
                          ckv.astype(compute),
                          preferred_element_type=jnp.float32)
     out = jnp.einsum("bchr,rhv->bchv", out_lat.astype(compute), wv)
-    out = jnp.einsum("bchv,hvd->bcd", out, p["wo"].astype(compute))
+    out = jnp.einsum("bchv,hvd->bcd", constrain_replicated(out), p["wo"].astype(compute))
     return out, {"ckvp": ckv_pool, "kropep": kr_pool}

@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.runtime.sharding import constrain_replicated
+
 
 # --------------------------------------------------------------------------
 # Init
@@ -116,6 +118,9 @@ def apply_mlp(x, p, cfg, compute_dtype=jnp.bfloat16):
         h = act(gate) * up
     else:
         h = act(up)
+    # serve TP: h is d_ff-sharded (up/gate column-parallel); gather it so
+    # the down contraction keeps single-device reduction order
+    h = constrain_replicated(h)
     return jnp.einsum("bsf,fd->bsd", h, p["down"].astype(compute_dtype))
 
 
@@ -132,7 +137,9 @@ def lm_logits(x, head, softcap: float | None = None):
     logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype)).astype(jnp.float32)
     if softcap is not None:
         logits = softcap * jnp.tanh(logits / softcap)
-    return logits
+    # serve TP: head is vocab-sharded (column-parallel); gather so the
+    # engine's argmax/top-k run on replicated logits
+    return constrain_replicated(logits)
 
 
 def softmax_cross_entropy(logits, targets, mask=None):

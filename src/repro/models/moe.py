@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import act_fn, dense_init
-from repro.runtime.sharding import constrain
+from repro.runtime.sharding import constrain, constrain_replicated
 
 
 def init_moe(key, cfg):
@@ -134,7 +134,8 @@ def apply_moe(x, p, cfg, compute=jnp.bfloat16):
             h = (act(g) * up).astype(compute)
         else:
             h = act(up).astype(compute)
-        y = _bucket_gmm(h, p["down"].astype(compute)).astype(compute)
+        y = _bucket_gmm(constrain_replicated(h),
+                        p["down"].astype(compute)).astype(compute)
     else:
         up = jnp.einsum("becd,edf->becf", buckets, p["up"].astype(compute))
         if cfg.mlp_gated:
@@ -143,6 +144,7 @@ def apply_moe(x, p, cfg, compute=jnp.bfloat16):
         else:
             h = act(up)
         h = constrain(h, "b..m")
+        h = constrain_replicated(h)
         y = jnp.einsum("becf,efd->becd", h, p["down"].astype(compute))
         y = constrain(y, "b...")
 
@@ -176,6 +178,7 @@ def apply_moe_dense(x, p, cfg, compute=jnp.bfloat16):
     # hidden over model — decode weight streaming drops by the data-axis
     # size; token activations are tiny so the reshard is ~free.
     h = constrain(h, "..dm")
+    h = constrain_replicated(h)
     y = jnp.einsum("bsef,efd->bsed", h, p["down"].astype(compute))
     out = jnp.einsum("bsed,bse->bsd", y, gates.astype(compute))
     return constrain(out, "b.."), jnp.float32(0.0)

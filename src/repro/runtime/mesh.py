@@ -64,6 +64,46 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
     return MeshSpec(tuple(shape), tuple(axes)).build()
 
 
+def parse_mesh_shape(text: str) -> tuple[int, ...]:
+    """Parse the CLI/image mesh-shape syntax ``"AxB"`` (e.g. ``"1x2"``,
+    ``"2x4"``) into a shape tuple.  A bare integer means ``1xN`` (pure
+    tensor parallelism)."""
+    parts = [p for p in str(text).lower().split("x") if p]
+    if not parts:
+        raise ValueError(f"bad mesh shape {text!r}; expected 'AxB'")
+    try:
+        shape = tuple(int(p) for p in parts)
+    except ValueError as e:
+        raise ValueError(f"bad mesh shape {text!r}; expected 'AxB'") from e
+    if any(s < 1 for s in shape):
+        raise ValueError(f"bad mesh shape {text!r}; dims must be >= 1")
+    if len(shape) == 1:
+        shape = (1,) + shape
+    if len(shape) != 2:
+        raise ValueError(f"bad mesh shape {text!r}; serve meshes are 2-D "
+                         f"(data x model)")
+    return shape
+
+
+def serve_mesh_spec(shape: tuple[int, ...] | str) -> MeshSpec:
+    """The serve-path mesh: ``(data, model)``.  The model axis carries the
+    tensor-parallel shards of params and paged-KV pools; the data axis is
+    pure replication headroom (slots are not batch-sharded in serve)."""
+    if isinstance(shape, str):
+        shape = parse_mesh_shape(shape)
+    shape = tuple(int(s) for s in shape)
+    if len(shape) != 2:
+        raise ValueError(f"serve mesh shape must be 2-D (data, model), "
+                         f"got {shape}")
+    return MeshSpec(shape, (DATA_AXIS, MODEL_AXIS))
+
+
+def serve_mesh(shape: tuple[int, ...] | str,
+               devices: Sequence[jax.Device] | None = None) -> Mesh:
+    """Build the serve mesh for ``shape`` (``"AxB"`` or a tuple)."""
+    return serve_mesh_spec(shape).build(devices)
+
+
 def mesh_axis_size(mesh: Mesh, name: str) -> int:
     """Size of a named axis; 1 if the mesh does not have it."""
     return mesh.shape.get(name, 1) if hasattr(mesh.shape, "get") else dict(

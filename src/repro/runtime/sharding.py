@@ -254,6 +254,86 @@ def _stacked_cache(path) -> bool:
     return False
 
 
+def serve_state_shardings(state_specs, mesh: Mesh):
+    """Serve-engine decode state under tensor parallelism: KV pools shard on
+    the HEAD dim over "model", never on the sequence/block dim.
+
+    This is deliberately different from :func:`decode_state_shardings`
+    (split-K over the sequence dim): splitting the KV sequence changes the
+    attention reduction order and breaks the engine's bitwise
+    sharded-vs-single-device parity guarantee.  Splitting heads keeps every
+    per-head softmax+weighted-sum bitwise identical to the single-device
+    kernel — each shard owns whole heads.
+
+    Rules (dims in trailing/negative indexing, stacked group dim invariant):
+      kp/vp       (nb, bs, K, Dh)        -> K (dim -2) over "model"
+      ckvp        (nb, bs, r_latent)     -> latent (dim -1) over "model"
+      kropep      (nb, bs, d_rope)       -> latent (dim -1) over "model"
+      k/v dense   (B, T, K, Dh)          -> K (dim -2) over "model"
+      ckv/krope dense (B, T, r)          -> latent (dim -1) over "model"
+      ssd/conv / token / pos / block_tables -> replicated
+    Every rule degrades to replication when the axis doesn't divide the dim.
+    """
+    msz = axis_size(mesh, MODEL_AXIS)
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        ndim = len(shape)
+        spec: list = [None] * ndim
+        if msz > 1 and ndim >= 2:
+            if name in ("kp", "vp"):
+                if shape[-2] % msz == 0:
+                    spec[ndim - 2] = MODEL_AXIS
+            elif name in ("ckvp", "kropep"):
+                if shape[-1] % msz == 0:
+                    spec[ndim - 1] = MODEL_AXIS
+            elif name in ("k", "v"):
+                if ndim >= 3 and shape[-2] % msz == 0:
+                    spec[ndim - 2] = MODEL_AXIS
+            elif name in ("ckv", "krope"):
+                if shape[-1] % msz == 0:
+                    spec[ndim - 1] = MODEL_AXIS
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, state_specs)
+
+
+_SERVE_TP_SAFE = frozenset(
+    {"embed", "head", "wq", "wk", "wv", "wq_b", "wkv_b", "up", "gate"})
+
+
+def serve_param_shardings(tree, mesh: Mesh):
+    """Order-preserving tensor parallelism for the serve engine.
+
+    Only COLUMN-parallel weights shard — those whose TP dim is an *output*
+    dim of the forward contraction (wq/wk/wv/up/gate/... split heads or
+    d_ff; the contraction dim D/r stays whole on every shard, so each
+    shard's outputs are bitwise identical to the single-device slices).
+    ROW-parallel weights (wo, down, out_proj: TP dim is the contraction
+    dim) are deliberately replicated: sharding them turns the contraction
+    into partial sums combined by psum, whose reduction order differs from
+    the single-device einsum and flips argmax on near-tie logits — which
+    breaks the engine's bitwise sharded-vs-single-device token parity
+    guarantee.  wq_a/wkv_a are also replicated (their outputs feed rmsnorm
+    over the latent dim, a reduction that must not be sharded).
+
+    The memory win that matters for serving — the paged KV pools — comes
+    from :func:`serve_state_shardings`, not from here.
+    """
+    def one(path, leaf):
+        name = _leaf_name(path)
+        ndim = len(leaf.shape)
+        if name not in _SERVE_TP_SAFE or ndim == 0:
+            return NamedSharding(mesh, P())
+        tp_dim, _ = _PARAM_RULES[name]
+        spec: list = [None] * ndim
+        if tp_dim is not None and -tp_dim <= ndim:
+            spec[tp_dim % ndim] = _maybe(
+                mesh, MODEL_AXIS, leaf.shape[tp_dim % ndim])
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
 def replicated(tree, mesh: Mesh):
     return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
 
@@ -301,6 +381,33 @@ def activation_sharding(mesh: Mesh, layout: str = "2d"):
         yield
     finally:
         _ACT.ctx = prev
+
+
+def active_mesh() -> Mesh | None:
+    """The mesh of the enclosing :func:`activation_sharding` context, or
+    None.  Read at TRACE time — model code uses it to pick sharded kernel
+    dispatch (shard_map over the head axis) without carrying a mesh through
+    every call signature."""
+    ctx = getattr(_ACT, "ctx", None)
+    return ctx[0] if ctx is not None else None
+
+
+def constrain_replicated(x):
+    """Pin an activation fully replicated — fires only under a "serve"
+    layout context (the serve engine's SPMD step/prefill traces).
+
+    Placed immediately BEFORE every contraction whose reduction dim can be
+    sharded (the wo out-projection over heads, the MLP down over d_ff, MLA
+    score/out math over gathered latents): forces GSPMD to all-gather the
+    operand and run the reduction whole on every device — the same
+    canonical order as the single-device engine — instead of the cheaper
+    partial-sum + psum, whose low-bit differences flip argmax on near-tie
+    logits and break bitwise token parity."""
+    ctx = getattr(_ACT, "ctx", None)
+    if ctx is None or ctx[1] != "serve":
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx[0], P()))
 
 
 def constrain(x, dims: str):

@@ -805,6 +805,12 @@ class FleetDispatcher:
                if "acceptance_rate" in d]
         tps = [float(d["tokens_per_step"]) for d in healthy.values()
                if "tokens_per_step" in d]
+        # per-SERVER slot capacity: a mesh-bound (tensor-parallel) server
+        # is ONE unit of `slots` capacity however many devices back it —
+        # mesh_devices is reported for observability only and must never
+        # multiply into the autoscaler's demand-proportional target
+        srv_slots = [float(d["slots"]) for d in healthy.values()
+                     if "slots" in d]
         return {
             "queued": rs["queued"],
             "leased": rs["leased"],
@@ -821,6 +827,11 @@ class FleetDispatcher:
             "blocked_by_server": blocked,
             "acceptance_rate": sum(acc) / len(acc) if acc else 0.0,
             "tokens_per_step": sum(tps) / len(tps) if tps else 0.0,
+            "slots_per_server": (sum(srv_slots) / len(srv_slots)
+                                 if srv_slots else 0.0),
+            "mesh_devices": max(
+                (int(d.get("mesh_devices", 1)) for d in healthy.values()),
+                default=1),
         }
 
     def lease_holders(self) -> dict[str, list[int]]:

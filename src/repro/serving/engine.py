@@ -71,6 +71,7 @@ the admission-install compile storm before a server takes leases.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from collections import deque
 
@@ -80,6 +81,44 @@ import numpy as np
 
 from repro.models.api import build_model, init_decode_state
 from repro.serving.blockpool import BlockAllocator, PrefixCache
+
+
+# --------------------------------------------------------------------------
+# tensor-parallel helpers (no-ops when mesh is None)
+# --------------------------------------------------------------------------
+
+def _replicate(mesh, x):
+    from jax.sharding import NamedSharding, PartitionSpec
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec()))
+
+
+def _traced_under_mesh(fn, mesh):
+    """Make ``fn`` trace under the serve activation-sharding context, so the
+    model's serve-TP constraints (``constrain_replicated`` before every
+    cross-shard contraction) bake into its jaxpr.  Prefill produces the
+    admission token, which must match the single-device engine bitwise just
+    like decode tokens — so prefill traces need the same treatment as the
+    step functions.  Identity when there is no mesh."""
+    if mesh is None or fn is None:
+        return fn
+    from repro.runtime.sharding import activation_sharding
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kwargs):
+        with activation_sharding(mesh, "serve"):
+            return fn(*args, **kwargs)
+    return wrapped
+
+
+def _constrain_serve_state(mesh, state):
+    """Pin the decode state's output shardings inside a jitted step: pools
+    stay head-sharded, tables/scalars stay replicated.  Without this, GSPMD
+    is free to re-partition donated outputs between steps, which would make
+    the engine's host-side install surgery reshard every tick."""
+    from repro.runtime.sharding import serve_state_shardings
+    shardings = serve_state_shardings(state, mesh)
+    return jax.tree.map(jax.lax.with_sharding_constraint, state, shardings)
 
 
 @dataclasses.dataclass
@@ -164,15 +203,21 @@ def prefill_chunk_shapes(max_len: int, block_size: int,
     return sorted(shapes)
 
 
-def make_engine_step(bundle, max_len: int):
+def make_engine_step(bundle, max_len: int, mesh=None):
     """The engine's jitted decode step: decode + argmax + per-slot budget
     debit + done mask, all on device, returning one packed (2, slots) int32
     array.  Module-level so engines built over the SAME bundle/max_len (a
     serve image's factory) share one jit wrapper — which is what lets
     ``ExecutableRegistry.prefetch`` stage the XLA compile before the
     payload's first tick.  The same wrapper serves dense AND paged states
-    (different pytree structures trace separately)."""
-    def step(params, state, active, budget):
+    (different pytree structures trace separately).
+
+    ``mesh`` makes the step SPMD: the body traces under an
+    ``activation_sharding`` context (model code then constrains activations
+    and dispatches head-sharded Pallas kernels), output state shardings are
+    pinned, and ``packed`` is constrained fully replicated so the engine's
+    single ``device_get`` stays one transfer — it reads one local shard."""
+    def body(params, state, active, budget):
         logits, new_state = bundle.decode(params, state)       # argmax inside
         tok = new_state["token"][:, 0]
         budget = budget - active.astype(jnp.int32)
@@ -180,10 +225,25 @@ def make_engine_step(bundle, max_len: int):
         packed = jnp.stack([tok, done.astype(jnp.int32)])      # (2, slots)
         return packed, new_state, active & ~done, budget
 
+    if mesh is None:
+        return jax.jit(body, donate_argnums=(1, 2, 3))
+
+    from repro.runtime.sharding import activation_sharding
+
+    def step(params, state, active, budget):
+        with activation_sharding(mesh, "serve"):
+            packed, new_state, active, budget = body(
+                params, state, active, budget)
+            new_state = _constrain_serve_state(mesh, new_state)
+            packed = _replicate(mesh, packed)
+            active = _replicate(mesh, active)
+            budget = _replicate(mesh, budget)
+        return packed, new_state, active, budget
+
     return jax.jit(step, donate_argnums=(1, 2, 3))
 
 
-def make_draft_step(bundle, k: int, max_len: int):
+def make_draft_step(bundle, k: int, max_len: int, mesh=None):
     """The draft half of a speculative step: ``k`` autoregressive draft
     decodes fused into one jitted ``lax.scan`` (one dispatch, zero
     device→host syncs).  The draft writes its KV into its OWN paged pools,
@@ -209,10 +269,24 @@ def make_draft_step(bundle, k: int, max_len: int):
         state, toks = jax.lax.scan(body, state, None, length=k)
         return jnp.transpose(toks), state["cache"]
 
-    return jax.jit(draft, donate_argnums=(1,))
+    if mesh is None:
+        return jax.jit(draft, donate_argnums=(1,))
+
+    from repro.runtime.sharding import activation_sharding
+
+    def draft_tp(params, cache, token, pos, block_tables):
+        with activation_sharding(mesh, "serve"):
+            toks, cache = draft(params, cache, token, pos, block_tables)
+            cache = _constrain_serve_state(mesh, cache)
+            # drafts feed verify device-side; replicated keeps the verify
+            # trace free of a gather prologue
+            toks = _replicate(mesh, toks)
+        return toks, cache
+
+    return jax.jit(draft_tp, donate_argnums=(1,))
 
 
-def make_verify_step(bundle, max_len: int, k: int):
+def make_verify_step(bundle, max_len: int, k: int, mesh=None):
     """The verify half of a speculative step: ONE batched (k+1)-position
     target forward over [pending token, k drafts], then greedy acceptance
     (truncate at the first draft/target mismatch), budget debit and done
@@ -248,7 +322,22 @@ def make_verify_step(bundle, max_len: int, k: int):
             [a[None], done.astype(jnp.int32)[None], preds.T], axis=0)
         return packed, new_state, active & ~done, budget
 
-    return jax.jit(step, donate_argnums=(1, 2, 3))
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(1, 2, 3))
+
+    from repro.runtime.sharding import activation_sharding
+
+    def step_tp(params, state, active, budget, drafts):
+        with activation_sharding(mesh, "serve"):
+            packed, new_state, active, budget = step(
+                params, state, active, budget, drafts)
+            new_state = _constrain_serve_state(mesh, new_state)
+            packed = _replicate(mesh, packed)
+            active = _replicate(mesh, active)
+            budget = _replicate(mesh, budget)
+        return packed, new_state, active, budget
+
+    return jax.jit(step_tp, donate_argnums=(1, 2, 3))
 
 
 def spec_ineligible_reason(cfg, kv: str) -> str | None:
@@ -296,10 +385,16 @@ class ServeEngine:
                  prefill_fn=None, chunk_fn=None,
                  spec: str = "off", spec_k: int = 4, draft_cfg=None,
                  draft_params=None, draft_bundle=None, draft_fn=None,
-                 verify_fn=None, draft_prefill_fn=None):
+                 verify_fn=None, draft_prefill_fn=None, mesh=None):
         assert admission in ("continuous", "wave"), admission
         assert prefill in ("oneshot", "chunked"), prefill
         assert spec in ("off", "draft"), spec
+        # tensor-parallel serving: the whole engine state lives sharded on
+        # `mesh` (params by the serve TP rules, KV pools on their head dim,
+        # everything else replicated) and the jitted steps run SPMD.  A
+        # 1-device mesh degrades to the single-device engine bit-for-bit.
+        self.mesh = mesh
+        self.mesh_devices = int(mesh.devices.size) if mesh is not None else 1
         # an arch only pages if some attention layer's per-token state can
         # live in blocks: all-SWA models are pure rolling rings and
         # attention-free models pure SSM state — a pool there would be
@@ -313,6 +408,10 @@ class ServeEngine:
         if kv == "paged" and not pages:
             kv = "dense"
         self.cfg = cfg
+        if mesh is not None:
+            from repro.runtime.sharding import serve_param_shardings
+            params = jax.tree.map(
+                jax.device_put, params, serve_param_shardings(params, mesh))
         self.params = params
         self.slots = slots
         self.max_len = max_len
@@ -343,16 +442,29 @@ class ServeEngine:
             self.prefix = PrefixCache(self.allocator) if prefix_ok else None
             self.state = init_decode_state(
                 cfg, slots, max_len, kv="paged", num_blocks=nb,
-                block_size=block_size)
+                block_size=block_size, mesh=mesh)
             self.max_blocks_per_slot = max_len // block_size
         else:
             self.allocator = None
             self.prefix = None
-            self.state = init_decode_state(cfg, slots, max_len)
+            self.state = init_decode_state(cfg, slots, max_len, mesh=mesh)
             self.max_blocks_per_slot = 0
             self._num_blocks = 0
         self.budget = jnp.zeros((slots,), jnp.int32)          # device-side
         self.active = jnp.zeros((slots,), bool)               # device-side
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            from repro.runtime.sharding import serve_state_shardings
+            rep = NamedSharding(mesh, PartitionSpec())
+            self.budget = jax.device_put(self.budget, rep)
+            self.active = jax.device_put(self.active, rep)
+            # the target shardings the step functions pin; host-side
+            # install surgery is repaired against this (``_ensure_sharded``)
+            self._state_shardings = serve_state_shardings(self.state, mesh)
+            self._rep_sharding = rep
+        else:
+            self._state_shardings = None
+            self._rep_sharding = None
         self.slot_meta = [SlotState() for _ in range(slots)]
         self.queue: deque[Request] = deque()
         self._jobs: deque[_PrefillJob] = deque()
@@ -379,11 +491,14 @@ class ServeEngine:
 
         # one compiled decode step for the whole engine lifetime; engine
         # state (decode state + budget + active) is donated every step
-        self._step_fn = step_fn or make_engine_step(self.bundle, max_len)
+        self._step_fn = step_fn or make_engine_step(self.bundle, max_len,
+                                                    mesh=mesh)
         # one jitted prefill wrapper; jax re-traces per prompt bucket shape
-        self._prefill = prefill_fn or jax.jit(self.bundle.prefill)
+        self._prefill = prefill_fn or jax.jit(
+            _traced_under_mesh(self.bundle.prefill, mesh))
         self._chunk_fn = chunk_fn or (
-            jax.jit(self.bundle.prefill_chunk, donate_argnums=1)
+            jax.jit(_traced_under_mesh(self.bundle.prefill_chunk, mesh),
+                    donate_argnums=1)
             if self.bundle.prefill_chunk is not None else None)
 
         # ---- speculative decoding: draft-and-verify multi-token steps ----
@@ -424,19 +539,30 @@ class ServeEngine:
                 # identical draft weights, so a requeued request replays the
                 # same tokens on whichever server picks it up
                 self.draft_params = self.draft_bundle.init(jax.random.key(0))
+            if mesh is not None:
+                from repro.runtime.sharding import serve_param_shardings
+                self.draft_params = jax.tree.map(
+                    jax.device_put, self.draft_params,
+                    serve_param_shardings(self.draft_params, mesh))
             # the draft's paged pools shadow the target's: same num_blocks,
             # same block_size, addressed through the SAME block-table ids —
             # admission/eviction bookkeeping covers both caches at once
             self._draft_cache = init_decode_state(
                 self.draft_cfg, slots, max_len, kv="paged",
                 num_blocks=self._num_blocks,
-                block_size=block_size)["cache"]
+                block_size=block_size, mesh=mesh)["cache"]
             self._draft_fn = draft_fn or make_draft_step(
-                self.draft_bundle, self.spec_k, max_len)
+                self.draft_bundle, self.spec_k, max_len, mesh=mesh)
             self._verify_fn = verify_fn or make_verify_step(
-                self.bundle, max_len, self.spec_k)
+                self.bundle, max_len, self.spec_k, mesh=mesh)
+            if mesh is not None:
+                from repro.runtime.sharding import serve_state_shardings
+                self._draft_shardings = serve_state_shardings(
+                    self._draft_cache, mesh)
+            else:
+                self._draft_shardings = None
             self._draft_prefill = draft_prefill_fn or jax.jit(
-                self.draft_bundle.prefill)
+                _traced_under_mesh(self.draft_bundle.prefill, mesh))
 
     # ------------------------------------------------------------------
 
@@ -744,6 +870,28 @@ class ServeEngine:
                 out.append(req)
         return out
 
+    def _ensure_sharded(self):
+        """Repair sharding drift before a mesh step: the eager host-side
+        install/evict surgery (`.at[].set`, block scatters) can hand back
+        leaves whose placement no longer matches the step's pinned
+        shardings, which would force GSPMD to reshard (or jit to re-trace)
+        every tick.  The `.sharding` comparison is pure host metadata —
+        leaves already in place cost nothing."""
+        if self.mesh is None:
+            return
+
+        def fix(x, s):
+            return x if getattr(x, "sharding", None) == s else \
+                jax.device_put(x, s)
+
+        self.state = jax.tree.map(fix, self.state, self._state_shardings)
+        rep = self._rep_sharding
+        self.active = fix(self.active, rep)
+        self.budget = fix(self.budget, rep)
+        if self.spec == "draft":
+            self._draft_cache = jax.tree.map(
+                fix, self._draft_cache, self._draft_shardings)
+
     def step(self) -> int:
         """One engine iteration: admit into free slots, advance at most one
         prefill chunk, then one batched decode step.  Returns the number of
@@ -755,6 +903,7 @@ class ServeEngine:
         actives = [si for si, m in enumerate(self.slot_meta) if m.active]
         if not actives:
             return 0
+        self._ensure_sharded()
         guard = self._guard_rows() if self._jobs else None
         if self.spec == "draft":
             # draft chain: k small-model decodes in one dispatch, writing
@@ -891,6 +1040,18 @@ class ServeEngine:
             self.prefix.evict_unreferenced(self.allocator.capacity_blocks)
         return self.allocator.allocated_blocks
 
+    def kv_pool_bytes(self) -> dict:
+        """KV cache memory: logical total and the per-device (local shard)
+        footprint.  On a 1xN mesh the head-sharded pools put ~1/N of the
+        pool bytes on each device — the capacity headroom TP buys."""
+        total = local = 0
+        for leaf in jax.tree.leaves(self.state["cache"]):
+            total += int(leaf.nbytes)
+            shards = getattr(leaf, "addressable_shards", None)
+            local += int(shards[0].data.nbytes) if shards \
+                else int(leaf.nbytes)
+        return {"kv_pool_bytes": total, "kv_pool_bytes_per_device": local}
+
     def kv_pressure(self) -> dict:
         """Instantaneous cache-pressure sample for heartbeat telemetry:
         live/allocated RIGHT NOW (the `_stats` dict reports the mean over
@@ -908,6 +1069,12 @@ class ServeEngine:
             "kv_live_tokens": live,
             "kv_peak_live_tokens": self.kv_peak_live_tokens,
             "kv_capacity_tokens": self.kv_capacity_tokens,
+            # capacity accounting for the pool/autoscaler: a mesh-bound
+            # server is ONE unit of `slots` capacity however many devices
+            # back it; kv_capacity_tokens above is already per-mesh (the
+            # pools are sharded, not replicated, across the mesh)
+            "slots": self.slots,
+            "mesh_devices": self.mesh_devices,
             "prefix_hit_rate": (self.prefix_hit_tokens
                                 / self.prompt_tokens_total
                                 if self.prompt_tokens_total else 0.0),
@@ -1030,6 +1197,13 @@ class ServeEngine:
                                 if self.spec_drafted else 0.0),
             "tokens_per_step": decoded / self.steps if self.steps else 0.0,
             "draft_overhead_s": self.draft_time_s,
+            # tensor-parallel footprint: shape None == single device;
+            # per-device bytes < total is the memory headroom TP buys
+            "mesh_shape": (tuple(self.mesh.devices.shape)
+                           if self.mesh is not None else None),
+            "mesh_devices": self.mesh_devices,
+            "slots": self.slots,
+            **self.kv_pool_bytes(),
         }
 
     def reset_metrics(self):
