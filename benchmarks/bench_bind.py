@@ -111,6 +111,24 @@ def run() -> list[tuple[str, float, str]]:
     reg4.prefetch(serve_img).wait(timeout=600.0)
     warm_buckets = bucket_first_request_times(reg4)
 
+    # role-restricted warm: a disaggregated image only stages the step fns
+    # its role can run (prefill: admission traces only; decode: the decode
+    # step only), so its prefetch finishes sooner than the unified image's.
+    # Unified is measured LAST so the process-global eager-op cache biases
+    # AGAINST the role images — the reported speedups are conservative.
+    import dataclasses
+
+    def role_warm_time(role: str) -> float:
+        reg = ExecutableRegistry()
+        img = dataclasses.replace(serve_img, role=role)
+        t0 = time.monotonic()
+        reg.prefetch(img).wait(timeout=600.0)
+        return time.monotonic() - t0
+
+    warm_prefill = role_warm_time("prefill")
+    warm_decode = role_warm_time("decode")
+    warm_unified = role_warm_time("unified")
+
     # sharded (mesh-bound) serve image: the registry keys compiles per
     # (image, mesh), so a prefetch staged for the pilot's held devices is
     # a cache hit at bind time even though the unsharded image compiled
@@ -144,6 +162,15 @@ def run() -> list[tuple[str, float, str]]:
     out.append(("serve_bucket_prewarm_speedup",
                 max(cold_buckets) / max(warm_buckets),
                 "x vs cold (first-request retrace spike removed)"))
+    out.append(("serve_warm_unified_s", warm_unified,
+                "prefetch+warm, every role's step fns staged"))
+    out.append(("serve_warm_prefill_s", warm_prefill,
+                "prefill-role image: admission traces only"))
+    out.append(("serve_warm_decode_s", warm_decode,
+                "decode-role image: the decode step only"))
+    out.append(("serve_role_warm_speedup",
+                warm_unified / max(warm_prefill, warm_decode),
+                "x vs unified (slower of the two role images)"))
     out.append(("serve_tp_bind_cold_s", tp_cold,
                 f"mesh-keyed serve image {tp_img.mesh_shape}, cold bind"))
     out.append(("serve_tp_bind_prefetched_s", tp_warm,

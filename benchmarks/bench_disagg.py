@@ -1,0 +1,181 @@
+"""Disaggregated prefill/decode serving benchmark: TTFT under a
+long-prompt + high-decode trace, with bitwise exactly-once gates.
+
+The monolithic (unified) fleet holds a slot for a request's WHOLE
+lifetime: one long prefill admission plus every decode step.  Under a
+trace whose requests decode for ~25 steps each, queued prompts wait for
+full-request slot turnover, so time-to-first-token grows with the decode
+tail.  The disaggregated fleet splits the same pilot budget into a
+prefill pool and a decode pool: prefill slots turn over per ADMISSION
+(the KV handoff exports and the slot frees immediately), so the prompt
+queue drains at prefill service rate regardless of decode length.  The
+full run's trace decodes ~85 steps per request to make that contrast
+real on the smoke-sized model.
+
+Scenarios (equal total pilots, equal aggregate slots):
+
+* ``unified`` — ``serve_fleet`` with 4 pilots x 2 slots.
+* ``disagg``  — ``serve_disagg`` with 2 prefill + 2 decode pilots x 2
+  slots, two-stage DisaggRouter, KV block handoff across pools.
+
+Both must complete 100% of the trace with token streams BITWISE equal to
+a single pre-warmed unified engine's (the handoff resume invariant), and
+both block pools must audit to zero leaked blocks.  The run RAISES on a
+drop, a mismatch, a leak, or the acceptance gate: the disaggregated
+fleet must BEAT the unified fleet on p99 TTFT.
+
+TTFT definitions match the architecture: unified TTFT is pool-level
+submit-to-first-token; disagg TTFT is submit-to-prefill-export (the
+first generated token exists at export and rides the handoff), and the
+decode-stage import latency is reported separately as ``resume_p99_s``.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_smoke_config
+from repro.core.images import ExecutableRegistry
+from repro.launch.serve import make_trace, serve_disagg, serve_fleet
+from repro.models.api import build_model
+from repro.serving.engine import ServeEngine
+
+ARCH = "smollm-360m"
+MAX_LEN = 64          # smoke: the standard mixed trace
+BENCH_MAX_LEN = 128   # full run: room for ~85-step decode tails
+SLOTS_PER_PILOT = 2
+LEASE_TTL = 0.5
+
+
+def _long_decode_trace(cfg, n_requests: int, seed: int = 0) -> list[dict]:
+    """Long prompts (bucket 32) + ~85-step decode budgets: the workload
+    shape where holding a slot through decode starves the prompt queue.
+    bucket + budget <= max_len keeps every stream full-length."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n_requests):
+        plen = int(rng.integers(20, 29))           # pow2 bucket -> 32
+        out.append({"rid": i,
+                    "prompt": rng.integers(
+                        0, cfg.vocab_size, size=plen).tolist(),
+                    "max_new_tokens": int(rng.choice([78, 84, 90])),
+                    "at_step": i})
+    return out
+
+
+def _baseline_tokens(cfg, trace, slots: int, max_len: int = MAX_LEN) -> dict:
+    """One pre-warmed unified engine, the whole trace: the bitwise
+    reference both fleet topologies must reproduce."""
+    params = build_model(cfg).init(jax.random.key(0))
+    eng = ServeEngine(cfg, params, slots=slots, max_len=max_len)
+    eng.warm_admission()
+    eng.warm_install()
+    eng.run_trace([{**e, "at_step": 0} for e in trace])
+    return {rid: list(np.asarray(r.tokens).tolist())
+            for rid, r in eng.done.items()}
+
+
+def _check(label: str, n_requests: int, out: dict, base_tokens: dict):
+    got = out["results"]
+    if len(got) != n_requests:
+        raise RuntimeError(
+            f"{label} completed {len(got)}/{n_requests} requests")
+    for rid, toks in got.items():
+        if list(toks) != list(base_tokens[rid]):
+            raise RuntimeError(
+                f"{label}: rid {rid} token stream diverged from the "
+                f"single-engine baseline (handoff resume not bitwise?)")
+    if out.get("leaked_blocks", 0) != 0:
+        raise RuntimeError(
+            f"{label}: {out['leaked_blocks']} KV blocks leaked "
+            f"(refcount imbalance across the handoff)")
+
+
+def run(n_requests: int = 24) -> list[tuple[str, float, str]]:
+    cfg = get_smoke_config(ARCH)
+    trace = _long_decode_trace(cfg, n_requests, seed=0)
+    base = _baseline_tokens(cfg, trace, 8, max_len=BENCH_MAX_LEN)
+
+    registry = ExecutableRegistry()       # shared: role images key apart
+    uni = serve_fleet(ARCH, n_requests, 4, slots=SLOTS_PER_PILOT,
+                      max_len=BENCH_MAX_LEN, lease_ttl=LEASE_TTL,
+                      registry=registry, trace=trace)
+    uni["results"] = dict(uni["results"])
+    _check("unified fleet", n_requests, uni, base)
+
+    dis = serve_disagg(ARCH, n_requests, prefill_pilots=2, decode_pilots=2,
+                       slots=SLOTS_PER_PILOT, max_len=BENCH_MAX_LEN,
+                       lease_ttl=LEASE_TTL, registry=registry, trace=trace)
+    _check("disagg fleet", n_requests, dis, base)
+    if dis["prefills_exported"] < n_requests:
+        raise RuntimeError(
+            f"disagg exported {dis['prefills_exported']}/{n_requests} "
+            f"prefills — requests bypassed the handoff path")
+
+    speedup = (uni["ttft_p99_s"] / dis["ttft_p99_s"]
+               if dis["ttft_p99_s"] else float("inf"))
+    if speedup <= 1.0:
+        raise RuntimeError(
+            f"disagg p99 TTFT {dis['ttft_p99_s']:.3f}s did not beat the "
+            f"unified fleet's {uni['ttft_p99_s']:.3f}s on the long-prompt "
+            f"high-decode trace (gate: ratio > 1)")
+
+    detail = (f"{ARCH}, 4 pilots x {SLOTS_PER_PILOT} slots each side, "
+              f"{n_requests} reqs, ~85 decode steps each")
+    return [
+        ("disagg_token_match", 1.0,
+         "both topologies bitwise == unified engine (raises otherwise)"),
+        ("disagg_unified_ttft_p99_s", uni["ttft_p99_s"],
+         f"monolithic fleet, {detail}"),
+        ("disagg_ttft_p99_s", dis["ttft_p99_s"],
+         "2 prefill + 2 decode pilots, TTFT = submit to prefill export"),
+        ("disagg_ttft_p99_speedup", speedup,
+         "unified p99 TTFT / disagg p99 TTFT (gate: > 1)"),
+        ("disagg_ttft_p50_s", dis["ttft_p50_s"], "disagg median"),
+        ("disagg_resume_p99_s", dis["resume_p99_s"],
+         "handoff import latency: submit to decode-stage resume"),
+        ("disagg_goodput_tok_per_s", dis["goodput_tok_per_s"], detail),
+        ("disagg_unified_goodput_tok_per_s", uni["goodput_tok_per_s"],
+         "monolithic fleet, same trace"),
+        ("disagg_prefills_exported", float(dis["prefills_exported"]),
+         f"of {n_requests} (every request crossed the handoff)"),
+        ("disagg_handoffs_imported", float(dis["handoffs_imported"]),
+         "decode-side imports (> exported only under replay)"),
+        ("disagg_leaked_blocks", float(dis["leaked_blocks"]),
+         "block-pool audit across both pools (gate: 0)"),
+    ]
+
+
+def run_smoke(n_requests: int = 10) -> list[tuple[str, float, str]]:
+    """CI smoke: the smallest disaggregated fleet (1 prefill + 1 decode
+    pilot) over a mixed trace — gates bitwise parity with the unified
+    engine, 100% completion through the handoff, and zero leaked
+    blocks."""
+    cfg = get_smoke_config(ARCH)
+    trace = make_trace(cfg.vocab_size, n_requests, max_len=MAX_LEN, seed=0)
+    base = _baseline_tokens(cfg, trace, 4)
+    dis = serve_disagg(ARCH, n_requests, prefill_pilots=1, decode_pilots=1,
+                       slots=SLOTS_PER_PILOT, max_len=MAX_LEN,
+                       lease_ttl=LEASE_TTL, registry=ExecutableRegistry(),
+                       trace=trace)
+    _check("disagg smoke", n_requests, dis, base)
+    if not dis["drained"]:
+        raise RuntimeError("disagg router did not drain")
+    if dis["prefills_exported"] < n_requests:
+        raise RuntimeError(
+            f"exported {dis['prefills_exported']}/{n_requests} prefills")
+    return [
+        ("disagg_smoke_completed", float(len(dis["results"])),
+         f"of {n_requests}, 1 prefill + 1 decode pilot"),
+        ("disagg_smoke_token_match", 1.0,
+         "streams bitwise == unified single-engine baseline"),
+        ("disagg_smoke_exported", float(dis["prefills_exported"]),
+         "prefill-side KV handoff exports"),
+        ("disagg_smoke_imported", float(dis["handoffs_imported"]),
+         "decode-side KV handoff imports"),
+        ("disagg_smoke_leaked_blocks", float(dis["leaked_blocks"]),
+         "block-pool audit (gate: 0)"),
+        ("disagg_smoke_ttft_p99_s", dis["ttft_p99_s"],
+         "submit to prefill export, incl. queue wait"),
+    ]

@@ -13,9 +13,10 @@ import sys
 import time
 
 from benchmarks import (bench_autoscale, bench_bind, bench_chaos,
-                        bench_fleet_serve, bench_lifecycle, bench_monitor,
-                        bench_scheduler, bench_serving, bench_spec_decode,
-                        bench_tp_serve, bench_train, roofline)
+                        bench_disagg, bench_fleet_serve, bench_lifecycle,
+                        bench_monitor, bench_scheduler, bench_serving,
+                        bench_spec_decode, bench_tp_serve, bench_train,
+                        roofline)
 
 SUITES = {
     "bind": bench_bind.run,            # paper Fig. 4: late-binding cost
@@ -26,6 +27,8 @@ SUITES = {
     "serving_paged": bench_serving.run_smoke,  # paged-vs-dense CI smoke
     "fleet_serve": bench_fleet_serve.run,      # requeue-on-pilot-failure
     "fleet_serve_smoke": bench_fleet_serve.run_smoke,  # CI failure smoke
+    "disagg": bench_disagg.run,        # split prefill/decode TTFT gate
+    "disagg_smoke": bench_disagg.run_smoke,    # handoff bitwise+leak CI
     "autoscale": bench_autoscale.run,  # bursty demand vs peak-sized fleet
     "autoscale_smoke": bench_autoscale.run_smoke,  # ramp + scale-to-zero CI
     "chaos": bench_chaos.run,          # gray-failure drill, all gates

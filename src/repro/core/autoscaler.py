@@ -105,13 +105,18 @@ class FleetAutoscaler:
     a fake demand stream and a fake clock, drive :meth:`tick` directly.
     """
 
-    def __init__(self, fleet, image=None, *, pool=None,
+    def __init__(self, fleet, image=None, *, pool=None, pool_label=None,
                  policy: AutoscalePolicy | None = None, spec: dict | None = None,
                  signals_fn: Callable[[], dict] | None = None,
                  clock: Callable[[], float] = time.monotonic, wheel=None):
         self.fleet = fleet
         self.image = image
         self.pool = pool
+        # restrict pool signals to ONE label's slice of pool_pressure()
+        # ("prefill" / "decode"): two autoscalers over a disaggregated
+        # fleet each size their own role's pool off its own TTFT / KV /
+        # blocked-admission telemetry instead of the blended fleet view
+        self.pool_label = pool_label
         self.policy = policy or AutoscalePolicy()
         self.spec = spec
         self._signals_fn = signals_fn
@@ -147,6 +152,14 @@ class FleetAutoscaler:
         }
         if self.pool is not None:
             pp = self.pool.pool_pressure()
+            if self.pool_label is not None:
+                # overlay the label's slice: TTFT, KV pressure, blocked
+                # counters, sick count and capacity stats become role-
+                # split; queued/leased stay pool-wide (the queue itself
+                # is not labeled — each disagg stage is its own pool)
+                pp = {**pp,
+                      **((pp.get("by_label") or {})
+                         .get(self.pool_label) or {})}
             sig.update({f"pool_{k}": v for k, v in pp.items()})
             sig["demand"] = pp["queued"] + pp["leased"]
             sig["kv_memory_utilization"] = pp["kv_memory_utilization"]

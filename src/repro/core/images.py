@@ -47,10 +47,16 @@ class PayloadImage:
     # mesh-shaped executable binds after — so it is part of ``key()`` and
     # the registry compiles/warms once per (image, mesh).
     mesh_shape: tuple | None = None
+    # serve mode only: the engine's serving ROLE in a disaggregated fleet
+    # ("prefill" | "decode" | "unified").  Role is a late-binding decision
+    # exactly like the arch — a pilot claims a slice first and the role
+    # shapes which step fns the image compiles — so it is part of ``key()``
+    # and a prefill-only image never pays the decode-step compile.
+    role: str = "unified"
 
     def key(self) -> tuple:
         return (self.arch, self.shape, self.mode, self.smoke, self.flags,
-                self.draft, self.mesh_shape)
+                self.draft, self.mesh_shape, self.role)
 
     def build_mesh(self):
         """The serve mesh this image requests, or None (single device)."""
@@ -294,6 +300,8 @@ class ExecutableRegistry:
                 ml = max_len or shape.seq_len
                 mesh = eng_mesh
                 shared = True
+                kw.setdefault("role", image.role)
+                role = kw["role"]
                 if mesh_shape is not None \
                         and tuple(mesh_shape) != image.mesh_shape:
                     # startup-spec override of the image's mesh: correct
@@ -302,7 +310,9 @@ class ExecutableRegistry:
                     from repro.runtime.mesh import serve_mesh
                     mesh = serve_mesh(tuple(mesh_shape))
                     shared = False
-                if image.draft:
+                if image.draft and role == "unified":
+                    # non-unified roles force spec off (draft KV does not
+                    # ride the handoff) — don't stage draft fns they drop
                     kw.setdefault("spec", "draft")
                 if kw.get("spec") == "draft":
                     kw.setdefault("spec_k", 4)
@@ -320,7 +330,9 @@ class ExecutableRegistry:
                 return ServeEngine(cfg, params,
                                    slots=slots or shape.global_batch,
                                    max_len=ml, bundle=bundle,
-                                   step_fn=step_for(ml) if shared else None,
+                                   step_fn=(step_for(ml)
+                                            if shared and role != "prefill"
+                                            else None),
                                    prefill_fn=prefill_fn if shared else None,
                                    chunk_fn=chunk_fn if shared else None,
                                    mesh=mesh, **kw)
@@ -338,7 +350,11 @@ class ExecutableRegistry:
                 # trade this prewarm for a first-tick compile.
                 params = bundle.init(jax.random.key(0))
                 eng = fn(params, prefill="chunked")
-                eng.warm_admission()   # buckets + chunk shapes (+ draft)
+                eng.warm_admission()   # buckets + chunk shapes (+ draft);
+                #                        no-op for a decode-role engine
+                if eng.role == "prefill":
+                    return             # exports at admission — the decode
+                #                        step never runs on this image
                 if eng.spec == "draft":
                     # stage the draft-chain and k-position verify compiles
                     # (the decode loop a speculative engine actually runs)

@@ -136,7 +136,7 @@ def _serve_loop(exe, key, n_steps, entry, proctable, telemetry, spec) -> int:
     kv_kw = {k: spec[k] for k in ("kv", "prefill", "prefill_chunk",
                                   "num_blocks", "block_size",
                                   "prefix_sharing", "spec", "spec_k",
-                                  "mesh_shape")
+                                  "mesh_shape", "role")
              if spec.get(k) is not None}
     eng = exe.fn(params, slots=spec.get("slots"),
                  max_len=spec.get("max_len"), **kv_kw)
@@ -176,7 +176,8 @@ _SERVE_STAT_KEYS = (
     "spec", "spec_fallback_reason", "acceptance_rate", "tokens_per_step",
     "draft_overhead_s",
     "mesh_shape", "mesh_devices", "slots",
-    "kv_pool_bytes", "kv_pool_bytes_per_device")
+    "kv_pool_bytes", "kv_pool_bytes_per_device",
+    "role", "prefills_exported", "handoffs_imported")
 
 
 def _fleet_serve_loop(eng, spec, n_steps, entry, proctable, telemetry) -> int:
@@ -222,7 +223,10 @@ def _fleet_serve_loop(eng, spec, n_steps, entry, proctable, telemetry) -> int:
     # after the first on the same image.
     eng.warm_admission()
     eng.warm_install()
-    pool.announce(server_id)
+    # labels carry the server's pool role ({"pool": "prefill"|"decode"}) so
+    # pool_pressure() can report per-label telemetry instead of blending
+    # prefill TTFT with decode TPOT across a mixed fleet
+    pool.announce(server_id, labels=labels)
     inflight: dict[int, Request] = {}
     fetched = completed_here = released = 0
     decoded = tick = 0
@@ -268,7 +272,8 @@ def _fleet_serve_loop(eng, spec, n_steps, entry, proctable, telemetry) -> int:
                     rid=int(e["rid"]),
                     prompt=np.asarray(e["prompt"], np.int32),
                     max_new_tokens=int(e.get("max_new_tokens", 16)),
-                    submitted=float(e.get("submitted_s", time.monotonic())))
+                    submitted=float(e.get("submitted_s", time.monotonic())),
+                    handoff=e.get("handoff"))
                 if req.rid in inflight:
                     # the pool re-leased a rid this server still holds
                     # locally: its lease expired mid-partition and looped
@@ -309,8 +314,12 @@ def _fleet_serve_loop(eng, spec, n_steps, entry, proctable, telemetry) -> int:
             continue
         for rid in [r for r in inflight if r in eng.done]:
             req = inflight.pop(rid)
+            # a prefill-role engine attaches the exported KV handoff; the
+            # pool's on_complete hook (DisaggRouter) forwards it into the
+            # decode stage.  Unified engines complete with handoff=None.
             if pool.complete(server_id, rid, req.tokens,
-                             first_token_s=req.first_token_s):
+                             first_token_s=req.first_token_s,
+                             handoff=req.handoff):
                 completed_here += 1
         if inflight:
             lost = pool.renew(server_id, {rid: len(r.tokens)

@@ -169,6 +169,86 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
 
 # --------------------------------------------------------------------------
+# serve-mesh accounting: per-SHARD memory / FLOPs for a mesh-bound serve
+# image, without building the mesh (pure shape math + the sharding rules'
+# divisor mirrors) — what the dry run previously got wrong by quoting
+# whole-pool numbers for a sharded engine.
+# --------------------------------------------------------------------------
+
+
+def run_serve_cell(arch: str, *, mesh_shape: tuple = (1, 1),
+                   slots: int = 4, max_len: int | None = None,
+                   kv: str = "paged", num_blocks: int | None = None,
+                   block_size: int = 16, smoke: bool = False) -> dict:
+    """Roofline accounting for ONE serve engine on a ``(data, model)``
+    mesh.  Everything is ``jax.eval_shape`` + the pure shard-factor
+    mirrors of the serve sharding rules (`serve_param_shard_factor` /
+    `serve_state_shard_factor`), so this runs in milliseconds on any
+    host: per-device bytes divide each leaf by exactly the factor the
+    real `serve_*_shardings` would apply (divisibility-gated, dtype
+    aware), instead of pretending the whole pool lives on every chip."""
+    from repro.configs.base import get_smoke_config
+    from repro.models.api import build_model, init_decode_state
+
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    msz = int(mesh_shape[1])
+    n_dev = int(mesh_shape[0]) * msz
+    ml = max_len or 1024
+    bundle = build_model(cfg)
+    params = jax.eval_shape(bundle.init, jax.random.key(0))
+    state = jax.eval_shape(
+        lambda: init_decode_state(cfg, slots, ml, kv=kv,
+                                  num_blocks=num_blocks,
+                                  block_size=block_size))
+
+    def _account(tree, factor_fn):
+        total = [0]
+        per_dev = [0]
+        def one(path, leaf):
+            b = int(leaf.size) * leaf.dtype.itemsize
+            total[0] += b
+            per_dev[0] += b // factor_fn(path, leaf.shape, msz)
+        jax.tree_util.tree_map_with_path(one, tree)
+        return total[0], per_dev[0]
+
+    p_total, p_dev = _account(params, shd.serve_param_shard_factor)
+    s_total, s_dev = _account(state, shd.serve_state_shard_factor)
+    kv_leaves = {"kp", "vp", "ckvp", "kropep", "k", "v", "ckv", "krope"}
+    kv_total = [0]
+    kv_dev = [0]
+    def kv_one(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else ""
+        if str(name) not in kv_leaves:
+            return
+        b = int(leaf.size) * leaf.dtype.itemsize
+        kv_total[0] += b
+        kv_dev[0] += b // shd.serve_state_shard_factor(path, leaf.shape, msz)
+    jax.tree_util.tree_map_with_path(kv_one, state)
+
+    # decode FLOPs: one token per slot per step.  The column-parallel
+    # shards split the matmul work over the model axis; the data axis
+    # replicates the engine's batch (one engine spans the whole mesh), so
+    # per-device work divides by the MODEL size only.
+    flops_global = 2.0 * cfg.active_param_count() * slots
+    flops_dev = flops_global / msz
+    mem_dev = p_dev + s_dev
+    return {
+        "arch": arch, "mode": "serve", "mesh_shape": list(mesh_shape),
+        "mesh_devices": n_dev, "slots": slots, "max_len": ml, "kv": kv,
+        "params_bytes": p_total, "params_bytes_per_device": p_dev,
+        "state_bytes": s_total, "state_bytes_per_device": s_dev,
+        "kv_pool_bytes": kv_total[0],
+        "kv_pool_bytes_per_device": kv_dev[0],
+        "bytes_per_device": mem_dev,
+        "decode_flops": flops_global,
+        "decode_flops_per_device": flops_dev,
+        "decode_compute_s": flops_dev / hw.PEAK_FLOPS,
+        "decode_memory_s": mem_dev / hw.HBM_BW,
+        "fits_hbm_per_device": bool(mem_dev < hw.HBM_BYTES),
+    }
+
+
+# --------------------------------------------------------------------------
 
 
 def all_cells() -> list[tuple[str, str]]:
@@ -231,7 +311,25 @@ def main():
     ap.add_argument("--flags", default="",
                     help='comma list key=value ArchConfig overrides, e.g. '
                          '"remat=dots,attn_impl=causal_blocked"')
+    ap.add_argument("--serve-mesh", default=None,
+                    help="per-shard serve accounting on a 'DxM' "
+                         "(data, model) mesh — pure shape math, no "
+                         "compile; e.g. '1x2'")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="serve-mesh mode: engine slots")
+    ap.add_argument("--serve-max-len", type=int, default=None,
+                    help="serve-mesh mode: engine KV length")
+    ap.add_argument("--smoke", action="store_true",
+                    help="serve-mesh mode: smoke-sized config")
     args = ap.parse_args()
+
+    if args.serve_mesh:
+        d, m = args.serve_mesh.lower().split("x")
+        rec = run_serve_cell(args.arch, mesh_shape=(int(d), int(m)),
+                             slots=args.slots, max_len=args.serve_max_len,
+                             smoke=args.smoke)
+        print(json.dumps(rec, indent=1))
+        return
 
     if args.all:
         fails = run_all(args.multi_pod, args.skip_existing)

@@ -133,7 +133,8 @@ def serve_fleet(arch: str, n_requests: int, n_pilots: int, *,
                 fail_count: int = 1, lease_ttl: float = 0.5,
                 registry=None, seed: int = 0, draft: str | None = None,
                 spec_k: int = 4, robustness=None, chaos_plan=None,
-                poison: int = 0, mesh_shape=None) -> dict:
+                poison: int = 0, mesh_shape=None,
+                trace: list[dict] | None = None) -> dict:
     """The fleet serve demo/driver: N pilots lease requests from one pool.
 
     ``fail_at`` hard-kills ``fail_count`` lease-holding pilots (one at
@@ -160,8 +161,11 @@ def serve_fleet(arch: str, n_requests: int, n_pilots: int, *,
     cfg = get_smoke_config(arch)
     sim = ClusterSim(registry=registry)
     pool = FleetDispatcher(lease_ttl=lease_ttl, policy=robustness)
-    trace = make_trace(cfg.vocab_size, n_requests, max_len=max_len,
-                       seed=seed)
+    if trace is None:
+        trace = make_trace(cfg.vocab_size, n_requests, max_len=max_len,
+                           seed=seed)
+    else:
+        trace = list(trace)
     poison_rids = list(range(n_requests, n_requests + poison))
     for rid in poison_rids:
         trace.append({"rid": rid, "prompt": [1, 2, 3, 4],
@@ -261,6 +265,214 @@ def serve_fleet(arch: str, n_requests: int, n_pilots: int, *,
         "chaos": ctl.stats() if ctl is not None else None,
         **stats,
     }
+
+
+def serve_disagg(arch: str, n_requests: int, *, prefill_pilots: int = 2,
+                 decode_pilots: int = 2, slots: int = 2, max_len: int = 64,
+                 fail_prefill_at: int | None = None,
+                 fail_decode_at: int | None = None, lease_ttl: float = 0.5,
+                 registry=None, seed: int = 0,
+                 trace: list[dict] | None = None) -> dict:
+    """DISAGGREGATED fleet serve: prompts lease into a prefill pool whose
+    engines export KV block handoffs; completed prefills become decode-pool
+    leases (the :class:`~repro.serving.dispatch.DisaggRouter` forward) and
+    a separate decode fleet resumes each stream from its handoff.
+
+    ``fail_prefill_at`` / ``fail_decode_at`` hard-kill a lease-holding
+    pilot of the respective stage after K settled requests in that stage —
+    a dead prefill pilot's prompts replay from the PROMPT on survivors; a
+    dead decode pilot's streams replay from the HANDOFF (the prompt is
+    never re-prefilled).  Params come from the image seed on every server,
+    so either replay reproduces the lost tokens bitwise.
+    """
+    from repro.serving.dispatch import DisaggRouter
+
+    cfg = get_smoke_config(arch)
+    sim = ClusterSim(registry=registry)
+    router = DisaggRouter(lease_ttl=lease_ttl)
+    if trace is None:
+        trace = make_trace(cfg.vocab_size, n_requests, max_len=max_len,
+                           seed=seed)
+    pf_fleet = sim.spawn_fleet(prefill_pilots,
+                               PilotConfig(max_payloads=2, idle_grace=0.3))
+    dc_fleet = sim.spawn_fleet(decode_pilots,
+                               PilotConfig(max_payloads=2, idle_grace=0.3))
+    # role is part of the image key: the prefill image never compiles the
+    # decode step; the decode image never compiles the admission prefills
+    pf_img = PayloadImage(arch=arch, shape="smoke", mode="serve",
+                          role="prefill")
+    dc_img = PayloadImage(arch=arch, shape="smoke", mode="serve",
+                          role="decode")
+    pf_spec = {"slots": slots, "max_len": max_len,
+               "server_labels": {"pool": "prefill"}}
+    dc_spec = {"slots": slots, "max_len": max_len,
+               "server_labels": {"pool": "decode"}}
+    pf_tids = pf_fleet.submit_servers(pf_img, router.prefill.name,
+                                      n=prefill_pilots, spec=pf_spec)
+    dc_tids = dc_fleet.submit_servers(dc_img, router.decode.name,
+                                      n=decode_pilots, spec=dc_spec)
+    for pool, n in ((router.prefill, prefill_pilots),
+                    (router.decode, decode_pilots)):
+        if not pool.wait_servers(n, timeout=300.0):
+            router.close()
+            for f in (pf_fleet, dc_fleet):
+                f.drain_all()
+                f.join_all(30.0)
+            raise RuntimeError(
+                f"only {len(pool.servers)}/{n} {pool.name} servers came "
+                f"up within 300s")
+    t0 = time.monotonic()
+    router.submit_trace(trace)
+    router.seal()
+    failed = {"prefill": [], "decode": []}
+    try:
+        for stage, pool, fleet, at in (
+                ("prefill", router.prefill, pf_fleet, fail_prefill_at),
+                ("decode", router.decode, dc_fleet, fail_decode_at)):
+            if at is None:
+                continue
+            if not pool.wait_completed(at, timeout=300.0):
+                continue
+            victim = _pick_victim(fleet, pool)
+            if victim is not None:
+                failed[stage].append(victim.pilot_id)
+                sim.fail_node(victim.slice.slice_id)
+        ok = router.wait_all(timeout=600.0)
+    finally:
+        router.close()
+        for f in (pf_fleet, dc_fleet):
+            f.drain_all()
+            f.join_all(30.0)
+    wall = time.monotonic() - t0
+    pf_fleet.reap()
+    dc_fleet.reap()
+    # end-to-end TTFT: the FIRST generated token exists at prefill export
+    # (it rides the handoff), so the prefill-stage records — whose
+    # first_token_s is measured against the ORIGINAL submit time — are the
+    # honest time-to-first-token.  The decode-stage records measure the
+    # same zero but include the decode pool's import queue: that is the
+    # resume latency (time until the stream starts advancing again).
+    recs = router.decode.records()
+    ttfts = [r.first_token_s for r in router.prefill.records().values()
+             if r.first_token_s is not None]
+    resumes = [r.first_token_s for r in recs.values()
+               if r.first_token_s is not None]
+    pct = lambda v, q: float(np.percentile(v, q)) if v else None
+    goodput = sum(len(r.tokens) for r in recs.values()
+                  if r.tokens is not None) / wall if wall else 0.0
+    leaked = exported = imported = 0
+    for tid in pf_tids + dc_tids:
+        r = sim.repo.result(tid)
+        sv = r.telemetry.get("serve", {}) if r else {}
+        if sv.get("fleet"):
+            leaked += sv["fleet"].get("leaked_blocks", 0)
+        exported += sv.get("prefills_exported", 0) or 0
+        imported += sv.get("handoffs_imported", 0) or 0
+    return {
+        "drained": ok,
+        "wall_s": wall,
+        "goodput_tok_per_s": goodput,
+        "ttft_p50_s": pct(ttfts, 50),
+        "ttft_p99_s": pct(ttfts, 99),
+        "resume_p50_s": pct(resumes, 50),
+        "resume_p99_s": pct(resumes, 99),
+        "failed_pilots": failed,
+        "pilot_seconds": (pf_fleet.pilot_seconds()
+                          + dc_fleet.pilot_seconds()),
+        "results": router.results(),
+        "leaked_blocks": leaked,
+        "prefills_exported": exported,
+        "handoffs_imported": imported,
+        "pool_pressure": router.pool_pressure(),
+        "stats": router.stats(),
+    }
+
+
+def serve_disagg_schedule(arch: str, schedule: list[tuple[float, dict]], *,
+                          slots: int = 2, max_len: int = 64,
+                          prefill_policy=None, decode_policy=None,
+                          initial_pilots: int = 1, lease_ttl: float = 0.5,
+                          idle_grace: float = 0.5, registry=None) -> dict:
+    """Disaggregated fleets under TWO independent autoscalers, one per
+    role pool, each reading its own label's ``pool_pressure()`` slice —
+    the demand-shaped heterogeneous-pool loop: a prefill-bound trace grows
+    only the prefill fleet, a decode-bound trace only the decode fleet."""
+    from repro.core.autoscaler import FleetAutoscaler
+    from repro.serving.dispatch import DisaggRouter
+
+    sim = ClusterSim(registry=registry)
+    router = DisaggRouter(lease_ttl=lease_ttl)
+    pf_img = PayloadImage(arch=arch, shape="smoke", mode="serve",
+                          role="prefill")
+    dc_img = PayloadImage(arch=arch, shape="smoke", mode="serve",
+                          role="decode")
+    pf_spec = {"slots": slots, "max_len": max_len,
+               "server_labels": {"pool": "prefill"}}
+    dc_spec = {"slots": slots, "max_len": max_len,
+               "server_labels": {"pool": "decode"}}
+    pf_fleet = sim.spawn_fleet(initial_pilots,
+                               PilotConfig(max_payloads=4,
+                                           idle_grace=idle_grace))
+    dc_fleet = sim.spawn_fleet(initial_pilots,
+                               PilotConfig(max_payloads=4,
+                                           idle_grace=idle_grace))
+    scalers = []
+    out: dict = {}
+    try:
+        if initial_pilots:
+            pf_fleet.submit_servers(pf_img, router.prefill.name,
+                                    n=initial_pilots, spec=pf_spec)
+            dc_fleet.submit_servers(dc_img, router.decode.name,
+                                    n=initial_pilots, spec=dc_spec)
+            for pool in (router.prefill, router.decode):
+                if not pool.wait_servers(initial_pilots, timeout=300.0):
+                    raise RuntimeError(f"{pool.name} servers not warm "
+                                       f"within 300s")
+        for fleet, img, pool, label, policy, spec in (
+                (pf_fleet, pf_img, router.prefill, "prefill",
+                 prefill_policy, pf_spec),
+                (dc_fleet, dc_img, router.decode, "decode",
+                 decode_policy, dc_spec)):
+            if policy is None:
+                continue
+            sc = FleetAutoscaler(fleet, img, pool=pool, pool_label=label,
+                                 policy=policy, spec=spec)
+            sc.start()
+            scalers.append((label, sc))
+        t0 = time.monotonic()
+        for dt, entry in schedule:
+            lag = dt - (time.monotonic() - t0)
+            if lag > 0:
+                time.sleep(lag)
+            router.submit(entry)
+        router.seal()
+        out["drained"] = router.wait_all(timeout=600.0)
+        out["wall_s"] = time.monotonic() - t0
+    finally:
+        for _, sc in scalers:
+            sc.stop()
+        router.close()
+        for f in (pf_fleet, dc_fleet):
+            f.drain_all()
+            f.join_all(30.0)
+            f.reap()
+    recs = router.decode.records()
+    ttfts = [r.first_token_s for r in recs.values()
+             if r.first_token_s is not None]
+    pct = lambda v, q: float(np.percentile(v, q)) if v else None
+    out.update({
+        "ttft_p50_s": pct(ttfts, 50),
+        "ttft_p99_s": pct(ttfts, 99),
+        "pilot_seconds": {"prefill": pf_fleet.pilot_seconds(),
+                          "decode": dc_fleet.pilot_seconds()},
+        "peak_pilots": {"prefill": None, "decode": None},
+        "results": router.results(),
+        "stats": router.stats(),
+    })
+    for label, sc in scalers:
+        out.setdefault("autoscale", {})[label] = sc.stats()
+        out["peak_pilots"][label] = sc.peak_live
+    return out
 
 
 def make_bursty_schedule(trace: list[dict], *, bursts: int, burst_s: float,
@@ -446,6 +658,20 @@ def main():
     ap.add_argument("--quarantine-after", type=int, default=None,
                     help="fleet serve: quarantine a request once this many "
                          "distinct pilots died holding it (0 disables)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated serve: a prefill fleet exports KV "
+                         "handoffs that a decode fleet resumes (pool sizes "
+                         "via --prefill-pilots/--decode-pilots)")
+    ap.add_argument("--prefill-pilots", type=int, default=2,
+                    help="disagg: prefill pool size")
+    ap.add_argument("--decode-pilots", type=int, default=2,
+                    help="disagg: decode pool size")
+    ap.add_argument("--fail-prefill-at", type=int, default=None,
+                    help="disagg: kill a prefill pilot after K settled "
+                         "prefills (replay-from-prompt)")
+    ap.add_argument("--fail-decode-at", type=int, default=None,
+                    help="disagg: kill a decode pilot after K finished "
+                         "streams (replay-from-handoff)")
     ap.add_argument("--autoscale", action="store_true",
                     help="fleet serve on a bursty square-wave trace with "
                          "the demand-driven autoscaler (--pilots caps the "
@@ -457,6 +683,18 @@ def main():
         from repro.runtime.mesh import parse_mesh_shape
         mesh_shape = parse_mesh_shape(args.mesh)
 
+    if args.disagg:
+        out = serve_disagg(args.arch, args.requests,
+                           prefill_pilots=args.prefill_pilots,
+                           decode_pilots=args.decode_pilots,
+                           slots=args.slots or 2,
+                           max_len=args.max_len or 64,
+                           fail_prefill_at=args.fail_prefill_at,
+                           fail_decode_at=args.fail_decode_at)
+        out.pop("results")
+        out.pop("pool_pressure", None)
+        print(json.dumps(out, indent=1))
+        return
     if args.autoscale:
         from repro.core.autoscaler import AutoscalePolicy
         cfg = get_smoke_config(args.arch)

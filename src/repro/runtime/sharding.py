@@ -334,6 +334,44 @@ def serve_param_shardings(tree, mesh: Mesh):
     return jax.tree_util.tree_map_with_path(one, tree)
 
 
+def serve_param_shard_factor(path, shape, model_axis_size: int) -> int:
+    """How many ways :func:`serve_param_shardings` would split this leaf
+    on a mesh with ``model_axis_size`` model shards — as a PURE divisor,
+    no Mesh or devices required.  Mirrors the sharding rules exactly
+    (column-parallel leaves only, divisibility-gated, else replicated),
+    so a dry run can account per-device serve memory without building
+    the mesh it is sizing for."""
+    name = _leaf_name(path)
+    ndim = len(shape)
+    if model_axis_size <= 1 or name not in _SERVE_TP_SAFE or ndim == 0:
+        return 1
+    tp_dim, _ = _PARAM_RULES[name]
+    if tp_dim is None or -tp_dim > ndim:
+        return 1
+    return (model_axis_size
+            if shape[tp_dim % ndim] % model_axis_size == 0 else 1)
+
+
+def serve_state_shard_factor(path, shape, model_axis_size: int) -> int:
+    """Pure-divisor mirror of :func:`serve_state_shardings`: KV pools and
+    dense caches split on the head/latent dim over the model axis when it
+    divides, everything else (ssd/conv/token/pos/block_tables) replicates."""
+    name = _leaf_name(path)
+    ndim = len(shape)
+    msz = model_axis_size
+    if msz <= 1 or ndim < 2:
+        return 1
+    if name in ("kp", "vp"):
+        return msz if shape[-2] % msz == 0 else 1
+    if name in ("ckvp", "kropep"):
+        return msz if shape[-1] % msz == 0 else 1
+    if name in ("k", "v"):
+        return msz if (ndim >= 3 and shape[-2] % msz == 0) else 1
+    if name in ("ckv", "krope"):
+        return msz if shape[-1] % msz == 0 else 1
+    return 1
+
+
 def replicated(tree, mesh: Mesh):
     return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
 

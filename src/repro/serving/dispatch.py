@@ -204,9 +204,18 @@ class FleetDispatcher:
         # go stale after telemetry_ttl (a dead server stops reporting)
         self._telemetry: dict[str, tuple[float, dict]] = {}
         self.telemetry_ttl = max(5.0 * lease_ttl, 2.0)
+        # server_id -> announce-time labels ({"pool": "prefill"}, ...):
+        # pool_pressure groups telemetry by the "pool" label so a mixed
+        # fleet's prefill TTFT never blends into decode TPOT
+        self._server_labels: dict[str, dict] = {}
+        # completion hook (rec, handoff) -> None, called OUTSIDE the pool
+        # lock on every accepted completion — the DisaggRouter's forward
+        # edge from the prefill pool into the decode pool
+        self.on_complete = None
         # bounded recent-TTFT window so pool_pressure (called every
         # autoscaler tick) never sorts the pool's full request history
         self._recent_ttfts: deque[float] = deque(maxlen=2048)
+        self._recent_ttfts_by_label: dict[str, deque] = {}
         # fetch->completion service times: the hedge budget's percentile base
         self._recent_service: deque[float] = deque(maxlen=512)
         self.sealed = threading.Event()   # no further submissions coming
@@ -234,8 +243,12 @@ class FleetDispatcher:
         # which must always find the record.  The tid->rid mapping may lag
         # by microseconds; fetch falls back to the rid the task itself
         # carries in its payload_spec.
+        # a two-stage (disagg) submit carries the ORIGINAL submit stamp so
+        # the decode pool's TTFT window measures end-to-end, not since the
+        # router's forward
         rec = RequestRecord(rid=rid, task_id=-1, entry=dict(entry),
-                            submitted_s=time.monotonic())
+                            submitted_s=float(entry.get(
+                                "submitted_s", time.monotonic())))
         with self._lock:
             if rid in self._records:
                 raise ValueError(f"duplicate request id {rid}")
@@ -259,13 +272,21 @@ class FleetDispatcher:
 
     # ---- the server side (called from serve payloads) ---------------------
 
-    def announce(self, server_id: str):
+    def announce(self, server_id: str, labels: dict | None = None):
         """A server reports it is up and WARM (engine compiled, ready to
-        lease).  Drivers that want cold-start excluded from TTFT wait for
-        the fleet with :meth:`wait_servers` before submitting traffic."""
+        lease).  ``labels`` (e.g. ``{"pool": "prefill"}``) groups this
+        server's telemetry in :meth:`pool_pressure`'s ``by_label`` split.
+        Drivers that want cold-start excluded from TTFT wait for the
+        fleet with :meth:`wait_servers` before submitting traffic."""
         with self._done_cond:
             self.servers.add(server_id)
+            if labels:
+                self._server_labels[server_id] = dict(labels)
             self._done_cond.notify_all()
+
+    def _label_of(self, server_id: str) -> str:
+        return str(self._server_labels.get(server_id, {}).get(
+            "pool", "default"))
 
     def wait_servers(self, n: int, timeout: float | None = None) -> bool:
         return self._wait_for(lambda: len(self.servers) >= n, timeout)
@@ -463,14 +484,21 @@ class FleetDispatcher:
         return lost
 
     def complete(self, server_id: str, rid: int, tokens: list,
-                 *, first_token_s: float | None = None) -> bool:
+                 *, first_token_s: float | None = None,
+                 handoff=None) -> bool:
         """Report a finished request.  First completion wins — routed
         through ``TaskRepo.complete``'s result dedup, so a replayed or
         HEDGED copy racing the original produces exactly one accepted
         result.  On a win, every other outstanding dispatch of the rid is
         tombstoned in the repo: leased losers fail their next renew (the
         server cancels the slot), queued copies are lazily purged by the
-        match index."""
+        match index.
+
+        ``handoff`` (a :class:`~repro.serving.blockpool.KVHandoff`) rides
+        a PREFILL-role completion; it is passed to ``on_complete`` — the
+        DisaggRouter's forward edge — only for the accepted winner, so
+        the decode stage is submitted exactly once per rid no matter how
+        many prefill replays raced."""
         with self._lock:
             rec = self._records.get(rid)
             held = self._leased.get((server_id, rid))
@@ -495,6 +523,9 @@ class FleetDispatcher:
                 rec.first_token_s = first_token_s
                 if first_token_s is not None:
                     self._recent_ttfts.append(first_token_s)
+                    lab = self._label_of(server_id)
+                    self._recent_ttfts_by_label.setdefault(
+                        lab, deque(maxlen=2048)).append(first_token_s)
                 now = time.monotonic()
                 rec.completed_s = now - rec.submitted_s
                 if held is not None:
@@ -506,6 +537,13 @@ class FleetDispatcher:
                 for lt in {rec.task_id, *rec.hedge_tids} - {tid, -1}:
                     if lt not in loser_tids:
                         loser_tids.append(lt)
+                if self.on_complete is not None:
+                    # fire BEFORE this request counts as settled: a driver
+                    # blocked in wait_all must never observe the pool
+                    # drained while a forward (the DisaggRouter's decode-
+                    # stage submit) is still in flight.  Lock ordering is
+                    # acyclic — the hook only calls INTO the next pool.
+                    self.on_complete(rec, handoff)
                 self._n_settled += 1
                 self._done_cond.notify_all()
             else:
@@ -792,7 +830,11 @@ class FleetDispatcher:
             sick = set(self._sick)
             tele = {s: d for s, (_, d) in self._telemetry.items()}
             n_servers = len(self.servers)
+            all_servers = set(self.servers)
+            server_labels = dict(self._server_labels)
             ttfts = sorted(self._recent_ttfts)
+            ttfts_by_label = {lab: sorted(d) for lab, d
+                              in self._recent_ttfts_by_label.items()}
         n = len(ttfts)
         blocked = {s: int(d.get("blocked_admissions", 0))
                    for s, d in tele.items()}
@@ -811,7 +853,53 @@ class FleetDispatcher:
         # multiply into the autoscaler's demand-proportional target
         srv_slots = [float(d["slots"]) for d in healthy.values()
                      if "slots" in d]
+
+        # per-label split: a mixed prefill/decode fleet must not blend
+        # prefill TTFT with decode TPOT (or one role's KV pressure with
+        # the other's) — the autoscaler for each role reads its own slice
+        def lab_of(s):
+            return str(server_labels.get(s, {}).get("pool", "default"))
+
+        by_label: dict[str, dict] = {}
+        for lab in sorted({lab_of(s) for s in all_servers}
+                          | set(ttfts_by_label)):
+            srv = [s for s in all_servers if lab_of(s) == lab]
+            h = {s: d for s, d in healthy.items() if lab_of(s) == lab}
+            lt = ttfts_by_label.get(lab, [])
+            m = len(lt)
+            acc_l = [float(d["acceptance_rate"]) for d in h.values()
+                     if "acceptance_rate" in d]
+            tps_l = [float(d["tokens_per_step"]) for d in h.values()
+                     if "tokens_per_step" in d]
+            sl_l = [float(d["slots"]) for d in h.values() if "slots" in d]
+            by_label[lab] = {
+                "servers": len(srv),
+                "sick_servers": sum(1 for s in srv if s in sick),
+                "ttft_p50_s": lt[m // 2] if m else None,
+                "ttft_p99_s": lt[min(m - 1, (99 * m) // 100)] if m else None,
+                "kv_memory_utilization": max(
+                    (d.get("kv_memory_utilization", 0.0)
+                     for d in h.values()), default=0.0),
+                "blocked_admissions": sum(
+                    int(d.get("blocked_admissions", 0))
+                    for s, d in tele.items() if lab_of(s) == lab),
+                # per-server counters restricted to this label so a role's
+                # autoscaler can diff per server without seeing the other
+                # role's churn
+                "blocked_by_server": {
+                    s: int(d.get("blocked_admissions", 0))
+                    for s, d in tele.items() if lab_of(s) == lab},
+                "acceptance_rate": (sum(acc_l) / len(acc_l)
+                                    if acc_l else 0.0),
+                "tokens_per_step": sum(tps_l) / len(tps_l) if tps_l else 0.0,
+                "slots_per_server": sum(sl_l) / len(sl_l) if sl_l else 0.0,
+                "prefills_exported": sum(
+                    int(d.get("prefills_exported", 0)) for d in h.values()),
+                "handoffs_imported": sum(
+                    int(d.get("handoffs_imported", 0)) for d in h.values()),
+            }
         return {
+            "by_label": by_label,
             "queued": rs["queued"],
             "leased": rs["leased"],
             "pending": pending,
@@ -882,3 +970,127 @@ class FleetDispatcher:
         with _POOLS_LOCK:
             _POOLS.pop(self.name, None)
         self.repo.kick()
+
+
+class DisaggRouter:
+    """Two-stage request router for disaggregated prefill/decode fleets.
+
+    One request flows through TWO pools, each an ordinary
+    :class:`FleetDispatcher` with its own leases, reaper, robustness
+    policy and telemetry:
+
+    1. ``submit`` queues the prompt into the **prefill** pool.  A
+       prefill-role server leases it, runs admission, and completes with
+       the one admission token plus a
+       :class:`~repro.serving.blockpool.KVHandoff`.
+    2. The prefill pool's accepted completion fires ``on_complete``
+       (exactly once per rid, however many replays raced), and the
+       router resubmits into the **decode** pool — the entry carries the
+       handoff object by reference (pool entries never serialize — the
+       in-memory arena idiom) and the ORIGINAL ``submitted_s``, so
+       decode-pool TTFT remains end-to-end.
+    3. A decode-role server leases it, scatters the handoff into its own
+       pool, and streams the remaining tokens.
+
+    Failure semantics fall out of the per-stage lease machinery:
+
+    * a dead PREFILL pilot stops renewing -> the prefill repo requeues
+      the PROMPT; the survivor replays admission (deterministic) and its
+      accepted completion forwards the handoff once;
+    * a dead DECODE pilot stops renewing -> the decode repo requeues the
+      ENTRY — which still carries the handoff — so the survivor replays
+      from the HANDOFF, never re-prefilling the prompt.
+
+    ``results()`` returns the full streams (decode-stage results, plus
+    any prefill-only completion that never forwarded — e.g. quarantined
+    before the decode stage existed)."""
+
+    def __init__(self, *, name: str | None = None, lease_ttl: float = 1.0,
+                 max_attempts: int = 8,
+                 policy: RobustnessPolicy | None = None):
+        base = name or f"disagg-{uuid.uuid4().hex[:8]}"
+        self.name = base
+        self.prefill = FleetDispatcher(
+            name=f"{base}-prefill", lease_ttl=lease_ttl,
+            max_attempts=max_attempts, policy=policy)
+        self.decode = FleetDispatcher(
+            name=f"{base}-decode", lease_ttl=lease_ttl,
+            max_attempts=max_attempts, policy=policy)
+        self.prefill.on_complete = self._forward
+        self._fwd_lock = threading.Lock()
+        self._forwarded: set[int] = set()
+
+    # ---- stage 1 -> stage 2 ------------------------------------------------
+
+    def _forward(self, rec: RequestRecord, handoff):
+        """Forward an accepted prefill completion into the decode pool.
+        Runs outside the prefill pool's lock (its ``on_complete``
+        contract); `complete` already guarantees one accepted winner per
+        rid, and the `_forwarded` set makes the forward idempotent even
+        against a buggy double-callback."""
+        if handoff is None:
+            return                      # settled without a handoff: final
+        with self._fwd_lock:
+            if rec.rid in self._forwarded:
+                return
+            self._forwarded.add(rec.rid)
+        entry = dict(rec.entry)
+        entry.update(
+            rid=rec.rid,
+            handoff=handoff,
+            submitted_s=rec.submitted_s,       # end-to-end TTFT zero
+            prefill_first_token_s=rec.first_token_s,
+            prefill_server=rec.server)
+        self.decode.submit(entry)
+
+    # ---- driver side -------------------------------------------------------
+
+    def submit(self, entry: dict) -> int:
+        return self.prefill.submit(entry)
+
+    def submit_trace(self, trace: list[dict]) -> list[int]:
+        return [self.submit(e) for e in trace]
+
+    def seal(self):
+        """Seal the PREFILL stage only: the decode stage stays open for
+        forwards until every prefill settles (`wait_all` seals it)."""
+        self.prefill.seal()
+
+    def wait_all(self, timeout: float | None = None) -> bool:
+        """Prefill settles -> no more forwards are coming -> seal decode
+        -> decode settles."""
+        t0 = time.monotonic()
+        if not self.prefill.wait_all(timeout):
+            return False
+        self.decode.seal()
+        left = (None if timeout is None
+                else max(0.0, timeout - (time.monotonic() - t0)))
+        return self.decode.wait_all(left)
+
+    def finished(self) -> bool:
+        if not self.prefill.finished():
+            return False
+        self.decode.seal()
+        return self.decode.finished()
+
+    def results(self) -> dict[int, list]:
+        out = {rid: toks for rid, toks in self.prefill.results().items()
+               if rid not in self._forwarded}
+        out.update(self.decode.results())
+        return out
+
+    def records(self) -> dict[str, dict[int, RequestRecord]]:
+        return {"prefill": self.prefill.records(),
+                "decode": self.decode.records()}
+
+    def stats(self) -> dict:
+        return {"prefill": self.prefill.stats(),
+                "decode": self.decode.stats()}
+
+    def pool_pressure(self) -> dict:
+        return {"prefill": self.prefill.pool_pressure(),
+                "decode": self.decode.pool_pressure()}
+
+    def close(self):
+        self.prefill.close()
+        self.decode.close()

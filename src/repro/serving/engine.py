@@ -80,7 +80,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.api import build_model, init_decode_state
-from repro.serving.blockpool import BlockAllocator, PrefixCache
+from repro.serving.blockpool import BlockAllocator, KVHandoff, PrefixCache
 
 
 # --------------------------------------------------------------------------
@@ -131,6 +131,9 @@ class Request:
     tokens: list = dataclasses.field(default_factory=list)
     first_token_s: float | None = None
     done_s: float | None = None
+    # disaggregated serving: a prefill-role engine fills this on export;
+    # a decode-role engine resumes from it instead of a raw prompt
+    handoff: KVHandoff | None = None
 
 
 @dataclasses.dataclass
@@ -358,6 +361,24 @@ def spec_ineligible_reason(cfg, kv: str) -> str | None:
     return None
 
 
+def handoff_ineligible_reason(cfg, kv: str) -> str | None:
+    """Why an arch cannot serve in a disaggregated role (None == it can).
+    The KV handoff moves PAGED BLOCKS between pools, so every per-token
+    byte a decode step reads must live inside blocks — per-row state (SSM
+    scan rows, SWA rolling rings) has no block id to ship."""
+    if cfg.is_encdec:
+        return "enc-dec archs do not run the decoder-only serve path"
+    if cfg.is_attention_free or cfg.ssm is not None:
+        return ("SSM state rows are per-slot, not per-block; they cannot "
+                "ride a block-chain handoff")
+    if cfg.sliding_window is not None:
+        return ("SWA ring rows are per-slot, not per-block; they cannot "
+                "ride a block-chain handoff")
+    if kv != "paged":
+        return "the handoff ships paged blocks; kv='dense' has none"
+    return None
+
+
 class ServeEngine:
     """Continuous-batching engine over a paged KV cache.
 
@@ -385,10 +406,13 @@ class ServeEngine:
                  prefill_fn=None, chunk_fn=None,
                  spec: str = "off", spec_k: int = 4, draft_cfg=None,
                  draft_params=None, draft_bundle=None, draft_fn=None,
-                 verify_fn=None, draft_prefill_fn=None, mesh=None):
+                 verify_fn=None, draft_prefill_fn=None, mesh=None,
+                 role: str = "unified"):
         assert admission in ("continuous", "wave"), admission
         assert prefill in ("oneshot", "chunked"), prefill
         assert spec in ("off", "draft"), spec
+        assert role in ("unified", "prefill", "decode"), role
+        self.role = role
         # tensor-parallel serving: the whole engine state lives sharded on
         # `mesh` (params by the serve TP rules, KV pools on their head dim,
         # everything else replicated) and the jitted steps run SPMD.  A
@@ -407,6 +431,11 @@ class ServeEngine:
         assert kv in ("paged", "dense"), kv
         if kv == "paged" and not pages:
             kv = "dense"
+        if role != "unified":
+            reason = handoff_ineligible_reason(cfg, kv)
+            if reason is not None:
+                raise ValueError(
+                    f"role={role!r} needs the KV block handoff: {reason}")
         self.cfg = cfg
         if mesh is not None:
             from repro.runtime.sharding import serve_param_shardings
@@ -479,6 +508,8 @@ class ServeEngine:
         self.d2h_transfers = 0         # must equal `steps` (one per step)
         self.prefill_chunks = 0
         self.blocked_admissions = 0    # admissions deferred on pool pressure
+        self.prefills_exported = 0     # role="prefill": handoffs produced
+        self.handoffs_imported = 0     # role="decode": handoffs resumed
         self.prompt_tokens_total = 0
         self.prefix_hit_tokens = 0
         self._kv_util_sum = 0.0
@@ -490,16 +521,26 @@ class ServeEngine:
         self.draft_time_s = 0.0        # wall time inside the draft chain
 
         # one compiled decode step for the whole engine lifetime; engine
-        # state (decode state + budget + active) is donated every step
-        self._step_fn = step_fn or make_engine_step(self.bundle, max_len,
-                                                    mesh=mesh)
+        # state (decode state + budget + active) is donated every step.
+        # A prefill-role engine never decodes (its slots turn over at the
+        # handoff export) and a decode-role engine never prefills (its
+        # admissions scatter imported blocks), so each drops the other
+        # half's executables — the warm-time saving bench_bind measures.
+        self._step_fn = (None if role == "prefill"
+                         else step_fn or make_engine_step(self.bundle,
+                                                          max_len, mesh=mesh))
         # one jitted prefill wrapper; jax re-traces per prompt bucket shape
-        self._prefill = prefill_fn or jax.jit(
-            _traced_under_mesh(self.bundle.prefill, mesh))
-        self._chunk_fn = chunk_fn or (
-            jax.jit(_traced_under_mesh(self.bundle.prefill_chunk, mesh),
-                    donate_argnums=1)
-            if self.bundle.prefill_chunk is not None else None)
+        self._prefill = (None if role == "decode"
+                         else prefill_fn or jax.jit(
+                             _traced_under_mesh(self.bundle.prefill, mesh)))
+        self._chunk_fn = (
+            None if role == "decode"
+            else chunk_fn or (
+                jax.jit(_traced_under_mesh(self.bundle.prefill_chunk, mesh),
+                        donate_argnums=1)
+                if self.bundle.prefill_chunk is not None else None))
+        if role == "decode":
+            self.prefill_mode = "oneshot"    # no chunk path to interleave
 
         # ---- speculative decoding: draft-and-verify multi-token steps ----
         # the draft model is itself a late-binding decision: a serve image
@@ -508,6 +549,13 @@ class ServeEngine:
         self.spec = "off"
         self.spec_k = int(spec_k)
         self.spec_fallback_reason = None
+        if spec == "draft" and role != "unified":
+            # the draft's shadow pools do not ride the handoff, so a
+            # resumed request would draft over garbage KV; record the
+            # fallback instead of failing, like every other spec gate
+            self.spec_fallback_reason = (
+                f"role={role}: draft KV does not ride the block handoff")
+            spec = "off"
         if spec == "draft":
             reason = spec_ineligible_reason(cfg, self.kv)
             if reason is None and draft_cfg is not None:
@@ -582,9 +630,37 @@ class ServeEngine:
         if req.rid == -1:
             raise ValueError("request id -1 is reserved (the engine's "
                              "free-slot sentinel)")
+        if req.handoff is not None:
+            if self.role != "decode":
+                raise ValueError(
+                    f"role={self.role!r} engine cannot import a KV handoff "
+                    "(only role='decode' resumes from one)")
+            req.handoff.validate_against(self.kv_fingerprint())
+            plen = req.handoff.plen
+            if plen >= self.max_len:
+                raise ValueError(
+                    f"handoff bucket {plen} leaves no decode room inside "
+                    f"max_len {self.max_len}")
+            end_max = min(plen + req.max_new_tokens, self.max_len)
+            need = -(-end_max // self.block_size)
+            if need > self.allocator.capacity_blocks:
+                raise ValueError(
+                    f"handoff needs {need} KV blocks (bucket {plen} + "
+                    f"budget {req.max_new_tokens}) but the pool holds "
+                    f"{self.allocator.capacity_blocks}")
+            self.queue.append(req)
+            return
+        if self.role == "decode":
+            raise ValueError(
+                "role='decode' engine only accepts handoff requests; "
+                "route raw prompts to the prefill pool")
         plen = admit_length(len(req.prompt), self.max_len)
         if self.kv == "paged":
-            end_max = min(plen + req.max_new_tokens, self.max_len)
+            # a prefill-role engine maps only the prompt's blocks — its
+            # slots turn over at the export, so the decode budget's reach
+            # is the DECODE pool's problem
+            end_max = (plen if self.role == "prefill"
+                       else min(plen + req.max_new_tokens, self.max_len))
             need = -(-end_max // self.block_size)
             if need > self.allocator.capacity_blocks:
                 raise ValueError(
@@ -623,13 +699,16 @@ class ServeEngine:
         """Begin admission of one request into batch row `si` while the
         other slots' decode state stays untouched.  Returns False when the
         paged pool cannot hold the request yet."""
+        if req.handoff is not None:
+            return self._admit_handoff_into(si, req)
         plen = self._bucket(len(req.prompt))
         bs = self.block_size
         padded = np.zeros((plen,), np.int32)
         padded[-len(req.prompt):] = req.prompt                # left-pad
         row, keys, hit, shareable = [], [], [], 0
         if self.kv == "paged":
-            end_max = min(plen + req.max_new_tokens, self.max_len)
+            end_max = (plen if self.role == "prefill"
+                       else min(plen + req.max_new_tokens, self.max_len))
             total_blocks = -(-end_max // bs)
             n_full = plen // bs
             # cap sharing below the last prompt position so admission
@@ -676,7 +755,10 @@ class ServeEngine:
             self._install_draft(padded, row, nhit)
         else:
             self.state = _install_slot(self.state, cache, si, plen, nxt)
-        self._finish_admission(si, req, plen, nxt)
+        if self.role == "prefill":
+            self._finish_prefill_export(si, req, plen, nxt, padded, keys)
+        else:
+            self._finish_admission(si, req, plen, nxt)
         return True
 
     def _finish_admission(self, si: int, req: Request, plen: int, nxt: int):
@@ -689,6 +771,131 @@ class ServeEngine:
         req.tokens.append(nxt)
         req.first_token_s = time.monotonic() - req.submitted
         self._live[req.rid] = req
+
+    # ------------------------------------------------------------------
+    # disaggregated serving: KV block export (prefill) / import (decode)
+    # ------------------------------------------------------------------
+
+    def kv_fingerprint(self) -> tuple:
+        """Pool-layout identity a handoff must match: block size plus each
+        layer's paged keys with their per-block shapes and dtypes.  Two
+        engines agree iff a block gathered from one scatters into the
+        other unchanged — same arch family, head layout and KV dtype."""
+        assert self.kv == "paged", "fingerprint is a paged-pool property"
+        layers = tuple(
+            tuple(sorted((k, v.shape[:1] + v.shape[2:], str(v.dtype))
+                         for k, v in leaf.items()
+                         if k in self._PAGED_KEYS))
+            for leaf in self.state["cache"])
+        return (self.block_size, layers)
+
+    def _finish_prefill_export(self, si: int, req: Request, plen: int,
+                               nxt: int, padded: np.ndarray, keys: list):
+        """Prefill-role completion: gather the slot's prompt block chain
+        into contiguous host buffers, attach the chain-hash keys and the
+        admission token, and finish the request — the slot and its blocks
+        turn over immediately, which is what lets a prefill pool drain
+        prompts at prefill service rate instead of holding slots for the
+        whole decode."""
+        bs = self.block_size
+        n_pb = -(-plen // bs)
+        n_full = plen // bs
+        if not keys:
+            # prefix sharing may be off here, but the DECODE pool still
+            # wants the keys for republish — they only depend on the
+            # padded tokens, not on this engine's cache
+            keys = PrefixCache.block_keys(padded, bs, n_full)
+        row = self._slot_blocks[si]
+        bufs = _gather_blocks(self.state["cache"], row[:n_pb],
+                              self._PAGED_KEYS)
+        req.handoff = KVHandoff(
+            rid=req.rid, prompt=np.asarray(req.prompt, np.int32),
+            plen=plen, first_token=nxt, max_new_tokens=req.max_new_tokens,
+            block_hashes=tuple(keys), fingerprint=self.kv_fingerprint(),
+            blocks=bufs)
+        now = time.monotonic()
+        req.tokens.append(nxt)
+        req.first_token_s = now - req.submitted
+        req.done_s = now - req.submitted
+        self.prefills_exported += 1
+        self._live.pop(req.rid, None)
+        self.done[req.rid] = req
+        self._evict_slot(si)
+
+    def _admit_handoff_into(self, si: int, req: Request) -> bool:
+        """Decode-role admission: scatter an imported block chain into
+        this pool and resume at the first generated token.  The installed
+        slot state (``pos = plen``, ``token = first_token``, prompt KV in
+        rows ``0..plen-1``) is EXACTLY what `_finish_admission` leaves
+        behind on a unified engine, so the greedy stream continues
+        bitwise identically.  Prefix-hit blocks are skipped in the
+        scatter and fresh full blocks are republished under the handoff's
+        own keys — sharing crosses the pool boundary."""
+        h = req.handoff
+        bs = self.block_size
+        plen = h.plen
+        end_max = min(plen + req.max_new_tokens, self.max_len)
+        total_blocks = -(-end_max // bs)
+        n_pb = -(-plen // bs)
+        n_full = plen // bs
+        shareable = min(n_full, (plen - 1) // bs)
+        keys = list(h.block_hashes)
+        hit = self.prefix.match(keys[:shareable]) if self.prefix else []
+        need = total_blocks - len(hit)
+        if self.allocator.available_blocks < need:
+            if self.prefix is not None:
+                self.prefix.evict_unreferenced(
+                    need - self.allocator.available_blocks)
+            if self.allocator.available_blocks < need:
+                for bid in hit:                    # undo the match refs
+                    self.allocator.free(bid)
+                self.blocked_admissions += 1
+                return False
+        row = hit + [self.allocator.alloc() for _ in range(need)]
+        self._slot_blocks[si] = list(row)
+        nhit = len(hit)
+        self.prefix_hit_tokens += nhit * bs
+        self.prompt_tokens_total += plen
+        self.slot_meta[si].rid = req.rid
+        self.state = _import_blocks_paged(
+            self.state, h.blocks, si, plen, h.first_token, row, nhit, bs)
+        self._publish_prefix(keys, row, nhit, shareable)
+        self.handoffs_imported += 1
+        m = self.slot_meta[si]
+        m.active = True
+        self.active = self.active.at[si].set(True)
+        self.budget = self.budget.at[si].set(req.max_new_tokens)
+        self._host_pos[si] = plen
+        if not req.tokens:
+            # the stream already starts with prefill's admission token;
+            # a replayed import (requeue-from-handoff) re-appends it on
+            # the fresh Request the dispatcher rebuilt
+            req.tokens.append(h.first_token)
+        req.first_token_s = time.monotonic() - req.submitted
+        self._live[req.rid] = req
+        return True
+
+    def _dummy_handoff(self, plen: int) -> KVHandoff:
+        """A zero-KV handoff shaped exactly like a real one for bucket
+        ``plen`` — `warm_install` feeds these through the import scatter
+        so a decode server absorbs its compile storm before taking
+        leases."""
+        bs = self.block_size
+        n_pb = -(-plen // bs)
+        n_full = plen // bs
+        prompt = (np.arange(max(plen - 1, 1)) % self.cfg.vocab_size).astype(
+            np.int32)
+        padded = np.zeros((plen,), np.int32)
+        padded[-len(prompt):] = prompt
+        blocks = [
+            {k: np.zeros(v.shape[:1] + (n_pb,) + v.shape[2:], v.dtype)
+             for k, v in leaf.items() if k in self._PAGED_KEYS}
+            for leaf in self.state["cache"]]
+        return KVHandoff(
+            rid=-2, prompt=prompt, plen=plen, first_token=0,
+            max_new_tokens=1,
+            block_hashes=tuple(PrefixCache.block_keys(padded, bs, n_full)),
+            fingerprint=self.kv_fingerprint(), blocks=blocks)
 
     def _publish_prefix(self, keys, row, nhit: int, shareable: int):
         """Register freshly-filled full blocks, capped at the MATCHABLE
@@ -754,7 +961,8 @@ class ServeEngine:
         if job.off < job.plen:
             return
         # last chunk landed: install the block-table row on device and
-        # flip the slot to decoding
+        # flip the slot to decoding (unified) or export the handoff and
+        # turn the slot over (prefill role)
         nxt = int(jnp.argmax(logits[0]))
         if self.kv == "paged":
             self.state["block_tables"] = (
@@ -770,7 +978,11 @@ class ServeEngine:
             job.keys, job.row, 0,
             min(job.plen // self.block_size,
                 (job.plen - 1) // self.block_size))
-        self._finish_admission(job.si, job.req, job.plen, nxt)
+        if self.role == "prefill":
+            self._finish_prefill_export(job.si, job.req, job.plen, nxt,
+                                        job.padded, job.keys)
+        else:
+            self._finish_admission(job.si, job.req, job.plen, nxt)
         self._jobs.popleft()
 
     # ------------------------------------------------------------------
@@ -970,6 +1182,8 @@ class ServeEngine:
         serve image's factory share these jit wrappers, so a registry
         prefetch pays this once for every engine the image ever builds."""
         assert not self._live and not self._jobs, "warm on an idle engine"
+        if self.role == "decode":
+            return                     # no prefill executables to stage
         for pb in admit_buckets(self.max_len):
             logits, _ = self._prefill(
                 self.params, {"tokens": jnp.zeros((1, pb), jnp.int32)})
@@ -1009,11 +1223,18 @@ class ServeEngine:
             try:
                 # rid -1 is the free-slot sentinel and rejected by submit;
                 # dummies start at -2
-                self.submit(Request(
-                    rid=-2 - i,
-                    prompt=(np.arange(pb) % self.cfg.vocab_size).astype(
-                        np.int32),
-                    max_new_tokens=1))
+                if self.role == "decode":
+                    # a decode-role engine admits via the import scatter,
+                    # so its storm is warmed with synthetic handoffs
+                    h = self._dummy_handoff(pb)
+                    self.submit(Request(rid=-2 - i, prompt=h.prompt,
+                                        max_new_tokens=1, handoff=h))
+                else:
+                    self.submit(Request(
+                        rid=-2 - i,
+                        prompt=(np.arange(pb) % self.cfg.vocab_size).astype(
+                            np.int32),
+                        max_new_tokens=1))
             except ValueError:
                 continue                   # bucket exceeds this pool's reach
         self.run()
@@ -1065,6 +1286,9 @@ class ServeEngine:
             allocated = self.slots * self.max_len
         return {
             "kv": self.kv,
+            "role": self.role,
+            "prefills_exported": self.prefills_exported,
+            "handoffs_imported": self.handoffs_imported,
             "kv_memory_utilization": live / allocated if allocated else 0.0,
             "kv_live_tokens": live,
             "kv_peak_live_tokens": self.kv_peak_live_tokens,
@@ -1103,9 +1327,13 @@ class ServeEngine:
     def run(self, *, max_steps: int = 10_000) -> dict:
         t0 = time.monotonic()
         decoded = 0
+        ticks = 0
+        # prefill-role engines never take a decode step, so the safety
+        # valve also counts raw ticks (admission/export work per tick)
         while ((self.queue or self._live or self._jobs)
-               and self.steps < max_steps):
+               and self.steps < max_steps and ticks < max_steps):
             decoded += self.step()
+            ticks += 1
         return self._stats(decoded, time.monotonic() - t0)
 
     def run_trace(self, trace, *, max_ticks: int = 100_000,
@@ -1160,6 +1388,9 @@ class ServeEngine:
         pct = lambda v, q: float(np.percentile(v, q)) if v else None
         return {
             "completed": len(self.done),
+            "role": self.role,
+            "prefills_exported": self.prefills_exported,
+            "handoffs_imported": self.handoffs_imported,
             "decode_steps": self.steps,
             "tokens_decoded": decoded,
             "slot_utilization": util,
@@ -1216,6 +1447,8 @@ class ServeEngine:
         self.d2h_transfers = 0
         self.prefill_chunks = 0
         self.blocked_admissions = 0
+        self.prefills_exported = 0
+        self.handoffs_imported = 0
         self.prompt_tokens_total = 0
         self.prefix_hit_tokens = 0
         self._kv_util_sum = 0.0
@@ -1320,6 +1553,49 @@ def _scatter_blocks(pool, src, row: list, nhit: int, block_size: int):
         return pool
     ids = jnp.asarray(np.asarray(row[nhit:n_pb], np.int32))
     return pool.at[:, ids].set(rows[:, nhit:].astype(pool.dtype))
+
+
+def _gather_blocks(cache, row: list, paged_keys) -> list:
+    """Gather a slot's block chain out of every layer's paged pools into
+    contiguous host buffers — the export half of the KV handoff.  The
+    gather (``pool[:, ids]``) runs device-side; ONE ``device_get`` over
+    the whole pytree then pulls every layer in a single host transfer."""
+    ids = jnp.asarray(np.asarray(row, np.int32))
+    bufs = [{k: leaf[k][:, ids] for k in leaf if k in paged_keys}
+            for leaf in cache]
+    host = jax.device_get(bufs)
+    return [{k: np.asarray(v) for k, v in leaf.items()} for leaf in host]
+
+
+def _import_blocks_paged(state, bufs: list, slot: int, plen: int,
+                         next_token: int, row: list, nhit: int,
+                         block_size: int):
+    """Scatter handoff buffers (per layer, ``(groups, n_pb, bs, ...)``)
+    into pool blocks ``row[nhit:n_pb]`` (prefix-hit blocks already hold
+    bit-identical content) and install the slot's table row, token and
+    position — the import half of the KV handoff, mirroring
+    `_install_slot_paged` with host buffers in place of a prefill."""
+    n_pb = -(-plen // block_size)
+    new_cache = []
+    ids = (None if nhit >= n_pb
+           else jnp.asarray(np.asarray(row[nhit:n_pb], np.int32)))
+    for st_leaf, hb in zip(state["cache"], bufs):
+        out = dict(st_leaf)
+        if ids is not None:
+            for key, buf in hb.items():
+                out[key] = st_leaf[key].at[:, ids].set(
+                    jnp.asarray(buf[:, nhit:]).astype(st_leaf[key].dtype))
+        new_cache.append(out)
+    mb = state["block_tables"].shape[1]
+    row_arr = np.zeros((mb,), np.int32)
+    row_arr[:len(row)] = row
+    return {
+        "cache": new_cache,
+        "token": state["token"].at[slot, 0].set(next_token),
+        "pos": state["pos"].at[slot].set(plen),
+        "block_tables": state["block_tables"].at[slot].set(
+            jnp.asarray(row_arr)),
+    }
 
 
 def _fit_rows(src, dst_shape):

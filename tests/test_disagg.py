@@ -1,0 +1,399 @@
+"""Disaggregated prefill/decode serving: KV block handoff invariants,
+role-specialized engines, the two-stage router, per-label pool pressure
+and role-split autoscaling.
+
+Fast lane: engine pairs driven directly (prefill role -> KVHandoff ->
+decode role) are checked bitwise against a unified engine per arch family
+(GQA and MLA), plus refcount/leak accounting, prefix republish across the
+pool boundary, fingerprint rejection and router lease semantics with
+manual fake servers.  The full two-fleet kill/replay drills carry
+@pytest.mark.slow.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from types import SimpleNamespace
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.core.images import ExecutableRegistry, PayloadImage
+from repro.models.api import build_model
+from repro.serving.dispatch import DisaggRouter, FleetDispatcher
+from repro.serving.engine import (
+    Request, ServeEngine, handoff_ineligible_reason,
+)
+
+ARCHS = ["smollm-360m", "minicpm3-4b"]        # GQA and MLA families
+
+
+def _cfg_params(arch):
+    cfg = get_smoke_config(arch)
+    return cfg, build_model(cfg).init(jax.random.key(0))
+
+
+def _reqs(cfg, n, seed=0, plen_lo=4, plen_hi=28, mnt=(5, 9)):
+    # plen < 29 keeps the admission bucket <= 32, so bucket + budget fits
+    # max_len=64 and every stream runs its FULL decode budget
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        plen = int(rng.integers(plen_lo, plen_hi))
+        out.append((i, rng.integers(0, cfg.vocab_size, size=plen,
+                                    dtype=np.int64).astype(np.int32),
+                    int(rng.choice(mnt))))
+    return out
+
+def _submit_all(eng, reqs, **kw):
+    for rid, prompt, mnt in reqs:
+        eng.submit(Request(rid=rid, prompt=prompt, max_new_tokens=mnt, **kw))
+
+
+def _disagg_streams(pf, dc, reqs) -> dict[int, list]:
+    """Drive requests through a prefill-role engine, carry every exported
+    handoff into a decode-role engine, and return the resumed streams."""
+    exported0, imported0 = pf.prefills_exported, dc.handoffs_imported
+    _submit_all(pf, reqs)
+    pf.run()
+    assert pf.prefills_exported - exported0 == len(reqs)
+    for rid, prompt, mnt in reqs:
+        h = pf.done[rid].handoff
+        assert h is not None and h.first_token == pf.done[rid].tokens[0]
+        dc.submit(Request(rid=rid, prompt=prompt, max_new_tokens=mnt,
+                          handoff=h))
+    dc.run()
+    assert dc.handoffs_imported - imported0 == len(reqs)
+    return {rid: dc.done[rid].tokens for rid, _, _ in reqs}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_disagg_bitwise_parity_vs_unified(arch):
+    cfg, params = _cfg_params(arch)
+    reqs = _reqs(cfg, 6, seed=1)
+
+    uni = ServeEngine(cfg, params, slots=2, max_len=64)
+    _submit_all(uni, reqs)
+    uni.run()
+    ref = {rid: uni.done[rid].tokens for rid, _, _ in reqs}
+
+    pf = ServeEngine(cfg, params, slots=2, max_len=64, role="prefill")
+    dc = ServeEngine(cfg, params, slots=2, max_len=64, role="decode")
+    got = _disagg_streams(pf, dc, reqs)
+
+    assert got == ref                      # bitwise: same tokens, all rids
+    for rid, _, mnt in reqs:
+        assert len(got[rid]) == mnt + 1    # admission token + decode budget
+    assert pf.block_leaks() == 0 and dc.block_leaks() == 0
+
+
+def test_refcount_balance_and_zero_leaks_after_churn():
+    """Shared prefixes crossing the handoff, several waves of churn: every
+    block must return to both pools (exporter frees at export, importer
+    frees at eviction; the prefix caches hold only reclaimable refs)."""
+    cfg, params = _cfg_params("smollm-360m")
+    pf = ServeEngine(cfg, params, slots=2, max_len=64, role="prefill")
+    dc = ServeEngine(cfg, params, slots=2, max_len=64, role="decode")
+    rng = np.random.default_rng(7)
+    shared = rng.integers(0, cfg.vocab_size, size=40,
+                          dtype=np.int64).astype(np.int32)
+    rid = 0
+    for wave in range(3):
+        reqs = []
+        for i in range(4):
+            if i % 2 == 0:                 # shared 40-token prefix + tail
+                tail = rng.integers(0, cfg.vocab_size, size=4,
+                                    dtype=np.int64).astype(np.int32)
+                prompt = np.concatenate([shared, tail])
+            else:
+                prompt = rng.integers(0, cfg.vocab_size, size=9,
+                                      dtype=np.int64).astype(np.int32)
+            reqs.append((rid, prompt, 5))
+            rid += 1
+        _disagg_streams(pf, dc, reqs)
+    assert pf.block_leaks() == 0
+    assert dc.block_leaks() == 0
+    # after the leak audit (prefix caches flushed) every block is free again
+    assert pf.allocator.available_blocks == pf.allocator.capacity_blocks
+    assert dc.allocator.available_blocks == dc.allocator.capacity_blocks
+
+
+def test_imported_blocks_republish_into_decode_prefix_cache():
+    """The handoff's chain-hash keys let the decode pool republish the
+    imported full blocks: a second stream with the same prompt prefix
+    must HIT in the decode pool's own PrefixCache — sharing crosses the
+    pool boundary — while staying bitwise identical."""
+    cfg, params = _cfg_params("smollm-360m")
+    rng = np.random.default_rng(11)
+    shared = rng.integers(0, cfg.vocab_size, size=40,
+                          dtype=np.int64).astype(np.int32)
+    reqs = [(i, shared.copy(), 5) for i in range(3)]
+
+    uni = ServeEngine(cfg, params, slots=2, max_len=64)
+    _submit_all(uni, reqs)
+    uni.run()
+    ref = {rid: uni.done[rid].tokens for rid, _, _ in reqs}
+
+    pf = ServeEngine(cfg, params, slots=2, max_len=64, role="prefill")
+    dc = ServeEngine(cfg, params, slots=2, max_len=64, role="decode")
+    got = _disagg_streams(pf, dc, reqs)
+    assert got == ref
+    assert dc.prefix is not None and dc.prefix.hits > 0
+    assert dc.block_leaks() == 0 and pf.block_leaks() == 0
+
+
+def test_handoff_fingerprint_mismatch_rejected():
+    """A GQA pool's handoff must not scatter into an MLA pool (different
+    paged leaves entirely) — submit rejects on the arch fingerprint."""
+    gqa_cfg, gqa_params = _cfg_params("smollm-360m")
+    mla_cfg, mla_params = _cfg_params("minicpm3-4b")
+    pf = ServeEngine(gqa_cfg, gqa_params, slots=2, max_len=64,
+                     role="prefill")
+    reqs = _reqs(gqa_cfg, 1, seed=2)
+    _submit_all(pf, reqs)
+    pf.run()
+    h = pf.done[0].handoff
+    dc = ServeEngine(mla_cfg, mla_params, slots=2, max_len=64,
+                     role="decode")
+    with pytest.raises(ValueError, match="fingerprint"):
+        dc.submit(Request(rid=0, prompt=reqs[0][1], max_new_tokens=4,
+                          handoff=h))
+    assert pf.block_leaks() == 0
+
+
+def test_role_validation_and_spec_forced_off():
+    cfg, params = _cfg_params("smollm-360m")
+    pf = ServeEngine(cfg, params, slots=2, max_len=64, role="prefill")
+    dc = ServeEngine(cfg, params, slots=2, max_len=64, role="decode")
+    # a decode-role engine only accepts handoff-carrying requests
+    with pytest.raises(ValueError, match="handoff"):
+        dc.submit(Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                          max_new_tokens=2))
+    # a prefill-role engine never imports
+    _submit_all(pf, _reqs(cfg, 1, seed=3))
+    pf.run()
+    h = pf.done[0].handoff
+    with pytest.raises(ValueError):
+        pf.submit(Request(rid=1, prompt=np.arange(4, dtype=np.int32),
+                          max_new_tokens=2, handoff=h))
+    # draft KV does not ride the handoff: spec is forced off per role
+    sp = ServeEngine(cfg, params, slots=2, max_len=64, role="prefill",
+                     spec="draft")
+    assert sp.spec == "off" and "role" in sp.spec_fallback_reason
+    # attention-free archs cannot hand off KV block chains at all
+    ssm_cfg, ssm_params = _cfg_params("mamba2-370m")
+    assert handoff_ineligible_reason(
+        ssm_cfg, "paged") is not None
+    with pytest.raises(ValueError, match="handoff"):
+        ServeEngine(ssm_cfg, ssm_params, slots=2, max_len=64,
+                    role="prefill")
+
+
+def test_payload_image_role_in_key_and_factory():
+    img_u = PayloadImage("smollm-360m", "smoke", "serve")
+    img_p = dataclasses.replace(img_u, role="prefill")
+    img_d = dataclasses.replace(img_u, role="decode")
+    assert len({img_u.key(), img_p.key(), img_d.key()}) == 3
+    reg = ExecutableRegistry()
+    exe = reg.pull(img_p)
+    eng = exe.fn(exe.make_inputs(jax.random.key(0)))
+    # a prefill-only image never wires (or compiles) the decode step
+    assert eng.role == "prefill"
+    assert eng._step_fn is None and eng._prefill is not None
+    exe_d = reg.pull(img_d)
+    eng_d = exe_d.fn(exe_d.make_inputs(jax.random.key(0)))
+    assert eng_d.role == "decode"
+    assert eng_d._prefill is None and eng_d._step_fn is not None
+
+
+# ---------------------------------------------------------------------------
+# DisaggRouter: two-stage leases with manual fake servers
+# ---------------------------------------------------------------------------
+
+def test_router_forwards_handoff_with_original_submit_time():
+    r = DisaggRouter(name="t-fwd", lease_ttl=1.0)
+    try:
+        r.submit({"rid": 0, "prompt": [1, 2, 3], "max_new_tokens": 4})
+        r.seal()
+        (e,) = r.prefill.fetch("pf-0", max_n=1, timeout=2.0)
+        h = object()                       # sentinel handoff payload
+        assert r.prefill.complete("pf-0", 0, [7], first_token_s=0.01,
+                                  handoff=h)
+        (d,) = r.decode.fetch("dc-0", max_n=1, timeout=2.0)
+        assert d["rid"] == 0
+        assert d["handoff"] is h           # the payload rides the arena
+        # end-to-end TTFT zero: the ORIGINAL submit time, not forward time
+        assert d["submitted_s"] == e["submitted_s"]
+        assert d["prefill_server"] == "pf-0"
+        assert r.decode.complete("dc-0", 0, [7, 8, 9])
+        assert r.wait_all(timeout=10.0)
+        assert r.results() == {0: [7, 8, 9]}
+        st = r.stats()
+        assert st["prefill"]["completed"] == 1
+        assert st["decode"]["completed"] == 1
+    finally:
+        r.close()
+
+
+def test_router_decode_requeue_replays_from_handoff():
+    """A dead decode pilot's lease expires and the SAME handoff re-leases
+    to a survivor — the prompt is never re-prefilled."""
+    r = DisaggRouter(name="t-requeue", lease_ttl=0.25)
+    try:
+        r.submit({"rid": 0, "prompt": [1, 2, 3], "max_new_tokens": 4})
+        r.seal()
+        (e,) = r.prefill.fetch("pf-0", max_n=1, timeout=2.0)
+        h = object()
+        r.prefill.complete("pf-0", 0, [5], handoff=h)
+        (d1,) = r.decode.fetch("dc-dead", max_n=1, timeout=2.0)
+        assert d1["handoff"] is h
+        # dc-dead never renews: the reaper requeues after the TTL
+        got = []
+        deadline = time.monotonic() + 10.0
+        while not got and time.monotonic() < deadline:
+            got = r.decode.fetch("dc-live", max_n=1, timeout=0.2)
+        assert got, "expired decode lease never requeued"
+        assert got[0]["rid"] == 0 and got[0]["handoff"] is h
+        r.decode.complete("dc-live", 0, [5, 6])
+        assert r.wait_all(timeout=10.0)
+        assert r.results() == {0: [5, 6]}
+    finally:
+        r.close()
+
+
+def test_pool_pressure_reports_per_label():
+    p = FleetDispatcher(name="t-labels", lease_ttl=5.0)
+    try:
+        p.announce("s-pf", labels={"pool": "prefill"})
+        p.announce("s-dc", labels={"pool": "decode"})
+        p.submit({"rid": 0, "prompt": [1], "max_new_tokens": 1})
+        p.submit({"rid": 1, "prompt": [2], "max_new_tokens": 1})
+        (e0,) = p.fetch("s-pf", max_n=1, timeout=2.0)
+        (e1,) = p.fetch("s-dc", max_n=1, timeout=2.0)
+        p.complete("s-pf", e0["rid"], [9], first_token_s=0.01)
+        p.complete("s-dc", e1["rid"], [9], first_token_s=1.0)
+        p.report_telemetry("s-pf", {"kv_memory_utilization": 0.9,
+                                    "blocked_admissions": 3, "slots": 2,
+                                    "prefills_exported": 5})
+        p.report_telemetry("s-dc", {"kv_memory_utilization": 0.2,
+                                    "blocked_admissions": 0, "slots": 4,
+                                    "handoffs_imported": 5})
+        pp = p.pool_pressure()
+        bl = pp["by_label"]
+        assert set(bl) == {"prefill", "decode"}
+        # TTFT split per label, not blended across roles
+        assert bl["prefill"]["ttft_p99_s"] == pytest.approx(0.01)
+        assert bl["decode"]["ttft_p99_s"] == pytest.approx(1.0)
+        assert bl["prefill"]["kv_memory_utilization"] == 0.9
+        assert bl["decode"]["kv_memory_utilization"] == 0.2
+        assert bl["prefill"]["blocked_by_server"] == {"s-pf": 3}
+        assert bl["decode"]["blocked_by_server"] == {"s-dc": 0}
+        assert bl["prefill"]["slots_per_server"] == 2.0
+        assert bl["decode"]["slots_per_server"] == 4.0
+        assert bl["prefill"]["prefills_exported"] == 5
+        assert bl["decode"]["handoffs_imported"] == 5
+        # the blended top-level view still exists (max over healthy)
+        assert pp["kv_memory_utilization"] == 0.9
+    finally:
+        p.close()
+
+
+# ---------------------------------------------------------------------------
+# role-split autoscaling: each scaler reads only its label's slice
+# ---------------------------------------------------------------------------
+
+class _StubFleet:
+    def __init__(self, n):
+        self.n = n
+        self.ups: list[int] = []
+        self.sim = SimpleNamespace(repo=SimpleNamespace(
+            stats=lambda: {"queued": 0, "leased": 0, "pilots": 0},
+            scheduler_metrics=lambda: {"match_p50_us": 0,
+                                       "match_p99_us": 0}))
+
+    def size(self):
+        return self.n
+
+    def draining(self):
+        return 0
+
+    def scale_up(self, n):
+        self.n += n
+        self.ups.append(n)
+        return [object()] * n
+
+    def scale_down(self, n):
+        self.n -= n
+        return []
+
+
+def test_autoscaler_pool_label_sizes_roles_independently():
+    """Same pool snapshot, two scalers: only the role whose label slice
+    shows KV pressure scales up — the blended view would grow both."""
+    from repro.core.autoscaler import AutoscalePolicy, FleetAutoscaler
+
+    pp = {
+        "queued": 4, "leased": 0, "sick_servers": 0,
+        "kv_memory_utilization": 0.99,        # blended view: looks hot
+        "blocked_admissions": 3,
+        "blocked_by_server": {"s-pf": 3},
+        "slots_per_server": 2.0, "tokens_per_step": 0.0,
+        "acceptance_rate": 0.0,
+        "by_label": {
+            "prefill": {"kv_memory_utilization": 0.99,
+                        "blocked_admissions": 3,
+                        "blocked_by_server": {"s-pf": 3},
+                        "sick_servers": 0, "slots_per_server": 2.0,
+                        "tokens_per_step": 0.0},
+            "decode": {"kv_memory_utilization": 0.10,
+                       "blocked_admissions": 0,
+                       "blocked_by_server": {},
+                       "sick_servers": 0, "slots_per_server": 2.0,
+                       "tokens_per_step": 0.0},
+        },
+    }
+    pool = SimpleNamespace(name="stub", pool_pressure=lambda: dict(pp))
+    policy = AutoscalePolicy(min_pilots=0, max_pilots=8, slots_per_pilot=2,
+                             kv_high_water=0.92)
+    clk = [100.0]
+    scalers = {}
+    for label in ("prefill", "decode"):
+        fleet = _StubFleet(2)              # util = 4 / (2*2): in band
+        scalers[label] = (fleet, FleetAutoscaler(
+            fleet, None, pool=pool, pool_label=label, policy=policy,
+            clock=lambda: clk[0]))
+    d_pf = scalers["prefill"][1].tick()
+    d_dc = scalers["decode"][1].tick()
+    assert d_pf is not None and d_pf.direction == "up"   # its slice is hot
+    assert "kv pressure" in d_pf.reason
+    assert d_dc is None                                  # its slice is cool
+    assert scalers["prefill"][0].n == 3
+    assert scalers["decode"][0].n == 2
+
+
+# ---------------------------------------------------------------------------
+# the full thing: two fleets, kill one pilot per stage, bitwise replay
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ARCHS)
+def test_fleet_disagg_kill_replay_bitwise(arch):
+    from repro.launch.serve import make_trace, serve_disagg
+
+    cfg, params = _cfg_params(arch)
+    trace = make_trace(cfg.vocab_size, 10, max_len=64, seed=3)
+    out = serve_disagg(arch, 10, prefill_pilots=2, decode_pilots=2,
+                       slots=2, max_len=64, lease_ttl=0.5,
+                       fail_prefill_at=2, fail_decode_at=4, trace=trace)
+    assert out["drained"]
+    assert out["leaked_blocks"] == 0
+    assert len(out["results"]) == 10
+
+    # unified single-engine reference over the SAME trace (image seed 0)
+    uni = ServeEngine(cfg, params, slots=2, max_len=64)
+    uni.run_trace(trace)
+    ref = {r.rid: r.tokens for r in uni.done.values()}
+    assert {rid: list(t) for rid, t in out["results"].items()} == ref

@@ -75,6 +75,60 @@ def test_constrain_conflicting_axes_skipped():
 
 
 # ---------------------------------------------------------------------------
+# serve-mesh accounting: per-shard memory/FLOPs without building the mesh
+# ---------------------------------------------------------------------------
+
+def test_serve_cell_per_shard_accounting():
+    # importing dryrun sets XLA_FLAGS at module top, but jax is already
+    # initialized in the test process so the env write is inert here
+    from repro.launch.dryrun import run_serve_cell
+
+    one = run_serve_cell("smollm-360m", mesh_shape=(1, 1), slots=4,
+                         max_len=64, smoke=True)
+    # a 1-device mesh: per-device == total, everything accounted
+    assert one["params_bytes_per_device"] == one["params_bytes"] > 0
+    assert one["state_bytes_per_device"] == one["state_bytes"] > 0
+    assert 0 < one["kv_pool_bytes"] <= one["state_bytes"]
+
+    two = run_serve_cell("minicpm3-4b", mesh_shape=(1, 2), slots=2,
+                         max_len=64, smoke=True)
+    # MLA paged pools split their latent dim over 2 model shards
+    assert two["kv_pool_bytes_per_device"] * 2 == two["kv_pool_bytes"]
+    # column-parallel params shard, row-parallel replicate: strictly
+    # between the all-replicated and all-sharded extremes
+    assert (two["params_bytes"] // 2
+            < two["params_bytes_per_device"] < two["params_bytes"])
+    assert two["decode_flops_per_device"] * 2 == two["decode_flops"]
+    assert two["mesh_devices"] == 2
+
+
+def test_serve_shard_factors_mirror_sharding_rules():
+    """The pure divisor helpers agree with the real serve shardings: a
+    leaf's factor is the model-axis size exactly when the named rule's
+    dim divides, else 1 (replication)."""
+    from repro.configs.base import get_smoke_config
+    from repro.models.api import init_decode_state
+    from repro.runtime import sharding as shd
+
+    cfg = get_smoke_config("minicpm3-4b")
+    state = jax.eval_shape(lambda: init_decode_state(cfg, 2, 64, kv="paged"))
+    factors = {}
+
+    def one(path, leaf):
+        name = shd._leaf_name(path)
+        factors.setdefault(name, set()).add(
+            shd.serve_state_shard_factor(path, leaf.shape, 2))
+    jax.tree_util.tree_map_with_path(one, state)
+    # MLA latent pools split; control leaves replicate
+    assert factors["ckvp"] == {2} and factors["kropep"] == {2}
+    assert factors["pos"] == {1} and factors["block_tables"] == {1}
+    # msz=1 never shards anything
+    def check_one(path, leaf):
+        assert shd.serve_state_shard_factor(path, leaf.shape, 1) == 1
+    jax.tree_util.tree_map_with_path(check_one, state)
+
+
+# ---------------------------------------------------------------------------
 # the real thing: one cheap cell lowered+compiled on the 16x16 mesh in a
 # subprocess (XLA_FLAGS isolation)
 # ---------------------------------------------------------------------------
