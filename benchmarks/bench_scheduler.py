@@ -25,8 +25,10 @@ With the event-driven control plane the interesting numbers are:
 from __future__ import annotations
 
 import resource
+import threading
 import time
 
+from repro.analysis.locks import LockAuditor, make_lock
 from repro.core.cluster import ClusterSim
 from repro.core.images import PayloadImage
 from repro.core.pilot import PilotConfig
@@ -73,10 +75,60 @@ def _run_one(prefix: str, n_pilots: int, n_tasks: int
     ]
 
 
+def _lockop_ns(make) -> float:
+    """Mean acquire+release cost (ns) for a lock from ``make()``."""
+    lk = make()
+    n = 200_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with lk:
+            pass
+    return (time.perf_counter() - t0) / n * 1e9
+
+
 def run(n_pilots: int = 4, n_tasks: int = 40) -> list[tuple[str, float, str]]:
     out = _run_one("sched", n_pilots, n_tasks)
     # scale point: same per-pilot load (10 tasks/pilot) at 8x the fleet —
     # control-plane CPU per task must grow sub-linearly in fleet size
     per_pilot = max(1, n_tasks // max(n_pilots, 1))
     out += _run_one("sched32", 32, 32 * per_pilot)
+
+    # ---- concurrency-audit overhead: instrumented-vs-off ------------------
+    # The same fleet run under a full LockAuditor (every acquisition graphed)
+    # plus a microbench gating the AUDIT-OFF tax: a TrackedLock with no
+    # auditor installed costs one extra attr read over a raw threading.Lock;
+    # scaled by the run's observed lock ops per task it must stay <= 2% of
+    # sched_overhead_ms_per_task.
+    aud = LockAuditor()
+    aud.install()
+    try:
+        out += _run_one("sched_audit", n_pilots, n_tasks)
+    finally:
+        aud.uninstall()
+    rep = aud.report()
+    assert not rep["cycles"], f"lock-order cycles under audit: {rep['cycles']}"
+    assert not rep["violations"], (
+        f"auditor violations under audit: {rep['violations']}")
+    ops_per_task = aud.acquired_total / max(n_tasks, 1)
+    raw_ns = _lockop_ns(threading.Lock)
+    off_ns = _lockop_ns(lambda: make_lock("bench.lockop"))
+    base_ms = next(v for k, v, _ in out if k == "sched_overhead_ms_per_task")
+    overhead_pct = (max(0.0, off_ns - raw_ns) * ops_per_task
+                    / (base_ms * 1e6) * 100.0)
+    assert overhead_pct <= 2.0, (
+        f"audit-off lock overhead {overhead_pct:.3f}% of scheduler "
+        f"overhead exceeds the 2% budget "
+        f"(raw={raw_ns:.0f}ns tracked-off={off_ns:.0f}ns "
+        f"ops/task={ops_per_task:.0f})")
+    out += [
+        ("sched_lock_ops_per_task", ops_per_task,
+         "tracked acquisitions per payload (audited run)"),
+        ("sched_lockop_raw_ns", raw_ns, "threading.Lock acquire+release"),
+        ("sched_lockop_off_ns", off_ns,
+         "TrackedLock acquire+release, auditor off"),
+        ("sched_audit_off_overhead_pct", overhead_pct,
+         "audit-off tax vs sched_overhead_ms_per_task (gate <= 2%)"),
+        ("sched_audit_order_edges", float(rep["n_edges"]),
+         "lock-order edges observed; cycles/violations gated at 0"),
+    ]
     return out

@@ -1,0 +1,21 @@
+"""Concurrency-correctness analysis for the pilot control plane.
+
+Three cooperating parts:
+
+- :mod:`repro.analysis.locks` — instrumented Lock/RLock/Condition factory
+  plus a :class:`LockAuditor` that records per-thread held-sets and
+  acquisition-order edges, detects lock-order cycles with witness stacks,
+  and flags blocking calls / user callbacks executed under a lock.
+- :mod:`repro.analysis.lint` — repo-specific AST lint (bare threading
+  locks, wall-clock in jitted step builders, the one-transfer rule,
+  blocking under a held lock) with inline suppressions that require a
+  written justification.
+- :mod:`repro.analysis.fuzz` — deterministic schedule fuzzer: seeded
+  preemption injection at lock acquire/release boundaries driving the
+  six-server stress race under many seeds.
+
+This package must stay import-light: ``locks`` is imported by every
+locked module in ``core/`` and ``serving/``, so it depends only on the
+stdlib.  ``fuzz`` imports the serving stack and is therefore *not*
+re-exported here (import it explicitly).
+"""

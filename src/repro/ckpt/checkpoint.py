@@ -37,6 +37,8 @@ import time
 import jax
 import numpy as np
 
+from repro.analysis.locks import make_lock
+
 
 def _flatten(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
@@ -196,7 +198,7 @@ class AsyncCheckpointer:
     def __init__(self, ckpt_dir: str, keep: int = 3):
         self.ckpt_dir = ckpt_dir
         self.keep = keep
-        self._lock = threading.Lock()
+        self._lock = make_lock("ckpt.async-writer")
         self._pending: tuple[int, object] | None = None
         self._thread: threading.Thread | None = None
         self._running = False       # exit/restart decisions share the lock

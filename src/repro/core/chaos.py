@@ -58,6 +58,8 @@ import threading
 import time
 import zlib
 
+from repro.analysis.locks import make_lock
+
 
 @dataclasses.dataclass
 class FaultSpec:
@@ -129,7 +131,7 @@ class ChaosSite:
 
 # -- process-global site registry (the simulation's "is chaos on?") -----
 
-_LOCK = threading.Lock()
+_LOCK = make_lock("chaos.install")
 _ACTIVE: "ChaosController | None" = None
 
 
@@ -165,7 +167,7 @@ class ChaosController:
         self.poison_armed = bool(self.plan.poison)
         self._rng = random.Random(self.seed)
         self._sites: dict[str, ChaosSite] = {}
-        self._sites_lock = threading.Lock()
+        self._sites_lock = make_lock("chaos.sites")
         self._thread: threading.Thread | None = None
         self._stop = threading.Event()
         self.log: list[dict] = []

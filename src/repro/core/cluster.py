@@ -23,6 +23,7 @@ from typing import Optional
 
 import jax
 
+from repro.analysis.locks import make_lock
 from repro.core.images import ExecutableRegistry
 from repro.core.pilot import Pilot, PilotConfig, TERMINAL_STATES
 from repro.core.taskrepo import TaskRepo
@@ -62,7 +63,7 @@ class ClusterSim:
         self.repo = repo or TaskRepo()
         self.registry = registry or ExecutableRegistry()
         self._ids = itertools.count(1)
-        self._lock = threading.Lock()
+        self._lock = make_lock("cluster.sim")
         self.slices: dict[int, PilotSlice] = {}
         self.pilots: dict[int, Pilot] = {}
         # reaped (terminal, thread-joined) pilots: bounded, state_log kept
@@ -185,7 +186,7 @@ class Fleet:
         self.config = config
         self.labels = labels
         self.mesh = mesh
-        self._lock = threading.Lock()     # members churns from autoscaler
+        self._lock = make_lock("cluster.fleet")  # members churns from autoscaler
         self.members: list[Pilot] = []    # and driver threads concurrently
         self.history: deque[dict] = deque(maxlen=512)   # reaped members
         self._retired_seconds = 0.0

@@ -21,6 +21,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.locks import make_lock
 from repro.configs.base import ArchConfig, SHAPES, ShapeSpec, get_config, get_smoke_config
 from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
 from repro.models.api import build_model
@@ -106,7 +107,7 @@ class ExecutableRegistry:
     per key even under concurrent binds (single-flight)."""
 
     def __init__(self):
-        self._lock = threading.Lock()
+        self._lock = make_lock("images.registry")
         self._cache: dict[tuple, Executable] = {}
         self._inflight: dict[tuple, threading.Event] = {}
         self._prefetching: dict[tuple, threading.Event] = {}

@@ -25,6 +25,7 @@ import threading
 import time
 from typing import Any
 
+from repro.analysis.locks import audit_callback, make_condition, make_lock
 from repro.core.arena import SharedArena
 from repro.core.images import Executable, ExecutableRegistry, PLACEHOLDER, PayloadImage
 from repro.core.proctable import PAYLOAD_UID, ProcessTable
@@ -60,10 +61,10 @@ class PayloadExecutor:
         self.state = UNBOUND
         self.generation = 0               # bumped by every restart/patch
         self.exit_event: threading.Event | None = None
-        self._lock = threading.Lock()
+        self._lock = make_lock("latebind.executor")
         # the persistent container-runtime thread: entrypoint generations
         # boot from a queue instead of spawning a thread per payload
-        self._boot_cond = threading.Condition()
+        self._boot_cond = make_condition(name="latebind.boot")
         self._boot: tuple | None = None
         self._runtime: threading.Thread | None = None
         self._closed = False
@@ -145,6 +146,7 @@ class PayloadExecutor:
                 done.set()
                 if on_exit is not None:
                     try:
+                        audit_callback("latebind:on_exit")
                         on_exit()
                     except Exception:     # noqa: BLE001
                         pass

@@ -20,6 +20,8 @@ import dataclasses
 import threading
 import time
 
+from repro.analysis.locks import audit_callback, make_lock
+
 PILOT_UID = 0
 PAYLOAD_UID = 1000        # the paper's well-defined, pre-determined UID
 
@@ -52,7 +54,7 @@ class ProcessTable:
     they must be short and exception-safe."""
 
     def __init__(self):
-        self._lock = threading.Lock()
+        self._lock = make_lock("proctable.table")
         self._next_pid = 1
         self._entries: dict[int, ProcEntry] = {}
         self._listeners: list = []        # callables (kind, entry)
@@ -71,6 +73,7 @@ class ProcessTable:
     def _notify(self, kind: str, entry: ProcEntry):
         with self._lock:
             listeners = list(self._listeners)
+        audit_callback(f"proctable:{kind}")
         for fn in listeners:
             try:
                 fn(kind, entry)

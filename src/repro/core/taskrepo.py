@@ -41,6 +41,12 @@ import time
 from collections import deque
 from typing import Any, Callable
 
+from repro.analysis.locks import (
+    RANK_REPO,
+    audit_callback,
+    make_condition,
+    make_lock,
+)
 from repro.core.timerwheel import TimerWheel, shared_wheel
 
 Predicate = Callable[[dict], bool]
@@ -145,8 +151,8 @@ class TaskRepo:
                  pilot_ttl: float | None = None,
                  backoff: BackoffPolicy | None = None,
                  on_expired: Callable[[PayloadTask, str], str] | None = None):
-        self._lock = threading.Lock()
-        self._cond = threading.Condition(self._lock)
+        self._lock = make_lock("taskrepo.repo", rank=RANK_REPO)
+        self._cond = make_condition(self._lock)
         self._ids = itertools.count(1)
         self._open = _TaskHeap()                      # no constraints
         self._by_labels: dict[frozenset, _TaskHeap] = {}   # equality-indexed
@@ -367,7 +373,7 @@ class TaskRepo:
         """
         deadline = None if timeout is None else time.monotonic() + timeout
         woke = False
-        with self._lock:
+        with self._cond:
             while True:
                 if cancel is not None and cancel():
                     return None
@@ -533,7 +539,8 @@ class TaskRepo:
         # there, and pool->repo is the established lock order everywhere
         # else (fetch/complete/release all call in holding the pool lock)
         dispositions: dict[int, str] = {}
-        if self.on_expired is not None:
+        if self.on_expired is not None and expired:
+            audit_callback("taskrepo:on_expired")
             for task, pid in expired:
                 try:
                     dispositions[task.task_id] = self.on_expired(task, pid)

@@ -29,6 +29,13 @@ import time
 from collections import deque
 from typing import Callable
 
+from repro.analysis.locks import (
+    RANK_WHEEL,
+    audit_callback,
+    make_condition,
+    make_lock,
+)
+
 
 class Timer:
     """Handle for a scheduled callback.  ``cancel()`` is lazy: the wheel
@@ -50,7 +57,7 @@ class Timer:
 
 class TimerWheel:
     def __init__(self, name: str = "timer-wheel"):
-        self._cond = threading.Condition()
+        self._cond = make_condition(name=f"timerwheel[{name}]", rank=RANK_WHEEL)
         self._heap: list[tuple[float, int, Timer]] = []
         self._seq = itertools.count()
         self._thread: threading.Thread | None = None
@@ -111,6 +118,9 @@ class TimerWheel:
                         break
                     self._cond.wait(timeout=wait)
             try:
+                # Callbacks run with NO wheel lock held; the audit guard
+                # proves that invariant (and catches any future regression).
+                audit_callback(f"timerwheel:{timer.name}")
                 timer.fn()
             except Exception as e:        # noqa: BLE001 — timers never kill the
                 # wheel, but they must not die silently either: a crashing
@@ -140,7 +150,7 @@ class TimerWheel:
 
 
 _default_wheel: TimerWheel | None = None
-_default_lock = threading.Lock()
+_default_lock = make_lock("timerwheel.default-registry")
 
 
 def shared_wheel() -> TimerWheel:

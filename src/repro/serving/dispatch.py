@@ -64,11 +64,17 @@ import time
 import uuid
 from collections import deque
 
+from repro.analysis.locks import (
+    RANK_POOL,
+    audit_callback,
+    make_condition,
+    make_lock,
+)
 from repro.core.taskrepo import BackoffPolicy, TaskRepo, TaskResult
 from repro.core.timerwheel import shared_wheel
 
 _POOLS: dict[str, "FleetDispatcher"] = {}
-_POOLS_LOCK = threading.Lock()
+_POOLS_LOCK = make_lock("dispatch.pools-registry")
 
 
 def _canary_ok(ad) -> bool:
@@ -176,8 +182,12 @@ class FleetDispatcher:
                              backoff=self.policy.backoff,
                              on_expired=self._on_lease_expired)
         self.max_attempts = max_attempts
-        self._lock = threading.Lock()
-        self._done_cond = threading.Condition(self._lock)
+        # RANK_POOL < RANK_REPO: fetch/complete/release may call into the
+        # repo while holding the pool lock, never the reverse.  Instance-
+        # named so the disagg prefill->decode chain (two pool locks in a
+        # fixed order) reads as two graph nodes, not a self-edge.
+        self._lock = make_lock(f"dispatch.pool[{self.name}]", rank=RANK_POOL)
+        self._done_cond = make_condition(self._lock)
         self._records: dict[int, RequestRecord] = {}
         self._by_tid: dict[int, int] = {}
         # (server_id, rid) -> _HeldLease (task + progress trail)
@@ -511,6 +521,7 @@ class FleetDispatcher:
             task_id=tid, pilot_id=server_id, exitcode=0,
             telemetry={"rid": rid, "n_tokens": len(tokens)}))
         loser_tids: list[int] = []
+        fire_hook = False
         with self._done_cond:
             self._leased.pop((server_id, rid), None)
             # a request settles EXACTLY once: a late result for a request
@@ -537,18 +548,30 @@ class FleetDispatcher:
                 for lt in {rec.task_id, *rec.hedge_tids} - {tid, -1}:
                     if lt not in loser_tids:
                         loser_tids.append(lt)
-                if self.on_complete is not None:
-                    # fire BEFORE this request counts as settled: a driver
-                    # blocked in wait_all must never observe the pool
-                    # drained while a forward (the DisaggRouter's decode-
-                    # stage submit) is still in flight.  Lock ordering is
-                    # acyclic — the hook only calls INTO the next pool.
-                    self.on_complete(rec, handoff)
-                self._n_settled += 1
-                self._done_cond.notify_all()
+                fire_hook = self.on_complete is not None
+                if not fire_hook:
+                    self._n_settled += 1
+                    self._done_cond.notify_all()
             else:
                 self.duplicates += 1
                 accepted = False
+        if fire_hook:
+            # the forward hook runs OUTSIDE the pool lock: it submits into
+            # ANOTHER pool (its lock + repo lock), and holding this pool's
+            # lock across that call is both a lock-order hazard and a
+            # deadlock if the downstream ever calls back.  The settled
+            # bump is deferred until the forward lands (even on a raising
+            # hook), so a driver blocked in wait_all never observes the
+            # pool drained while a forward is still in flight — rec.tokens
+            # is already set, so racing duplicates/reject/expiry all see
+            # the request as settled and cannot double-bump.
+            audit_callback("dispatch.on_complete")
+            try:
+                self.on_complete(rec, handoff)
+            finally:
+                with self._done_cond:
+                    self._n_settled += 1
+                    self._done_cond.notify_all()
         for lt in loser_tids:
             self.repo.complete(TaskResult(
                 task_id=lt, pilot_id=server_id, exitcode=0,
@@ -1017,7 +1040,7 @@ class DisaggRouter:
             name=f"{base}-decode", lease_ttl=lease_ttl,
             max_attempts=max_attempts, policy=policy)
         self.prefill.on_complete = self._forward
-        self._fwd_lock = threading.Lock()
+        self._fwd_lock = make_lock("dispatch.router-fwd")
         self._forwarded: set[int] = set()
 
     # ---- stage 1 -> stage 2 ------------------------------------------------

@@ -1,9 +1,35 @@
 import pytest
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--concurrency-audit", action="store_true", default=False,
+        help="run the whole session under the instrumented lock auditor "
+             "and fail it on lock-order cycles or under-lock-callback "
+             "violations")
+
+
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: multi-second integration tests (dry-run subprocess)")
+    if config.getoption("--concurrency-audit"):
+        from repro.analysis.locks import LockAuditor
+        config._lock_auditor = LockAuditor().install()
+
+
+def pytest_sessionfinish(session, exitstatus):
+    aud = getattr(session.config, "_lock_auditor", None)
+    if aud is None:
+        return
+    aud.uninstall()
+    rep = aud.report()
+    print()
+    print(aud.format_report(rep))
+    if rep["cycles"] or rep["violations"]:
+        print("concurrency audit FAILED: "
+              f"{len(rep['cycles'])} cycle(s), "
+              f"{len(rep['violations'])} violation(s)")
+        session.exitstatus = 1
 
 
 @pytest.fixture(scope="session")
